@@ -1,0 +1,36 @@
+//! Quickstart: load the AOT artifacts of one attention variant, prefill a
+//! prompt, and greedily decode a few tokens — the smallest end-to-end path
+//! through all three layers (Pallas kernels → JAX model → Rust/PJRT).
+//!
+//!     make artifacts && cargo run --release --example quickstart [variant]
+
+use anyhow::Result;
+use gla_serve::runtime::Runtime;
+use gla_serve::server::{RealEngine, TinyModel};
+use gla_serve::workload::Request;
+
+fn main() -> Result<()> {
+    let variant = std::env::args().nth(1).unwrap_or_else(|| "gla2".to_string());
+    let dir = std::env::var("GLA_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+
+    println!("loading artifacts for `{variant}` from {dir}/ ...");
+    let rt = Runtime::new(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    let model = TinyModel::load(&rt, &variant, 0)?;
+    println!(
+        "model: batch={} prefill_t={} max_len={} vocab={}",
+        model.batch, model.prefill_t, model.max_len, model.vocab
+    );
+
+    let mut eng = RealEngine::new(model)?;
+    // serve one request: 32-token prompt, 16 decoded tokens
+    eng.submit(Request { id: 1, prompt_len: 32, decode_len: 16 });
+    let dt = eng.run_to_completion()?;
+    let (e2e, ttft, itl, tput) = eng.metrics.paper_row();
+    println!(
+        "served 1 request in {dt:.3}s  e2e={e2e:.3}s ttft={ttft:.3}s itl={itl:.1}ms {tput:.1} tok/s"
+    );
+    println!("decode steps executed: {}", eng.steps);
+    println!("quickstart OK");
+    Ok(())
+}

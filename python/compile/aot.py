@@ -1,0 +1,178 @@
+"""AOT lowering: JAX/Pallas → HLO *text* artifacts for the Rust runtime.
+
+Python runs ONCE at build time (`make artifacts`); the Rust coordinator is
+self-contained afterwards. Per variant we emit:
+
+    init_<v>.hlo.txt     (seed)                        -> train params (flat)
+    absorb_<v>.hlo.txt   (train params)                -> decode params (flat)
+    prefill_<v>.hlo.txt  (train params, tokens)        -> logits, cache main/aux
+    decode_<v>.hlo.txt   (decode params, cache, tokens (B,1), lens) -> logits, cache
+    decode2_<v>.hlo.txt  same with lq=2 (speculative decoding artifact)
+    train_<v>.hlo.txt    (params, m, v, step, batch, lr) -> params, m, v, step, loss
+
+plus `<name>.meta.txt` (key=value) describing every input/output tensor so
+`rust/src/runtime/meta.rs` can allocate buffers without ever importing
+Python. HLO **text** is the interchange format: jax >= 0.5 serializes
+HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts are pure functions over flat tensor lists; parameter order is the
+sorted-key pytree flattening order recorded in the meta file.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, train
+
+# Execution-scale serving shapes (must match rust/src/config/mod.rs).
+BATCH = 8
+PREFILL_T = 256
+TRAIN_B = 8
+TRAIN_T = 128
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _path_name(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def flatten_named(tree):
+    """-> (list of (name, leaf), treedef) in deterministic pytree order."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [(_path_name(p), x) for p, x in leaves], jax.tree_util.tree_structure(tree)
+
+
+def _dtype_tag(x) -> str:
+    return {"float32": "f32", "int32": "i32", "bfloat16": "bf16"}[str(x.dtype)]
+
+
+def write_meta(path, name, cfg, in_named, out_named, extra=None):
+    lines = [f"name={name}", f"variant={cfg.attn.kind}", f"model={cfg.name}"]
+    a = cfg.attn
+    lines += [
+        f"vocab={cfg.vocab}", f"d_model={cfg.d_model}", f"n_layers={cfg.n_layers}",
+        f"d_ff={cfg.d_ff}", f"max_len={cfg.max_len}", f"h_q={a.h_q}",
+        f"h_kv={a.h_kv}", f"d_h={a.d_h}", f"d_c={a.d_c}", f"d_r={a.d_r}",
+        f"kv_elems_per_token={a.kv_elems_per_token()}",
+    ]
+    for k, v in (extra or {}).items():
+        lines.append(f"{k}={v}")
+    lines.append(f"n_inputs={len(in_named)}")
+    for i, (nm, x) in enumerate(in_named):
+        lines.append(f"input.{i}={nm}:{_dtype_tag(x)}:{','.join(map(str, x.shape))}")
+    lines.append(f"n_outputs={len(out_named)}")
+    for i, (nm, x) in enumerate(out_named):
+        lines.append(f"output.{i}={nm}:{_dtype_tag(x)}:{','.join(map(str, x.shape))}")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def _spec_of(x):
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+def lower_artifact(out_dir, name, cfg, fn, example_in_tree, extra=None):
+    """fn: tree -> tree. Lowers fn over flat leaves and writes hlo + meta."""
+    in_named, treedef = flatten_named(example_in_tree)
+    flat_example = [x for _, x in in_named]
+
+    def flat_fn(*flat):
+        tree = jax.tree_util.tree_unflatten(treedef, list(flat))
+        out = fn(tree)
+        return tuple(jax.tree_util.tree_leaves(out))
+
+    out_tree = jax.eval_shape(fn, example_in_tree)
+    out_named, _ = flatten_named(out_tree)
+
+    lowered = jax.jit(flat_fn).lower(*[_spec_of(x) for x in flat_example])
+    hlo = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(hlo)
+    write_meta(os.path.join(out_dir, f"{name}.meta.txt"), name, cfg, in_named, out_named, extra)
+    print(f"  {name}: {len(in_named)} in, {len(out_named)} out, {len(hlo)//1024} KiB hlo", flush=True)
+
+
+def build_variant(out_dir, scale, variant):
+    cfg = configs.make_config(scale, variant)
+    print(f"[{cfg.name}]", flush=True)
+    params = model.init_params(cfg, 0)
+    params_dec = model.absorb_params(cfg, params)
+    main, aux = model.init_cache(cfg, BATCH)
+    tokens_p = jnp.zeros((BATCH, PREFILL_T), jnp.int32)
+    lens = jnp.zeros((BATCH,), jnp.int32)
+    seed = jnp.zeros((1,), jnp.int32)
+
+    lower_artifact(
+        out_dir, f"init_{variant}", cfg,
+        lambda s: model.init_params(cfg, s["seed"][0]),
+        {"seed": seed},
+    )
+    lower_artifact(
+        out_dir, f"absorb_{variant}", cfg,
+        lambda p: model.absorb_params(cfg, p),
+        params,
+    )
+    lower_artifact(
+        out_dir, f"prefill_{variant}", cfg,
+        lambda t: dict(zip(("logits", "main", "aux"),
+                           model.prefill(cfg, t["params"], t["tokens"]))),
+        {"params": params, "tokens": tokens_p},
+        extra={"batch": BATCH, "prefill_t": PREFILL_T},
+    )
+    for lq, nm in ((1, f"decode_{variant}"), (2, f"decode2_{variant}")):
+        lower_artifact(
+            out_dir, nm, cfg,
+            lambda t, lq=lq: dict(zip(("logits", "main", "aux"),
+                                      model.decode_step(cfg, t["params"], t["main"],
+                                                        t["aux"], t["tokens"], t["lens"]))),
+            {"params": params_dec, "main": main, "aux": aux,
+             "tokens": jnp.zeros((BATCH, lq), jnp.int32), "lens": lens},
+            extra={"batch": BATCH, "lq": lq},
+        )
+    opt = train.init_opt_state(params)
+    batch_tokens = jnp.zeros((TRAIN_B, TRAIN_T + 1), jnp.int32)
+    lr = jnp.zeros((), jnp.float32)
+    lower_artifact(
+        out_dir, f"train_{variant}", cfg,
+        lambda t: dict(zip(("params", "opt", "loss"),
+                           train.train_step(cfg, t["params"], t["opt"],
+                                            t["batch"], t["lr"]))),
+        {"params": params, "opt": opt, "batch": batch_tokens, "lr": lr},
+        extra={"train_b": TRAIN_B, "train_t": TRAIN_T},
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--scale", default="tiny")
+    ap.add_argument("--variants", default=",".join(configs.VARIANTS))
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for v in args.variants.split(","):
+        build_variant(args.out, args.scale, v)
+    print("artifacts complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""Model and attention-variant configurations.
+
+Mirrors the paper's Table 6 model ladder (small 183M … XL 1.47B) plus two
+execution-scale configs (`tiny`, `mini`) used for the real CPU-PJRT
+artifacts and the synthetic-corpus quality experiment. The Rust side holds
+the same ladder in `rust/src/config/`; `python/compile/aot.py` writes the
+resolved shapes into the artifact `.meta.txt` so the two can never drift.
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionSpec:
+    """Shapes of one attention variant.
+
+    kind: mha | mqa | gqa | gta | mla | gla
+    h_q: query heads; h_kv: distinct KV heads (GQA family / GTA) or latent
+    heads h_c (MLA always 1, GLA >= 2); d_h: head dim; d_c: latent dim per
+    latent head; d_r: decoupled-RoPE dim (latent variants) — GTA's rotated
+    slice is fixed at d_h/2 and carried by a single broadcast head.
+    """
+
+    kind: str
+    h_q: int
+    h_kv: int
+    d_h: int
+    d_c: int = 0
+    d_r: int = 0
+
+    def __post_init__(self):
+        assert self.kind in ("mha", "mqa", "gqa", "gta", "mla", "gla"), self.kind
+        assert self.h_q % self.h_kv == 0, (self.h_q, self.h_kv)
+        if self.kind == "mha":
+            assert self.h_kv == self.h_q
+        if self.kind == "mqa":
+            assert self.h_kv == 1
+        if self.kind == "mla":
+            assert self.h_kv == 1 and self.d_c > 0 and self.d_r > 0
+        if self.kind == "gla":
+            assert self.h_kv >= 1 and self.d_c > 0 and self.d_r > 0
+        if self.kind == "gta":
+            assert self.d_h % 2 == 0
+
+    @property
+    def group_size(self) -> int:
+        """g_q — queries per distinct KV / latent head (Table 1)."""
+        return self.h_q // self.h_kv
+
+    @property
+    def is_latent(self) -> bool:
+        return self.kind in ("mla", "gla")
+
+    def kv_elems_per_token(self) -> int:
+        """Cached elements per token per layer (unsharded), paper §3.2/§B.4.
+
+        mha/mqa/gqa: 2 * h_kv * d_h (separate K and V, m_kv = 2)
+        gta:         h_kv * d_h + d_h/2 (tied state + broadcast RoPE half)
+        mla/gla:     h_kv * d_c + d_r  (latent heads + decoupled RoPE)
+        """
+        if self.kind in ("mha", "mqa", "gqa"):
+            return 2 * self.h_kv * self.d_h
+        if self.kind == "gta":
+            return self.h_kv * self.d_h + self.d_h // 2
+        return self.h_kv * self.d_c + self.d_r
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    d_ff: int
+    attn: AttentionSpec
+    max_len: int = 1024
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+
+def attention_spec(kind: str, h_q: int, d_h: int, *, h_kv: int | None = None,
+                   d_c: int | None = None, d_r: int | None = None) -> AttentionSpec:
+    """Paper-default shapes: MLA d_c=4d_h, GLA-h_c d_c=2d_h, d_r=d_h/4 (=32
+    for d_h=128, the paper's default RoPE dim for MLA/GLA quality runs)."""
+    if kind == "mha":
+        return AttentionSpec("mha", h_q, h_q, d_h)
+    if kind == "mqa":
+        return AttentionSpec("mqa", h_q, 1, d_h)
+    if kind == "gqa":
+        return AttentionSpec("gqa", h_q, h_kv or 4, d_h)
+    if kind == "gta":
+        return AttentionSpec("gta", h_q, h_kv or 4, d_h)
+    if kind == "mla":
+        return AttentionSpec("mla", h_q, 1, d_h, d_c or 4 * d_h, d_r or max(d_h // 4, 4))
+    if kind == "gla":
+        hc = h_kv or 2
+        return AttentionSpec("gla", h_q, hc, d_h, d_c or 2 * d_h, d_r or max(d_h // 4, 4))
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Execution-scale configs (run for real on CPU PJRT).
+# tiny: the AOT artifact config (~0.9M params) — serving + integration tests.
+# mini: the quality-experiment config (~3.3M params) — variant training runs.
+# ---------------------------------------------------------------------------
+
+TINY = dict(vocab=256, d_model=128, n_layers=4, d_ff=352, h_q=8, d_h=16, max_len=512)
+MINI = dict(vocab=256, d_model=256, n_layers=6, d_ff=704, h_q=8, d_h=32, max_len=512)
+
+# Paper Table 6 ladder (analytical / simulated only — not executed on CPU).
+PAPER = {
+    "small": dict(vocab=128256, d_model=768, n_layers=12, d_ff=2048, h_q=12, d_h=64, max_len=2048),
+    "medium": dict(vocab=128256, d_model=1024, n_layers=24, d_ff=2736, h_q=16, d_h=64, max_len=2048),
+    "large": dict(vocab=128256, d_model=1536, n_layers=24, d_ff=4096, h_q=16, d_h=96, max_len=2048),
+    "xl": dict(vocab=128256, d_model=2048, n_layers=24, d_ff=5464, h_q=16, d_h=128, max_len=2048),
+}
+
+VARIANTS = ("mha", "mqa", "gqa4", "gta4", "mla", "gla2")
+
+
+def _parse_variant(variant: str) -> tuple[str, int | None]:
+    for k in ("gqa", "gta", "gla"):
+        if variant.startswith(k) and variant[len(k):].isdigit():
+            return k, int(variant[len(k):])
+    return variant, None
+
+
+def make_config(scale: str, variant: str) -> ModelConfig:
+    """scale in {tiny, mini, small, medium, large, xl}; variant e.g. 'gla2'."""
+    base = {"tiny": TINY, "mini": MINI}.get(scale) or PAPER[scale]
+    kind, n = _parse_variant(variant)
+    spec = attention_spec(kind, base["h_q"], base["d_h"], h_kv=n)
+    return ModelConfig(
+        name=f"{scale}-{variant}",
+        vocab=base["vocab"],
+        d_model=base["d_model"],
+        n_layers=base["n_layers"],
+        d_ff=base["d_ff"],
+        attn=spec,
+        max_len=base["max_len"],
+    )

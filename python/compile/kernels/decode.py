@@ -1,0 +1,250 @@
+"""Pallas decode-attention kernels for every variant in the paper.
+
+One generic flash-decode body (`_decode_body`) is specialized into three
+public kernels:
+
+* :func:`decode_gqa`    — MHA / MQA / GQA (separate K and V heads, m_kv=2)
+* :func:`decode_gta`    — Grouped-Tied Attention (tied KV tile + half-width
+                          broadcast RoPE keys, m_kv=1, §3.3.1)
+* :func:`decode_latent` — absorbed MLA / GLA (latent tile is both K and V,
+                          decoupled-RoPE keys, §3.3.2)
+
+Hardware mapping (see DESIGN.md §Hardware-Adaptation): the grid iterates
+(batch, kv-head/latent-head, kv-block); the kv-block axis is the innermost
+sequential axis so the BlockSpec pipeline streams KV tiles HBM→VMEM while
+the MXU consumes the previous tile — the Pallas analog of the paper's
+warp-specialized producer/consumer software pipeline. The *same* VMEM tile
+feeds both the QK^T and the PV matmul for GTA/MLA/GLA, which is exactly the
+arithmetic-intensity doubling the paper builds on: the tile is read from
+HBM once and used twice.
+
+All kernels run with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); correctness is asserted against ``ref.py``. Accumulation is
+f32; inputs may be f32 or bf16.
+
+Shape conventions match ref.py; ``cur_len`` arrives as a (1, 1) int32 array
+so the same lowered HLO serves any sequence length up to ``L_max``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30  # finite sentinel: keeps exp(m_prev - m_new) well-defined
+
+
+def _decode_body(
+    # refs (rope_ref/v_ref optional, see wrappers)
+    len_ref,
+    q_ref,
+    main_ref,
+    rope_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    k_main_dim: int,
+    lq: int,
+    bk: int,
+    scale: float,
+):
+    """One (batch, head-group, kv-block) grid step of flash decoding.
+
+    q_ref:    (R, dq)  R = g_q * lq rows; dq = k_main_dim(+rope) query width
+    main_ref: (bk, dm) KV / tied-KV / latent tile — loaded once, used for
+              QK^T (first k_main_dim columns) and, unless v_ref is given,
+              re-used in full as V.
+    rope_ref: (bk, dr) or None — broadcast RoPE / decoupled-RoPE keys.
+    v_ref:    (bk, dv) or None — separate V tile (GQA family only).
+    Scratch acc/m/l carry the online softmax across kv blocks.
+    """
+    kb = pl.program_id(2)
+    nkb = pl.num_programs(2)
+    cur_len = len_ref[0]  # this batch row's valid cache length
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].astype(jnp.float32)
+    main = main_ref[...].astype(jnp.float32)
+
+    # scores: (R, bk) — the tile's first k_main_dim columns are the K slice
+    s = jax.lax.dot_general(
+        q[:, :k_main_dim],
+        main[:, :k_main_dim],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    if rope_ref is not None:
+        qr = q[:, k_main_dim:]
+        rope = rope_ref[...].astype(jnp.float32)
+        s = s + jax.lax.dot_general(
+            qr, rope, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+    s = s * scale
+
+    # causal / length mask: row i is query t = i % lq; col j is pos kb*bk+j
+    r = q.shape[0]
+    t = jax.lax.broadcasted_iota(jnp.int32, (r, bk), 0) % lq
+    pos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (r, bk), 1)
+    allowed = pos <= (cur_len - lq + t)
+    s = jnp.where(allowed, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # `where` (not exp alone) so a fully-masked tile contributes zero even
+    # when m_new equals the NEG_INF sentinel
+    p = jnp.where(allowed, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    v = main if v_ref is None else v_ref[...].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+
+    @pl.when(kb == nkb - 1)
+    def _finalize():
+        o_ref[...] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+def _grid_call(q_rows, main, rope, v, lens, *, k_main_dim, lq, bk, dv, scale=None, interpret=True):
+    """Shared pallas_call plumbing.
+
+    q_rows: (B, H, R, dq); main: (B, L, H, dm); rope: (B, L, 1, dr)|None;
+    v: (B, L, H, dv)|None; lens: (B, 1) int32 per-sequence valid lengths
+    (continuous batching mixes sequences of different lengths).
+    Returns (B, H, R, dv).
+    """
+    b, h, r, dq = q_rows.shape
+    l_max, dm = main.shape[1], main.shape[3]
+    assert l_max % bk == 0, f"L_max={l_max} must be a multiple of bk={bk}"
+    nkb = l_max // bk
+    if scale is None:
+        scale = 1.0 / (dq ** 0.5)
+
+    in_specs = [
+        pl.BlockSpec((None, 1), lambda b_, j, k: (b_, 0)),  # this row's length
+        pl.BlockSpec((None, None, r, dq), lambda b_, j, k: (b_, j, 0, 0)),  # q
+        pl.BlockSpec((None, bk, None, dm), lambda b_, j, k: (b_, k, j, 0)),  # main
+    ]
+    args = [lens, q_rows, main]
+    if rope is not None:
+        dr = rope.shape[3]
+        in_specs.append(pl.BlockSpec((None, bk, None, dr), lambda b_, j, k: (b_, k, 0, 0)))
+        args.append(rope)
+    if v is not None:
+        in_specs.append(pl.BlockSpec((None, bk, None, dv), lambda b_, j, k: (b_, k, j, 0)))
+        args.append(v)
+
+    body = functools.partial(
+        _decode_body, k_main_dim=k_main_dim, lq=lq, bk=bk, scale=scale
+    )
+    if rope is None and v is None:
+        kernel = lambda le, q, mn, o, a, m, l_: body(le, q, mn, None, None, o, a, m, l_)
+    elif rope is None:
+        kernel = lambda le, q, mn, vv, o, a, m, l_: body(le, q, mn, None, vv, o, a, m, l_)
+    elif v is None:
+        kernel = lambda le, q, mn, rp, o, a, m, l_: body(le, q, mn, rp, None, o, a, m, l_)
+    else:
+        kernel = lambda le, q, mn, rp, vv, o, a, m, l_: body(le, q, mn, rp, vv, o, a, m, l_)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nkb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((None, None, r, dv), lambda b_, j, k: (b_, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, r, dv), q_rows.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((r, dv), jnp.float32),  # acc
+            pltpu.VMEM((r, 1), jnp.float32),  # running max m
+            pltpu.VMEM((r, 1), jnp.float32),  # running denom l
+        ],
+        interpret=interpret,
+    )(*args)
+
+
+def _rows(q, h):
+    """(B, lq, hq, d) -> (B, h, g*lq, d) row layout: row i = (g=i//lq, t=i%lq)."""
+    b, lq, hq, d = q.shape
+    g = hq // h
+    # (B, lq, h, g, d) -> (B, h, g, lq, d) -> (B, h, g*lq, d)
+    return q.reshape(b, lq, h, g, d).transpose(0, 2, 3, 1, 4).reshape(b, h, g * lq, d)
+
+
+def _unrows(o, lq, hq):
+    b, h, r, d = o.shape
+    g = r // lq
+    return o.reshape(b, h, g, lq, d).transpose(0, 3, 1, 2, 4).reshape(b, lq, hq, d)
+
+
+def _lens2d(lens, b):
+    """Accept python int, scalar, (B,) or (B,1) int32 -> (B,1) int32."""
+    lens = jnp.asarray(lens, jnp.int32)
+    if lens.ndim == 0:
+        lens = jnp.full((b, 1), lens, jnp.int32)
+    elif lens.ndim == 1:
+        lens = lens[:, None]
+    elif lens.shape == (1, 1) and b > 1:
+        lens = jnp.broadcast_to(lens, (b, 1))
+    return lens
+
+
+def decode_gqa(q, k, v, lens, *, block_k=128, interpret=True):
+    """GQA-family decode (MHA when h_kv == h_q, MQA when h_kv == 1).
+
+    q: (B, lq, hq, dh); k, v: (B, L_max, hkv, dh); lens: per-seq lengths.
+    """
+    b, lq, hq, dh = q.shape
+    hkv = k.shape[2]
+    qr = _rows(q, hkv)
+    o = _grid_call(
+        qr, k, None, v, _lens2d(lens, b), k_main_dim=dh, lq=lq, bk=block_k, dv=dh
+    )
+    return _unrows(o, lq, hq)
+
+
+def decode_gta(q, kv, k_rope, lens, *, block_k=128, interpret=True):
+    """Grouped-Tied Attention decode: one tied tile is K-half and full V.
+
+    q: (B, lq, hq, dh); kv: (B, L_max, hkv, dh); k_rope: (B, L_max, 1, dh/2).
+    """
+    b, lq, hq, dh = q.shape
+    hkv = kv.shape[2]
+    qr = _rows(q, hkv)
+    o = _grid_call(
+        qr, kv, k_rope, None, _lens2d(lens, b),
+        k_main_dim=dh // 2, lq=lq, bk=block_k, dv=dh,
+    )
+    return _unrows(o, lq, hq)
+
+
+def decode_latent(q_latent, q_rope, c, k_rope, lens, *, scale=None, block_k=128, interpret=True):
+    """Absorbed MLA (hc=1) / GLA (hc>=2) decode: latent tile is K and V.
+
+    q_latent: (B, lq, hq, dc); q_rope: (B, lq, hq, dr);
+    c: (B, L_max, hc, dc); k_rope: (B, L_max, 1, dr).
+    ``scale``: softmax scale; the *model* passes 1/sqrt(d_h + d_r) (the
+    training-time scale — absorption must not change the attention math),
+    while the default 1/sqrt(d_c + d_r) matches the standalone oracle.
+    Returns o_latent: (B, lq, hq, dc).
+    """
+    b, lq, hq, dc = q_latent.shape
+    hc = c.shape[2]
+    q_all = jnp.concatenate([q_latent, q_rope], axis=-1)  # (B, lq, hq, dc+dr)
+    qr = _rows(q_all, hc)
+    o = _grid_call(
+        qr, c, k_rope, None, _lens2d(lens, b),
+        k_main_dim=dc, lq=lq, bk=block_k, dv=dc, scale=scale,
+    )
+    return _unrows(o, lq, hq)

@@ -1,0 +1,96 @@
+"""Pallas causal prefill (FlashAttention-style) kernel, grouped-query layout.
+
+Used by every variant during prefill: GQA/GTA materialize their (grouped)
+K/V, MLA/GLA up-project the latent to per-head K/V at L2 and call this
+kernel with h_kv == h_q (the paper decodes in absorbed form but prefills in
+materialized form — §2.1).
+
+Grid: (batch, query-head, q-block, kv-block); the kv-block axis is
+innermost/sequential so the online-softmax scratch carries across it.
+Blocks that lie entirely above the causal diagonal are skipped with
+``pl.when`` (no FLOPs, no scratch update) — the tiling analog of
+FlashAttention-2's work partitioning.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _prefill_body(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *, bq, bk, scale):
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+    nkb = pl.num_programs(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Any work below the diagonal? Last query row is qb*bq+bq-1.
+    @pl.when(kb * bk <= qb * bq + bq - 1)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)
+        k = k_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        qi = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kj = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = qi >= kj
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v_ref[...].astype(jnp.float32), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+
+    @pl.when(kb == nkb - 1)
+    def _finalize():
+        o_ref[...] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+def prefill_attention(q, k, v, *, block_q=128, block_k=128, interpret=True):
+    """Causal grouped attention.
+
+    q (B,T,hq,dk); k (B,T,hkv,dk); v (B,T,hkv,dv) -> (B,T,hq,dv).
+    ``dk != dv`` is allowed: MLA/GLA prefill keys carry the decoupled-RoPE
+    slice (dk = d_h + d_r) while values are d_h wide.
+    """
+    b, t, hq, dk = q.shape
+    hkv, dv = k.shape[2], v.shape[3]
+    g = hq // hkv
+    bq = min(block_q, t)
+    bk = min(block_k, t)
+    assert t % bq == 0 and t % bk == 0, f"T={t} not divisible by blocks ({bq},{bk})"
+    scale = 1.0 / (dk ** 0.5)
+
+    body = functools.partial(_prefill_body, bq=bq, bk=bk, scale=scale)
+    out = pl.pallas_call(
+        body,
+        grid=(b, hq, t // bq, t // bk),
+        in_specs=[
+            pl.BlockSpec((None, bq, None, dk), lambda b_, h, i, j: (b_, i, h, 0)),
+            pl.BlockSpec((None, bk, None, dk), lambda b_, h, i, j: (b_, j, h // g, 0)),
+            pl.BlockSpec((None, bk, None, dv), lambda b_, h, i, j: (b_, j, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, None, dv), lambda b_, h, i, j: (b_, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t, hq, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dv), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out

@@ -1,0 +1,155 @@
+"""Pure-jnp oracles for every decode/prefill kernel.
+
+These are the correctness ground truth: each Pallas kernel in this package
+must match the corresponding function here to float tolerance (pytest +
+hypothesis sweep shapes/dtypes in python/tests/test_kernels.py).
+
+Decode conventions (shared by kernels and oracles):
+
+* The KV cache has capacity ``L_max``; only positions ``< cur_len`` are
+  valid. The ``lq`` query tokens are the *last* tokens of the sequence,
+  i.e. query row ``t`` (0-based) may attend cache positions
+  ``<= cur_len - lq + t``. ``lq == 1`` is standard decoding; ``lq >= 2`` is
+  the speculative-decoding setting of Fig. 3/15.
+* Softmax scale is ``1/sqrt(d_k_total)`` where ``d_k_total`` counts every
+  channel that participates in QK^T (main slice + rope slice).
+* Accumulation is float32 regardless of input dtype.
+"""
+
+import jax.numpy as jnp
+
+
+def _masked_softmax(s: jnp.ndarray, cur_len, lq: int, l_max: int) -> jnp.ndarray:
+    """s: (B, ..., lq, L_max) raw scores -> masked softmax probabilities (f32).
+
+    ``cur_len`` may be a python int / scalar (shared length) or a (B,)
+    array of per-sequence lengths (continuous batching).
+    """
+    b = s.shape[0]
+    cl = jnp.asarray(cur_len, jnp.int32).reshape(-1)
+    if cl.shape[0] == 1:
+        cl = jnp.broadcast_to(cl, (b,))
+    cl = cl.reshape((b,) + (1,) * (s.ndim - 1))
+    pos = jnp.arange(l_max)  # (L_max,)
+    t = jnp.arange(lq)[:, None]  # (lq, 1)
+    allowed = pos[None, :] <= (cl - lq + t)  # (B, ..., lq, L_max)
+    s = jnp.where(allowed, s.astype(jnp.float32), -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    return p / jnp.sum(p, axis=-1, keepdims=True)
+
+
+def decode_gqa(q, k, v, cur_len, lq=None):
+    """Grouped-query decode attention (covers MHA h_kv==h_q, MQA h_kv==1).
+
+    q: (B, lq, hq, dh); k, v: (B, L_max, hkv, dh); returns (B, lq, hq, dh).
+    """
+    b, lq_, hq, dh = q.shape
+    lq = lq or lq_
+    l_max, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / (dh ** 0.5)
+    qf = q.astype(jnp.float32).reshape(b, lq, hkv, g, dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # s: (B, hkv, g, lq, L)
+    s = jnp.einsum("btjgd,bljd->bjgtl", qf, kf) * scale
+    p = _masked_softmax(s, cur_len, lq, l_max)
+    o = jnp.einsum("bjgtl,bljd->btjgd", p, vf)
+    return o.reshape(b, lq, hq, dh).astype(q.dtype)
+
+
+def decode_gta(q, kv, k_rope, cur_len, lq=None):
+    """Grouped-tied decode attention (§3.3.1).
+
+    q:      (B, lq, hq, dh)        — slice [0, dh/2) matches the tied half,
+                                      slice [dh/2, dh) matches the RoPE half.
+    kv:     (B, L_max, hkv, dh)    — tied state; V = kv, K_nope = kv[..., :dh/2].
+    k_rope: (B, L_max, 1, dh/2)    — single-head rotated half, broadcast.
+    """
+    b, lq_, hq, dh = q.shape
+    lq = lq or lq_
+    l_max, hkv = kv.shape[1], kv.shape[2]
+    g = hq // hkv
+    scale = 1.0 / (dh ** 0.5)  # K width = dh/2 + dh/2 = dh
+    qf = q.astype(jnp.float32).reshape(b, lq, hkv, g, dh)
+    kvf = kv.astype(jnp.float32)
+    krf = k_rope.astype(jnp.float32)[:, :, 0, :]  # (B, L, dh/2)
+    h = dh // 2
+    s = jnp.einsum("btjgd,bljd->bjgtl", qf[..., :h], kvf[..., :h])
+    s = s + jnp.einsum("btjgd,bld->bjgtl", qf[..., h:], krf)
+    p = _masked_softmax(s * scale, cur_len, lq, l_max)
+    o = jnp.einsum("bjgtl,bljd->btjgd", p, kvf)  # V = full tied state
+    return o.reshape(b, lq, hq, dh).astype(q.dtype)
+
+
+def decode_latent(q_latent, q_rope, c, k_rope, cur_len, lq=None, scale=None):
+    """Absorbed latent decode attention — MLA (hc==1) and GLA (hc>=2), §3.3.2.
+
+    q_latent: (B, lq, hq, dc) — queries after absorbing W^UK.
+    q_rope:   (B, lq, hq, dr) — decoupled-RoPE slice of the queries.
+    c:        (B, L_max, hc, dc) — cached latent heads; K = V = c per group.
+    k_rope:   (B, L_max, 1, dr)  — shared decoupled-RoPE keys.
+    Returns o_latent: (B, lq, hq, dc) (output projection absorbed outside).
+    """
+    b, lq_, hq, dc = q_latent.shape
+    lq = lq or lq_
+    l_max, hc = c.shape[1], c.shape[2]
+    dr = q_rope.shape[-1]
+    g = hq // hc
+    if scale is None:
+        scale = 1.0 / ((dc + dr) ** 0.5)
+    qlf = q_latent.astype(jnp.float32).reshape(b, lq, hc, g, dc)
+    qrf = q_rope.astype(jnp.float32).reshape(b, lq, hc, g, dr)
+    cf = c.astype(jnp.float32)
+    krf = k_rope.astype(jnp.float32)[:, :, 0, :]
+    s = jnp.einsum("btjgd,bljd->bjgtl", qlf, cf)
+    s = s + jnp.einsum("btjgd,bld->bjgtl", qrf, krf)
+    p = _masked_softmax(s * scale, cur_len, lq, l_max)
+    o = jnp.einsum("bjgtl,bljd->btjgd", p, cf)  # V = the same latent tile
+    return o.reshape(b, lq, hq, dc).astype(q_latent.dtype)
+
+
+def prefill(q, k, v, causal=True):
+    """Full (training/prefill) grouped attention.
+
+    q: (B, T, hq, dk); k: (B, T, hkv, dk); v: (B, T, hkv, dv) -> (B, T, hq, dv).
+    """
+    b, t, hq, dh = q.shape
+    hkv, dv = k.shape[2], v.shape[3]
+    g = hq // hkv
+    scale = 1.0 / (dh ** 0.5)
+    qf = q.astype(jnp.float32).reshape(b, t, hkv, g, dh)
+    s = jnp.einsum("btjgd,bljd->bjgtl", qf, k.astype(jnp.float32)) * scale
+    if causal:
+        i = jnp.arange(t)[:, None]
+        j = jnp.arange(t)[None, :]
+        s = jnp.where(i >= j, s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bjgtl,bljd->btjgd", p, v.astype(jnp.float32))
+    return o.reshape(b, t, hq, dv).astype(q.dtype)
+
+
+def gather_pages(cache_pages, page_table, l_max):
+    """Oracle for paged-KV gather: reassemble a contiguous cache view.
+
+    cache_pages: (n_pages, page_size, H, D); page_table: (B, n_blocks) int32.
+    Returns (B, l_max, H, D) with l_max == n_blocks * page_size.
+    """
+    b, nb = page_table.shape
+    ps = cache_pages.shape[1]
+    assert nb * ps == l_max
+    flat = cache_pages[page_table.reshape(-1)]  # (B*nb, ps, H, D)
+    return flat.reshape(b, nb * ps, *cache_pages.shape[2:])
+
+
+def decode_latent_paged(q_latent, q_rope, c_pages, kr_pages, page_table, cur_len, lq=None, scale=None):
+    """Oracle for the paged latent decode kernel: gather + decode_latent."""
+    nb = page_table.shape[1]
+    ps = c_pages.shape[1]
+    l_max = nb * ps
+    c = gather_pages(c_pages, page_table, l_max)
+    kr = gather_pages(kr_pages, page_table, l_max)
+    return decode_latent(q_latent, q_rope, c, kr, cur_len, lq, scale)

@@ -1,0 +1,53 @@
+"""Rotary position embedding (RoPE) helpers.
+
+The paper's variants apply RoPE to *slices* of the head dimension:
+
+* MHA / MQA / GQA: full-width RoPE on q and k.
+* GTA: RoPE only on the second half of each query head and on a separate
+  single-head ``d_h/2`` key projection (the tied-KV half is never rotated —
+  §3.3.1).
+* MLA / GLA: a small *decoupled* RoPE slice of dimension ``d_r`` carried
+  next to the latent (the latent itself is position-free so the
+  weight-absorption trick stays valid — §2.1, §3.3.2).
+
+All functions are pure jnp (build-time only) and use the "rotate-half"
+convention of Su et al. 2023 with pairing (x[..., :d/2], x[..., d/2:]).
+"""
+
+import jax.numpy as jnp
+
+
+def rope_freqs(dim: int, max_len: int, theta: float = 10000.0) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Cos/sin tables of shape (max_len, dim/2) for a rotary slice of width `dim`."""
+    assert dim % 2 == 0, f"RoPE dim must be even, got {dim}"
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    t = jnp.arange(max_len, dtype=jnp.float32)
+    ang = jnp.outer(t, inv)  # (max_len, dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """Rotate the full last dim of ``x`` with position-aligned tables.
+
+    x: (..., T, H, d); cos/sin: (T, d/2) — broadcast over leading dims/heads.
+    """
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    # cos/sin: (T, d/2) -> (..., T, 1, d/2)
+    c = cos[:, None, :]
+    s = sin[:, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_rope_slice(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray, start: int) -> jnp.ndarray:
+    """Rotate only ``x[..., start:start+dim]`` (partial RoPE), keep the rest.
+
+    Used by GTA, which rotates the second half of each query head while the
+    first (tied) half stays unrotated.
+    """
+    dim = 2 * cos.shape[-1]
+    head = x[..., :start]
+    mid = apply_rope(x[..., start : start + dim], cos, sin)
+    tail = x[..., start + dim :]
+    return jnp.concatenate([head, mid, tail], axis=-1)

@@ -1,0 +1,354 @@
+"""L2 — Llama-3-style transformer with a pluggable attention variant.
+
+Every variant of the paper (MHA, MQA, GQA, GTA, MLA, GLA) plugs into the
+same backbone (RMSNorm → attention → RMSNorm → SwiGLU), so quality and
+speed comparisons isolate the attention design exactly as the paper does.
+
+Three entry points are lowered to HLO by `aot.py`:
+
+* :func:`prefill`     — process a full prompt, build the (two-tensor) KV
+                        cache, return logits. Materialized attention
+                        (MLA/GLA up-project the latent) via the Pallas
+                        prefill kernel.
+* :func:`decode_step` — append ``lq`` tokens per sequence with per-sequence
+                        lengths; write cache in place; absorbed attention
+                        via the variant's Pallas decode kernel. ``lq >= 2``
+                        is the speculative-decoding artifact.
+* train step          — see `train.py` (pure-jnp attention; the Pallas
+                        kernels are inference kernels, matching the paper
+                        whose contribution is *decoding*).
+
+Cache layout is uniform across variants — exactly two tensors, which keeps
+the Rust runtime variant-agnostic:
+
+    gqa family: main = K  (nl, B, L, h_kv, d_h),  aux = V      (same shape)
+    gta:        main = KV (nl, B, L, h_kv, d_h),  aux = K_rope (nl, B, L, 1, d_h/2)
+    mla/gla:    main = C  (nl, B, L, h_c,  d_c),  aux = K_rope (nl, B, L, 1, d_r)
+
+Absorption (§2.1/§3.3.2): for MLA/GLA, `absorb_params` folds W^UK into the
+query projection and W^UV into the output projection, so decoding attends
+directly to the latent and K/V are never materialized. The softmax scale
+stays the *training* scale 1/sqrt(d_h + d_r) — absorption is an identity
+rewrite of the same attention function (tested in test_model.py).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import decode as dk
+from .kernels import prefill as pk
+from .kernels import ref as kref
+from .kernels.rope import rope_freqs
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def _rot(x, cos, sin):
+    """Rotate-half over the full last dim; cos/sin broadcast against x[..., :d/2]."""
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+
+
+def _tables(cfg: ModelConfig, width: int):
+    return rope_freqs(width, cfg.max_len, cfg.rope_theta)
+
+
+def _rope_width(cfg: ModelConfig) -> int:
+    a = cfg.attn
+    if a.is_latent:
+        return a.d_r
+    if a.kind == "gta":
+        return a.d_h // 2
+    return a.d_h
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Initialize training parameters (normal(0, 0.02), scaled residual out)."""
+    a = cfg.attn
+    d, dh, hq, hkv = cfg.d_model, a.d_h, a.h_q, a.h_kv
+    g = a.group_size
+    key = jax.random.PRNGKey(seed)
+
+    def nrm(key, shape, scale=0.02):
+        return jax.random.normal(key, shape, jnp.float32) * scale
+
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    out_scale = 0.02 / (2 * cfg.n_layers) ** 0.5
+    layers = []
+    for li in range(cfg.n_layers):
+        k = jax.random.split(ks[li], 12)
+        layer = {
+            "attn_norm": jnp.ones((d,), jnp.float32),
+            "mlp_norm": jnp.ones((d,), jnp.float32),
+            "w_gate": nrm(k[0], (d, cfg.d_ff)),
+            "w_up": nrm(k[1], (d, cfg.d_ff)),
+            "w_down": nrm(k[2], (cfg.d_ff, d), out_scale),
+        }
+        if a.kind in ("mha", "mqa", "gqa"):
+            layer |= {
+                "wq": nrm(k[3], (d, hq, dh)),
+                "wk": nrm(k[4], (d, hkv, dh)),
+                "wv": nrm(k[5], (d, hkv, dh)),
+                "wo": nrm(k[6], (hq, dh, d), out_scale),
+            }
+        elif a.kind == "gta":
+            layer |= {
+                "wq": nrm(k[3], (d, hq, dh)),
+                "wkv": nrm(k[4], (d, hkv, dh)),
+                "wkr": nrm(k[5], (d, dh // 2)),
+                "wo": nrm(k[6], (hq, dh, d), out_scale),
+            }
+        else:  # mla / gla
+            layer |= {
+                "wq": nrm(k[3], (d, hq, dh + a.d_r)),
+                "wdkv": nrm(k[4], (d, hkv, a.d_c)),
+                "wkr": nrm(k[5], (d, a.d_r)),
+                "wuk": nrm(k[7], (hkv, a.d_c, g, dh)),
+                "wuv": nrm(k[8], (hkv, a.d_c, g, dh)),
+                "wo": nrm(k[6], (hq, dh, d), out_scale),
+            }
+        layers.append(layer)
+    return {
+        "embed": nrm(ks[-1], (cfg.vocab, d)),
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "layers": layers,
+    }
+
+
+def absorb_params(cfg: ModelConfig, params):
+    """Fold W^UK into W^Q and W^UV into W^O for latent variants (identity
+    rewrite of the attention function; enables latent-direct decoding)."""
+    a = cfg.attn
+    if not a.is_latent:
+        return params
+    g, dh = a.group_size, a.d_h
+    out = {"embed": params["embed"], "final_norm": params["final_norm"], "layers": []}
+    for layer in params["layers"]:
+        wq = layer["wq"]  # (D, hq, dh+dr)
+        d = wq.shape[0]
+        wq_nope = wq[..., :dh].reshape(d, a.h_kv, g, dh)
+        # (D,j,g,dh) x (j,dc,g,dh) -> (D,j,g,dc)
+        wq_abs = jnp.einsum("Djgd,jcgd->Djgc", wq_nope, layer["wuk"])
+        wo = layer["wo"].reshape(a.h_kv, g, dh, d)  # (j,g,dh,D)
+        wo_abs = jnp.einsum("jcgd,jgdD->jgcD", layer["wuv"], wo)
+        out["layers"].append({
+            "attn_norm": layer["attn_norm"],
+            "mlp_norm": layer["mlp_norm"],
+            "w_gate": layer["w_gate"],
+            "w_up": layer["w_up"],
+            "w_down": layer["w_down"],
+            "wq_abs": wq_abs.reshape(d, a.h_q, a.d_c),
+            "wq_rope": wq[..., dh:],  # (D, hq, dr)
+            "wo_abs": wo_abs.reshape(a.h_q, a.d_c, d),
+            "wdkv": layer["wdkv"],
+            "wkr": layer["wkr"],
+        })
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-layer attention: materialized (prefill/train) and absorbed (decode)
+# ---------------------------------------------------------------------------
+
+
+def _materialized_qkv(cfg: ModelConfig, layer, x, cos, sin):
+    """Project + RoPE for prefill/train. cos/sin are already gathered to the
+    token positions, shaped (..., T, 1, w/2). Returns (q, k, v, cache_main,
+    cache_aux) where cache_* are what decode will later attend to."""
+    a = cfg.attn
+    dh = a.d_h
+    if a.kind in ("mha", "mqa", "gqa"):
+        q = jnp.einsum("btD,Dhd->bthd", x, layer["wq"])
+        k = jnp.einsum("btD,Dhd->bthd", x, layer["wk"])
+        v = jnp.einsum("btD,Dhd->bthd", x, layer["wv"])
+        q = _rot(q, cos, sin)
+        k = _rot(k, cos, sin)
+        return q, k, v, k, v
+    if a.kind == "gta":
+        q = jnp.einsum("btD,Dhd->bthd", x, layer["wq"])
+        kv = jnp.einsum("btD,Dhd->bthd", x, layer["wkv"])
+        kr = _rot(x @ layer["wkr"], cos[..., 0, :], sin[..., 0, :])[..., None, :]
+        # q: first half unrotated (ties against KV), second half rotated
+        q = jnp.concatenate([q[..., : dh // 2], _rot(q[..., dh // 2 :], cos, sin)], axis=-1)
+        k = jnp.concatenate(
+            [kv[..., : dh // 2], jnp.broadcast_to(kr, kv[..., : dh // 2].shape)], axis=-1
+        )
+        return q, k, kv, kv, kr
+    # mla / gla: materialize K/V from the latent for prefill
+    q = jnp.einsum("btD,Dhd->bthd", x, layer["wq"])  # (B,T,hq,dh+dr)
+    q = jnp.concatenate([q[..., :dh], _rot(q[..., dh:], cos, sin)], axis=-1)
+    c = jnp.einsum("btD,Dhc->bthc", x, layer["wdkv"])  # (B,T,hc,dc)
+    kr = _rot(x @ layer["wkr"], cos[..., 0, :], sin[..., 0, :])[..., None, :]  # (B,T,1,dr)
+    k_nope = jnp.einsum("btjc,jcgd->btjgd", c, layer["wuk"])
+    v = jnp.einsum("btjc,jcgd->btjgd", c, layer["wuv"])
+    b, t = x.shape[0], x.shape[1]
+    k_nope = k_nope.reshape(b, t, a.h_q, dh)
+    v = v.reshape(b, t, a.h_q, dh)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(kr, (b, t, a.h_q, a.d_r))], axis=-1)
+    return q, k, v, c, kr
+
+
+def _layer_prefill(cfg, layer, x, cos, sin, use_kernel):
+    h = rms_norm(x, layer["attn_norm"], cfg.norm_eps)
+    q, k, v, cm, ca = _materialized_qkv(cfg, layer, h, cos, sin)
+    o = pk.prefill_attention(q, k, v) if use_kernel else kref.prefill(q, k, v)
+    x = x + jnp.einsum("bthd,hdD->btD", o, layer["wo"])
+    h = rms_norm(x, layer["mlp_norm"], cfg.norm_eps)
+    x = x + swiglu(h, layer["w_gate"], layer["w_up"], layer["w_down"])
+    return x, cm, ca
+
+
+def _write_cache(cache_l, new, lens):
+    """cache_l (B, Lmax, H, d), new (B, lq, H, d), lens (B,) start positions."""
+    def one(c, n, s):
+        return jax.lax.dynamic_update_slice(c, n.astype(c.dtype), (s, 0, 0))
+    return jax.vmap(one)(cache_l, new, lens)
+
+
+def _layer_decode(cfg, layer, x, main_l, aux_l, lens, cos_g, sin_g, use_kernel):
+    """One decode layer. lens: (B,) lengths BEFORE this step; the lq new
+    tokens occupy positions lens .. lens+lq-1. Returns (x, main_l, aux_l)."""
+    a = cfg.attn
+    dh = a.d_h
+    lq = x.shape[1]
+    h = rms_norm(x, layer["attn_norm"], cfg.norm_eps)
+    new_lens = lens + lq
+
+    if a.kind in ("mha", "mqa", "gqa"):
+        q = _rot(jnp.einsum("btD,Dhd->bthd", h, layer["wq"]), cos_g, sin_g)
+        k = _rot(jnp.einsum("btD,Dhd->bthd", h, layer["wk"]), cos_g, sin_g)
+        v = jnp.einsum("btD,Dhd->bthd", h, layer["wv"])
+        main_l = _write_cache(main_l, k, lens)
+        aux_l = _write_cache(aux_l, v, lens)
+        if use_kernel:
+            o = dk.decode_gqa(q, main_l, aux_l, new_lens)
+        else:
+            o = kref.decode_gqa(q, main_l, aux_l, new_lens, lq)
+        out_w = layer["wo"]
+    elif a.kind == "gta":
+        q = jnp.einsum("btD,Dhd->bthd", h, layer["wq"])
+        q = jnp.concatenate([q[..., : dh // 2], _rot(q[..., dh // 2 :], cos_g, sin_g)], axis=-1)
+        kv = jnp.einsum("btD,Dhd->bthd", h, layer["wkv"])
+        kr = _rot(h @ layer["wkr"], cos_g[..., 0, :], sin_g[..., 0, :])[..., None, :]
+        main_l = _write_cache(main_l, kv, lens)
+        aux_l = _write_cache(aux_l, kr, lens)
+        if use_kernel:
+            o = dk.decode_gta(q, main_l, aux_l, new_lens)
+        else:
+            o = kref.decode_gta(q, main_l, aux_l, new_lens, lq)
+        out_w = layer["wo"]
+    else:  # absorbed mla / gla
+        q_lat = jnp.einsum("btD,Dhc->bthc", h, layer["wq_abs"])
+        q_rope = _rot(jnp.einsum("btD,Dhd->bthd", h, layer["wq_rope"]), cos_g, sin_g)
+        c = jnp.einsum("btD,Dhc->bthc", h, layer["wdkv"])
+        kr = _rot(h @ layer["wkr"], cos_g[..., 0, :], sin_g[..., 0, :])[..., None, :]
+        main_l = _write_cache(main_l, c, lens)
+        aux_l = _write_cache(aux_l, kr, lens)
+        scale = 1.0 / ((dh + a.d_r) ** 0.5)  # training scale survives absorption
+        if use_kernel:
+            o = dk.decode_latent(q_lat, q_rope, main_l, aux_l, new_lens, scale=scale)
+        else:
+            o = kref.decode_latent(q_lat, q_rope, main_l, aux_l, new_lens, lq, scale)
+        out_w = layer["wo_abs"]
+
+    x = x + jnp.einsum("bthd,hdD->btD", o, out_w)
+    h = rms_norm(x, layer["mlp_norm"], cfg.norm_eps)
+    x = x + swiglu(h, layer["w_gate"], layer["w_up"], layer["w_down"])
+    return x, main_l, aux_l
+
+
+# ---------------------------------------------------------------------------
+# model-level entry points
+# ---------------------------------------------------------------------------
+
+
+def cache_shapes(cfg: ModelConfig, batch: int):
+    """(main, aux) cache array shapes for this config (see module docstring)."""
+    a = cfg.attn
+    nl, L = cfg.n_layers, cfg.max_len
+    if a.is_latent:
+        return (nl, batch, L, a.h_kv, a.d_c), (nl, batch, L, 1, a.d_r)
+    if a.kind == "gta":
+        return (nl, batch, L, a.h_kv, a.d_h), (nl, batch, L, 1, a.d_h // 2)
+    return (nl, batch, L, a.h_kv, a.d_h), (nl, batch, L, a.h_kv, a.d_h)
+
+
+def init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    sm, sa = cache_shapes(cfg, batch)
+    return jnp.zeros(sm, dtype), jnp.zeros(sa, dtype)
+
+
+def backbone(cfg: ModelConfig, params, tokens, use_kernel=True, collect_cache=True):
+    """Shared prefill trunk: tokens (B, T) -> (hidden (B,T,D), main, aux)."""
+    b, t = tokens.shape
+    x = params["embed"][tokens]
+    w = _rope_width(cfg)
+    cos, sin = _tables(cfg, w)
+    cos, sin = cos[None, :t, None, :], sin[None, :t, None, :]
+    mains, auxs = [], []
+    for layer in params["layers"]:
+        x, cm, ca = _layer_prefill(cfg, layer, x, cos, sin, use_kernel)
+        if collect_cache:
+            mains.append(cm)
+            auxs.append(ca)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if not collect_cache:
+        return x, None, None
+    sm, sa = cache_shapes(cfg, b)
+    main = jnp.zeros(sm, mains[0].dtype).at[:, :, :t].set(jnp.stack(mains))
+    aux = jnp.zeros(sa, auxs[0].dtype).at[:, :, :t].set(jnp.stack(auxs))
+    return x, main, aux
+
+
+def prefill(cfg: ModelConfig, params, tokens, use_kernel=True):
+    """tokens (B, T) -> (logits (B, T, V), cache_main, cache_aux).
+
+    All rows are processed to full T; the engine tracks each sequence's true
+    length and masks later attention with per-sequence `lens`, so right-pad
+    garbage beyond a row's true length is never attended.
+    """
+    x, main, aux = backbone(cfg, params, tokens, use_kernel)
+    logits = x @ params["embed"].T
+    return logits, main, aux
+
+
+def decode_step(cfg: ModelConfig, params_dec, main, aux, tokens, lens, use_kernel=True):
+    """tokens (B, lq) at positions lens..lens+lq-1 -> (logits (B, lq, V), main, aux).
+
+    `params_dec` must be `absorb_params(cfg, params)` for latent variants.
+    """
+    lq = tokens.shape[1]
+    x = params_dec["embed"][tokens]
+    w = _rope_width(cfg)
+    cos, sin = _tables(cfg, w)
+    pos = lens[:, None] + jnp.arange(lq, dtype=lens.dtype)[None, :]  # (B, lq)
+    cos_g, sin_g = cos[pos][:, :, None, :], sin[pos][:, :, None, :]
+    new_main, new_aux = [], []
+    for li, layer in enumerate(params_dec["layers"]):
+        x, ml, al = _layer_decode(
+            cfg, layer, x, main[li], aux[li], lens, cos_g, sin_g, use_kernel
+        )
+        new_main.append(ml)
+        new_aux.append(al)
+    x = rms_norm(x, params_dec["final_norm"], cfg.norm_eps)
+    logits = x @ params_dec["embed"].T
+    return logits, jnp.stack(new_main), jnp.stack(new_aux)

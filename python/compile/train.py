@@ -1,0 +1,110 @@
+"""Training step (AdamW) and the synthetic corpus for the quality experiment.
+
+The paper trains 183M–1.47B models on 25–50B FineWeb-Edu tokens; we cannot.
+The quality substitute (DESIGN.md §substitutions) trains every variant at
+matched parameter count on a deterministic synthetic corpus through the
+same AOT path: `aot.py` lowers `train_step` to HLO and the Rust trainer
+(`rust/src/train/`) drives the loop, logging the loss curve per variant.
+The paper's quality claim is an *ordering* (GTA ≤ GQA, GLA ≈ MLA), which
+is what EXPERIMENTS.md compares.
+
+The corpus is a two-level synthetic language: a Zipf-distributed unigram
+soup shaped by a random (but seed-deterministic) bigram transition matrix
+with a few high-probability "grammar" continuations. It has enough mutual
+information between adjacent tokens that attention quality differences are
+visible in the loss, while being generable on the fly from a seed (no data
+files, fully reproducible).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .model import backbone
+
+
+# ---------------------------------------------------------------------------
+# synthetic corpus
+# ---------------------------------------------------------------------------
+
+
+def make_bigram_table(vocab: int, seed: int = 1234, branch: int = 8) -> np.ndarray:
+    """(vocab, vocab) row-stochastic transition matrix: Zipf unigram base
+    mixed with `branch` preferred continuations per token."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, vocab + 1)
+    zipf = (1.0 / ranks) / np.sum(1.0 / ranks)
+    table = np.tile(zipf, (vocab, 1))
+    for t in range(vocab):
+        nxt = rng.choice(vocab, size=branch, replace=False)
+        w = rng.dirichlet(np.ones(branch)) * 0.7
+        table[t] *= 0.3
+        table[t, nxt] += w
+    return table / table.sum(axis=1, keepdims=True)
+
+
+def sample_corpus(vocab: int, n_tokens: int, seed: int = 0) -> np.ndarray:
+    """Deterministic token stream from the bigram language."""
+    table = make_bigram_table(vocab)
+    rng = np.random.default_rng(seed)
+    out = np.empty(n_tokens, np.int32)
+    t = int(rng.integers(vocab))
+    # cumulative tables once; inverse-CDF sampling per step
+    cum = np.cumsum(table, axis=1)
+    u = rng.random(n_tokens)
+    for i in range(n_tokens):
+        t = int(np.searchsorted(cum[t], u[i]))
+        out[i] = min(t, vocab - 1)
+    return out
+
+
+def batches(tokens: np.ndarray, batch: int, seq: int, seed: int = 0):
+    """Yield (B, seq+1) windows forever (input = [:, :-1], target = [:, 1:])."""
+    rng = np.random.default_rng(seed)
+    n = len(tokens) - seq - 1
+    while True:
+        idx = rng.integers(0, n, size=batch)
+        yield np.stack([tokens[i : i + seq + 1] for i in idx])
+
+
+# ---------------------------------------------------------------------------
+# loss / optimizer
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(cfg: ModelConfig, params, batch_tokens):
+    """Next-token cross entropy. batch_tokens: (B, T+1) int32."""
+    inp, tgt = batch_tokens[:, :-1], batch_tokens[:, 1:]
+    x, _, _ = backbone(cfg, params, inp, use_kernel=False, collect_cache=False)
+    logits = x @ params["embed"].T  # (B, T, V)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def init_opt_state(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, opt, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.1):
+    """AdamW with the paper's (β1, β2) = (0.9, 0.95) and weight decay 0.1."""
+    step = opt["step"] + 1
+    sf = step.astype(jnp.float32)
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+    bc1 = 1 - b1 ** sf
+    bc2 = 1 - b2 ** sf
+
+    def upd(p, m_, v_):
+        return p - lr * (m_ / bc1 / (jnp.sqrt(v_ / bc2) + eps) + wd * p)
+
+    return jax.tree.map(upd, params, m, v), {"m": m, "v": v, "step": step}
+
+
+def train_step(cfg: ModelConfig, params, opt, batch_tokens, lr):
+    """One AdamW step; returns (params, opt, loss). Lowered to HLO by aot.py."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, batch_tokens))(params)
+    params, opt = adamw_update(params, grads, opt, lr)
+    return params, opt, loss

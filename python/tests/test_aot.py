@@ -1,0 +1,92 @@
+"""AOT pipeline checks: meta manifests agree with configs, the HLO text is
+parseable-shaped, and lowering is deterministic (same config -> same meta).
+
+These run against the artifacts/ directory when it exists (post
+`make artifacts`); the lowering-unit tests below run standalone.
+"""
+
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, configs, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_flatten_named_deterministic():
+    cfg = configs.make_config("tiny", "gla2")
+    params = model.init_params(cfg, 0)
+    a, _ = aot.flatten_named(params)
+    b, _ = aot.flatten_named(params)
+    assert [n for n, _ in a] == [n for n, _ in b]
+    names = [n for n, _ in a]
+    assert "embed" in names and "layers.0.wq" in names
+
+
+def test_variant_config_consistency():
+    for v in configs.VARIANTS:
+        cfg = configs.make_config("tiny", v)
+        spec = cfg.attn
+        assert spec.h_q % spec.h_kv == 0
+        # paper accounting: m_kv=1 variants cache strictly less than GQA-4
+        if spec.kind in ("gta",):
+            gqa = configs.make_config("tiny", "gqa4").attn
+            assert spec.kv_elems_per_token() < gqa.kv_elems_per_token()
+
+
+def test_paper_scale_table6():
+    xl = configs.make_config("xl", "mla")
+    assert xl.d_model == 2048 and xl.n_layers == 24 and xl.attn.d_h == 128
+    assert xl.attn.d_c == 4 * 128  # MLA latent = 4 d_h
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.isdir(ART), reason="artifacts/ not built (run `make artifacts`)"
+)
+
+
+@needs_artifacts
+@pytest.mark.parametrize("variant", list(configs.VARIANTS))
+def test_artifact_files_complete(variant):
+    for kind in ("init", "absorb", "prefill", "decode", "decode2", "train"):
+        for ext in ("hlo.txt", "meta.txt"):
+            p = os.path.join(ART, f"{kind}_{variant}.{ext}")
+            assert os.path.exists(p), p
+            assert os.path.getsize(p) > 100
+
+
+@needs_artifacts
+@pytest.mark.parametrize("variant", list(configs.VARIANTS))
+def test_meta_matches_config(variant):
+    cfg = configs.make_config("tiny", variant)
+    meta = {}
+    inputs = []
+    with open(os.path.join(ART, f"decode_{variant}.meta.txt")) as f:
+        for line in f:
+            k, v = line.strip().split("=", 1)
+            if k.startswith("input."):
+                inputs.append(v)
+            elif not k.startswith("output."):
+                meta[k] = v
+    assert int(meta["h_q"]) == cfg.attn.h_q
+    assert int(meta["h_kv"]) == cfg.attn.h_kv
+    assert int(meta["kv_elems_per_token"]) == cfg.attn.kv_elems_per_token()
+    assert int(meta["lq"]) == 1
+    # cache inputs exist with the documented uniform two-tensor layout
+    names = [i.split(":")[0] for i in inputs]
+    assert "main" in names and "aux" in names and "lens" in names
+
+
+@needs_artifacts
+def test_hlo_text_is_hlo():
+    with open(os.path.join(ART, "decode_gla2.hlo.txt")) as f:
+        head = f.read(4096)
+    assert "HloModule" in head
+    assert "ENTRY" in open(os.path.join(ART, "decode_gla2.hlo.txt")).read()
+
+
+def test_dtype_tag():
+    assert aot._dtype_tag(jnp.zeros((1,), jnp.float32)) == "f32"
+    assert aot._dtype_tag(jnp.zeros((1,), jnp.int32)) == "i32"

@@ -1,0 +1,277 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes, query lengths, block sizes and sequence
+lengths; assert_allclose against ref.py is THE correctness signal for the
+kernels that the AOT artifacts embed.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import decode, paged, prefill, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+def _check(out, exp, dtype):
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32), **_tol(dtype)
+    )
+
+
+@st.composite
+def gqa_case(draw):
+    dh = draw(st.sampled_from([16, 32, 64]))
+    hkv = draw(st.sampled_from([1, 2, 4]))
+    g = draw(st.sampled_from([1, 2, 4]))
+    lq = draw(st.sampled_from([1, 2, 4]))
+    b = draw(st.integers(1, 3))
+    bk = draw(st.sampled_from([32, 64, 128]))
+    nkb = draw(st.integers(1, 4))
+    l_max = bk * nkb
+    dtype = draw(st.sampled_from([jnp.float32, jnp.bfloat16]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return b, lq, hkv * g, hkv, dh, l_max, bk, dtype, seed
+
+
+def _lens(rng, b, lq, l_max):
+    return jnp.asarray(rng.integers(lq, l_max + 1, size=b), jnp.int32)
+
+
+class TestDecodeGQA:
+    @settings(**SETTINGS)
+    @given(gqa_case())
+    def test_matches_ref(self, case):
+        b, lq, hq, hkv, dh, l_max, bk, dtype, seed = case
+        rng = np.random.default_rng(seed)
+        q = _rand(rng, (b, lq, hq, dh), dtype)
+        k = _rand(rng, (b, l_max, hkv, dh), dtype)
+        v = _rand(rng, (b, l_max, hkv, dh), dtype)
+        lens = _lens(rng, b, lq, l_max)
+        out = decode.decode_gqa(q, k, v, lens, block_k=bk)
+        exp = ref.decode_gqa(q, k, v, lens, lq)
+        _check(out, exp, dtype)
+
+    def test_mha_degenerate(self):
+        """h_kv == h_q reduces to MHA; cross-check against a direct softmax."""
+        rng = np.random.default_rng(0)
+        q = _rand(rng, (1, 1, 4, 16), jnp.float32)
+        k = _rand(rng, (1, 64, 4, 16), jnp.float32)
+        v = _rand(rng, (1, 64, 4, 16), jnp.float32)
+        out = decode.decode_gqa(q, k, v, 64, block_k=32)
+        s = np.einsum("bthd,blhd->bhtl", np.asarray(q), np.asarray(k)) / 4.0
+        p = np.exp(s - s.max(-1, keepdims=True))
+        p /= p.sum(-1, keepdims=True)
+        exp = np.einsum("bhtl,blhd->bthd", p, np.asarray(v))
+        np.testing.assert_allclose(np.asarray(out), exp, rtol=1e-4, atol=1e-4)
+
+    def test_len_one(self):
+        """cur_len == lq == 1: only position 0 is attended -> out == v[0]."""
+        rng = np.random.default_rng(1)
+        q = _rand(rng, (2, 1, 4, 16), jnp.float32)
+        k = _rand(rng, (2, 64, 2, 16), jnp.float32)
+        v = _rand(rng, (2, 64, 2, 16), jnp.float32)
+        out = decode.decode_gqa(q, k, v, 1, block_k=32)
+        exp = np.broadcast_to(
+            np.asarray(v)[:, 0][:, None, :, None, :], (2, 1, 2, 2, 16)
+        ).reshape(2, 1, 4, 16)
+        np.testing.assert_allclose(np.asarray(out), exp, rtol=1e-5, atol=1e-5)
+
+    def test_per_batch_lens_differ(self):
+        rng = np.random.default_rng(2)
+        q = _rand(rng, (2, 1, 4, 16), jnp.float32)
+        k = _rand(rng, (2, 128, 2, 16), jnp.float32)
+        v = _rand(rng, (2, 128, 2, 16), jnp.float32)
+        lens = jnp.asarray([3, 128], jnp.int32)
+        out = decode.decode_gqa(q, k, v, lens, block_k=64)
+        exp = ref.decode_gqa(q, k, v, lens)
+        _check(out, exp, jnp.float32)
+
+
+class TestDecodeGTA:
+    @settings(**SETTINGS)
+    @given(gqa_case())
+    def test_matches_ref(self, case):
+        b, lq, hq, hkv, dh, l_max, bk, dtype, seed = case
+        rng = np.random.default_rng(seed)
+        q = _rand(rng, (b, lq, hq, dh), dtype)
+        kv = _rand(rng, (b, l_max, hkv, dh), dtype)
+        kr = _rand(rng, (b, l_max, 1, dh // 2), dtype)
+        lens = _lens(rng, b, lq, l_max)
+        out = decode.decode_gta(q, kv, kr, lens, block_k=bk)
+        exp = ref.decode_gta(q, kv, kr, lens, lq)
+        _check(out, exp, dtype)
+
+    def test_tied_value_is_full_state(self):
+        """With uniform scores the output is the mean of the *full* tied KV."""
+        b, hkv, dh, l = 1, 1, 8, 32
+        q = jnp.zeros((b, 1, 2, dh), jnp.float32)  # zero q -> uniform attention
+        kv = jnp.asarray(np.random.default_rng(3).standard_normal((b, l, hkv, dh)), jnp.float32)
+        kr = jnp.zeros((b, l, 1, dh // 2), jnp.float32)
+        out = decode.decode_gta(q, kv, kr, l, block_k=16)
+        exp = np.asarray(kv).mean(axis=1)  # (b, hkv, dh)
+        np.testing.assert_allclose(
+            np.asarray(out)[0, 0, 0], exp[0, 0], rtol=1e-5, atol=1e-5
+        )
+
+
+@st.composite
+def latent_case(draw):
+    dc = draw(st.sampled_from([32, 64, 128]))
+    dr = draw(st.sampled_from([8, 16, 32]))
+    hc = draw(st.sampled_from([1, 2, 4]))  # hc=1 is MLA, hc>=2 is GLA
+    g = draw(st.sampled_from([1, 2, 4]))
+    lq = draw(st.sampled_from([1, 2, 3]))
+    b = draw(st.integers(1, 2))
+    bk = draw(st.sampled_from([32, 64]))
+    nkb = draw(st.integers(1, 4))
+    dtype = draw(st.sampled_from([jnp.float32, jnp.bfloat16]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return b, lq, hc * g, hc, dc, dr, bk * nkb, bk, dtype, seed
+
+
+class TestDecodeLatent:
+    @settings(**SETTINGS)
+    @given(latent_case())
+    def test_matches_ref(self, case):
+        b, lq, hq, hc, dc, dr, l_max, bk, dtype, seed = case
+        rng = np.random.default_rng(seed)
+        ql = _rand(rng, (b, lq, hq, dc), dtype)
+        qr = _rand(rng, (b, lq, hq, dr), dtype)
+        c = _rand(rng, (b, l_max, hc, dc), dtype)
+        kr = _rand(rng, (b, l_max, 1, dr), dtype)
+        lens = _lens(rng, b, lq, l_max)
+        out = decode.decode_latent(ql, qr, c, kr, lens, block_k=bk)
+        exp = ref.decode_latent(ql, qr, c, kr, lens, lq)
+        _check(out, exp, dtype)
+
+    def test_explicit_scale(self):
+        """Model-side scale 1/sqrt(dh+dr) (absorption keeps training math)."""
+        rng = np.random.default_rng(4)
+        ql = _rand(rng, (1, 1, 4, 64), jnp.float32)
+        qr = _rand(rng, (1, 1, 4, 16), jnp.float32)
+        c = _rand(rng, (1, 128, 2, 64), jnp.float32)
+        kr = _rand(rng, (1, 128, 1, 16), jnp.float32)
+        sc = 1.0 / ((32 + 16) ** 0.5)
+        out = decode.decode_latent(ql, qr, c, kr, 100, scale=sc, block_k=64)
+        exp = ref.decode_latent(ql, qr, c, kr, 100, scale=sc)
+        _check(out, exp, jnp.float32)
+
+    def test_mla_single_head(self):
+        rng = np.random.default_rng(5)
+        ql = _rand(rng, (2, 1, 8, 64), jnp.float32)
+        qr = _rand(rng, (2, 1, 8, 16), jnp.float32)
+        c = _rand(rng, (2, 64, 1, 64), jnp.float32)
+        kr = _rand(rng, (2, 64, 1, 16), jnp.float32)
+        out = decode.decode_latent(ql, qr, c, kr, 64, block_k=32)
+        exp = ref.decode_latent(ql, qr, c, kr, 64)
+        _check(out, exp, jnp.float32)
+
+
+class TestPrefill:
+    @settings(**SETTINGS)
+    @given(
+        st.sampled_from([16, 32]),
+        st.sampled_from([1, 2, 4]),
+        st.sampled_from([1, 2]),
+        st.sampled_from([64, 128]),
+        st.sampled_from([32, 64]),
+        st.sampled_from([jnp.float32, jnp.bfloat16]),
+        st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, dh, hkv, g, t, bq, dtype, seed):
+        rng = np.random.default_rng(seed)
+        hq = hkv * g
+        q = _rand(rng, (2, t, hq, dh), dtype)
+        k = _rand(rng, (2, t, hkv, dh), dtype)
+        v = _rand(rng, (2, t, hkv, dh), dtype)
+        out = prefill.prefill_attention(q, k, v, block_q=bq, block_k=bq)
+        exp = ref.prefill(q, k, v)
+        _check(out, exp, dtype)
+
+    def test_first_row_is_v0(self):
+        """Causal row 0 can only attend position 0."""
+        rng = np.random.default_rng(6)
+        q = _rand(rng, (1, 64, 2, 16), jnp.float32)
+        k = _rand(rng, (1, 64, 2, 16), jnp.float32)
+        v = _rand(rng, (1, 64, 2, 16), jnp.float32)
+        out = prefill.prefill_attention(q, k, v, block_q=32, block_k=32)
+        np.testing.assert_allclose(
+            np.asarray(out)[0, 0], np.asarray(v)[0, 0], rtol=1e-5, atol=1e-5
+        )
+
+    def test_wide_keys_narrow_values(self):
+        """MLA/GLA prefill shape: dk = dh + dr > dv = dh."""
+        rng = np.random.default_rng(7)
+        q = _rand(rng, (1, 64, 4, 48), jnp.float32)
+        k = _rand(rng, (1, 64, 4, 48), jnp.float32)
+        v = _rand(rng, (1, 64, 4, 32), jnp.float32)
+        out = prefill.prefill_attention(q, k, v, block_q=32, block_k=32)
+        exp = ref.prefill(q, k, v)
+        _check(out, exp, jnp.float32)
+
+
+class TestPaged:
+    @settings(**SETTINGS)
+    @given(
+        st.sampled_from([32, 64]),  # dc
+        st.sampled_from([8, 16]),  # dr
+        st.sampled_from([1, 2]),  # hc
+        st.sampled_from([2, 4]),  # g
+        st.sampled_from([1, 2]),  # lq
+        st.sampled_from([16, 32]),  # page size
+        st.integers(2, 6),  # blocks per seq
+        st.integers(0, 2**31 - 1),
+    )
+    def test_matches_gather_oracle(self, dc, dr, hc, g, lq, ps, nb, seed):
+        rng = np.random.default_rng(seed)
+        b, hq = 2, hc * g
+        n_pages = b * nb + 3
+        ql = _rand(rng, (b, lq, hq, dc), jnp.float32)
+        qr = _rand(rng, (b, lq, hq, dr), jnp.float32)
+        cp = _rand(rng, (n_pages, ps, hc, dc), jnp.float32)
+        krp = _rand(rng, (n_pages, ps, 1, dr), jnp.float32)
+        pt = jnp.asarray(
+            rng.permutation(n_pages)[: b * nb].reshape(b, nb), jnp.int32
+        )
+        lens = _lens(rng, b, lq, nb * ps)
+        out = paged.decode_latent_paged(ql, qr, cp, krp, pt, lens)
+        exp = ref.decode_latent_paged(ql, qr, cp, krp, pt, lens, lq)
+        _check(out, exp, jnp.float32)
+
+    def test_page_size_invariance(self):
+        """The same logical cache split into different page sizes must give
+        identical outputs (the paper's page-size-1-no-slowdown claim is
+        about *speed*; this is the corresponding correctness invariant)."""
+        rng = np.random.default_rng(8)
+        b, lq, hc, g, dc, dr, l = 1, 1, 2, 2, 32, 8, 128
+        hq = hc * g
+        ql = _rand(rng, (b, lq, hq, dc), jnp.float32)
+        qr = _rand(rng, (b, lq, hq, dr), jnp.float32)
+        c = _rand(rng, (b, l, hc, dc), jnp.float32)
+        kr = _rand(rng, (b, l, 1, dr), jnp.float32)
+        outs = []
+        for ps in (16, 32, 64):
+            nb = l // ps
+            cp = np.asarray(c).reshape(nb, ps, hc, dc)
+            krp = np.asarray(kr).reshape(nb, ps, 1, dr)
+            pt = jnp.arange(nb, dtype=jnp.int32)[None, :]
+            outs.append(
+                np.asarray(
+                    paged.decode_latent_paged(
+                        ql, qr, jnp.asarray(cp), jnp.asarray(krp), pt, 100
+                    )
+                )
+            )
+        np.testing.assert_allclose(outs[0], outs[1], rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(outs[0], outs[2], rtol=1e-6, atol=1e-6)

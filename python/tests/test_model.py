@@ -1,0 +1,176 @@
+"""L2 model correctness: prefill/decode parity (the absorption identity),
+per-variant cache layouts, training behaviour, and RoPE properties."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import configs, model, train
+from compile.kernels import rope
+
+VARIANTS = ["mha", "mqa", "gqa4", "gta4", "mla", "gla2"]
+
+
+def tiny(variant, max_len=128):
+    cfg = configs.make_config("tiny", variant)
+    return dataclasses.replace(cfg, max_len=max_len)
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_prefill_decode_parity(variant, use_kernel):
+    """Decoding token-by-token (absorbed params, decode kernels) must
+    reproduce the prefill logits exactly — THE absorption identity."""
+    cfg = tiny(variant)
+    params = model.init_params(cfg, 0)
+    pdec = model.absorb_params(cfg, params)
+    B, T = 2, 8
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, T)), jnp.int32)
+    logits_p, _, _ = model.prefill(cfg, params, toks, use_kernel=use_kernel)
+    main, aux = model.init_cache(cfg, B)
+    lens = jnp.zeros((B,), jnp.int32)
+    outs = []
+    for t in range(T):
+        lg, main, aux = model.decode_step(
+            cfg, pdec, main, aux, toks[:, t : t + 1], lens, use_kernel=use_kernel
+        )
+        outs.append(lg[:, 0])
+        lens = lens + 1
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(logits_p), rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_speculative_lq2_matches_single_steps(variant):
+    """One lq=2 decode step == two lq=1 steps (speculative verification)."""
+    cfg = tiny(variant)
+    params = model.init_params(cfg, 1)
+    pdec = model.absorb_params(cfg, params)
+    B = 2
+    rng = np.random.default_rng(1)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (B, 4)), jnp.int32)
+    _, main0, aux0 = model.prefill(cfg, params, prompt, use_kernel=False)
+    lens = jnp.full((B,), 4, jnp.int32)
+    nxt = jnp.asarray(rng.integers(0, cfg.vocab, (B, 2)), jnp.int32)
+    # two single steps
+    m1, a1 = main0, aux0
+    lg_a, m1, a1 = model.decode_step(cfg, pdec, m1, a1, nxt[:, :1], lens, use_kernel=False)
+    lg_b, m1, a1 = model.decode_step(cfg, pdec, m1, a1, nxt[:, 1:], lens + 1, use_kernel=False)
+    # one fused lq=2 step
+    lg2, m2, a2 = model.decode_step(cfg, pdec, main0, aux0, nxt, lens, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(lg2[:, 0]), np.asarray(lg_a[:, 0]), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(lg2[:, 1]), np.asarray(lg_b[:, 0]), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_cache_shapes_match_kv_accounting(variant):
+    """The two-tensor cache must contain exactly kv_elems_per_token per
+    token per layer (the §3.2 accounting the Rust side relies on)."""
+    cfg = tiny(variant)
+    (sm, sa) = model.cache_shapes(cfg, batch=3)
+    per_token = (sm[3] * sm[4]) + (sa[3] * sa[4]) * (
+        1 if cfg.attn.kind in ("gta", "mla", "gla") else 1
+    )
+    if cfg.attn.kind in ("mha", "mqa", "gqa"):
+        per_token = sm[3] * sm[4] + sa[3] * sa[4]
+    assert per_token == cfg.attn.kv_elems_per_token()
+    assert sm[0] == cfg.n_layers and sm[1] == 3 and sm[2] == cfg.max_len
+
+
+def test_gta_cache_halves_gqa():
+    gta = tiny("gta4").attn.kv_elems_per_token()
+    gqa = tiny("gqa4").attn.kv_elems_per_token()
+    assert gta < 0.6 * gqa  # tied state + rope half vs separate K and V
+
+
+def test_mla_gla_same_unsharded_cache():
+    assert tiny("mla").attn.kv_elems_per_token() == pytest.approx(
+        tiny("gla2").attn.kv_elems_per_token(), rel=0.25
+    )
+
+
+def test_per_batch_lens_isolated():
+    """Rows with different lengths must not leak attention across rows."""
+    cfg = tiny("gla2")
+    params = model.init_params(cfg, 2)
+    pdec = model.absorb_params(cfg, params)
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 6)), jnp.int32)
+    # batch row 0 alone vs row 0 in a batch where row 1 has other content
+    _, m, a = model.prefill(cfg, params, toks, use_kernel=False)
+    lens = jnp.asarray([6, 3], jnp.int32)  # row 1 pretends to be shorter
+    nxt = jnp.asarray([[5], [7]], jnp.int32)
+    lg, _, _ = model.decode_step(cfg, pdec, m, a, nxt, lens, use_kernel=True)
+    lg_ref, _, _ = model.decode_step(cfg, pdec, m, a, nxt, lens, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_ref), rtol=2e-3, atol=2e-3)
+
+
+def test_training_reduces_loss_all_variants():
+    toks = train.sample_corpus(256, 3000, 0)
+    for variant in ["gqa4", "gla2"]:
+        cfg = tiny(variant, max_len=64)
+        params = model.init_params(cfg, 0)
+        opt = train.init_opt_state(params)
+        gen = train.batches(toks, 4, 32, 0)
+        step = jax.jit(lambda p, o, b, cfg=cfg: train.train_step(cfg, p, o, b, 3e-3))
+        l0 = None
+        for i in range(25):
+            params, opt, loss = step(params, opt, jnp.asarray(next(gen)))
+            if i == 0:
+                l0 = float(loss)
+        assert float(loss) < l0 - 0.2, f"{variant}: {l0} -> {float(loss)}"
+
+
+def test_corpus_deterministic():
+    a = train.sample_corpus(64, 500, 1)
+    b = train.sample_corpus(64, 500, 1)
+    np.testing.assert_array_equal(a, b)
+    assert (a >= 0).all() and (a < 64).all()
+
+
+def test_rope_slice_keeps_untouched_channels():
+    cos, sin = rope.rope_freqs(8, 16)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((1, 16, 2, 16)), jnp.float32)
+    y = rope.apply_rope_slice(x, cos, sin, start=8)
+    np.testing.assert_array_equal(np.asarray(y[..., :8]), np.asarray(x[..., :8]))
+    assert not np.allclose(np.asarray(y[..., 8:]), np.asarray(x[..., 8:]))
+
+
+def test_rope_position_zero_is_identity():
+    cos, sin = rope.rope_freqs(8, 4)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((1, 1, 1, 8)), jnp.float32)
+    y = rope.apply_rope(x[:, :1], cos[:1], sin[:1])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-6, atol=1e-6)
+
+
+def test_rope_relative_property():
+    """<rot(q,m), rot(k,n)> depends only on m-n (the RoPE invariant)."""
+    d = 16
+    cos, sin = rope.rope_freqs(d, 64)
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.standard_normal((d,)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((d,)), jnp.float32)
+
+    def dot_at(m, n):
+        qm = rope.apply_rope(q[None, None, None, :], cos[m : m + 1], sin[m : m + 1])
+        kn = rope.apply_rope(k[None, None, None, :], cos[n : n + 1], sin[n : n + 1])
+        return float(jnp.sum(qm * kn))
+
+    assert dot_at(5, 3) == pytest.approx(dot_at(12, 10), rel=1e-4)
+    assert dot_at(5, 3) != pytest.approx(dot_at(5, 4), rel=1e-3)
+
+
+@pytest.mark.parametrize("variant", ["mla", "gla2"])
+def test_absorbed_params_never_materialize_kv(variant):
+    """Absorbed decode params must not contain the up-projections."""
+    cfg = tiny(variant)
+    pdec = model.absorb_params(cfg, model.init_params(cfg, 0))
+    for layer in pdec["layers"]:
+        assert "wuk" not in layer and "wuv" not in layer
+        assert layer["wq_abs"].shape == (cfg.d_model, cfg.attn.h_q, cfg.attn.d_c)
+        assert layer["wo_abs"].shape == (cfg.attn.h_q, cfg.attn.d_c, cfg.d_model)

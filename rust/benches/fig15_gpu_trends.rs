@@ -1,0 +1,23 @@
+//! Fig. 15 (right) — peak BF16 FLOPs vs HBM bandwidth across GPU
+//! generations: compute grows ~3x per 2 years, bandwidth ~1.6x, so the
+//! ridge point keeps climbing and decoding stays memory-bound everywhere.
+//!
+//!     cargo bench --bench fig15_gpu_trends
+
+use gla_serve::hardware::GENERATIONS;
+
+fn main() {
+    println!("Fig. 15 (right) — GPU generations: FLOPs outgrow bandwidth");
+    println!("{:<6} {:>5} {:>12} {:>10} {:>14}", "gpu", "year", "BF16 TFLOPs", "HBM TB/s", "ridge (F/B)");
+    for g in GENERATIONS {
+        println!("{:<6} {:>5} {:>12.0} {:>10.2} {:>14.0}", g.name, g.year, g.peak_bf16_tflops, g.hbm_bw_tbps, g.ridge_point());
+    }
+    let (v, b) = (GENERATIONS[0], GENERATIONS[GENERATIONS.len() - 1]);
+    println!(
+        "\nV100 -> B200: compute {:.0}x, bandwidth {:.1}x, ridge {:.1}x",
+        b.peak_bf16_tflops / v.peak_bf16_tflops,
+        b.hbm_bw_tbps / v.hbm_bw_tbps,
+        b.ridge_point() / v.ridge_point(),
+    );
+    println!("decode AI ~1 (MHA) to ~2h_q (MLA): even B200 stays memory-bound at AI<=~280.");
+}

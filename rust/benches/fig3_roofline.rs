@@ -1,0 +1,29 @@
+//! Fig. 3 — roofline analysis of BF16 decoding on one H100 SXM5:
+//! variant positions at query length 1 (standard decoding) and 2
+//! (speculative decoding), against the 989 TFLOP/s / 3.35 TB/s roofs.
+//!
+//!     cargo bench --bench fig3_roofline
+
+use gla_serve::analytical::{fig3_positions, roofline};
+use gla_serve::hardware::H100;
+
+fn main() {
+    println!("Fig. 3 — H100 roofline (ridge {:.0} FLOPs/byte)", H100.ridge_point());
+    println!("\nroofline curve:");
+    for ai in [1.0, 4.0, 16.0, 64.0, 128.0, 256.0, 295.0, 512.0, 1024.0] {
+        let p = roofline(&H100, ai);
+        println!("  AI {ai:>7.0} -> {:>7.1} TFLOP/s {}", p.attainable_tflops,
+                 if p.compute_bound { "[compute-bound]" } else { "[memory-bound]" });
+    }
+    println!("\nvariant positions (h_q = 128, L = 64K):");
+    println!("{:<8} {:>3} {:>12} {:>14} {:>15}", "variant", "Lq", "AI (F/B)", "attainable", "regime");
+    for (name, lq, p) in fig3_positions(&H100, 1 << 16) {
+        println!(
+            "{:<8} {:>3} {:>12.1} {:>11.1} TF {:>15}",
+            name, lq, p.intensity, p.attainable_tflops,
+            if p.compute_bound { "compute-bound" } else { "memory-bound" }
+        );
+    }
+    println!("\npaper: MLA @Lq=1 near ridge (~256), GLA-2 ~128 on IO roof;");
+    println!("       MLA @Lq=2 crosses the roof, GLA-2 reaches the inflection.");
+}

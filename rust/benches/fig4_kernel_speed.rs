@@ -1,0 +1,28 @@
+//! Fig. 4 (left) and Fig. 15 (left) — decode-kernel speed, MLA vs GLA-2 on
+//! one H100: achieved TB/s and TFLOP/s vs batch size at query length 1
+//! (pass `lq2` for the speculative-decoding panel, Fig. 15 left).
+//!
+//!     cargo bench --bench fig4_kernel_speed [-- lq2]
+
+use gla_serve::config::KERNEL_BENCH;
+use gla_serve::hardware::DeviceModel;
+
+fn main() {
+    let lq = if std::env::args().any(|a| a == "lq2") { 2 } else { 1 };
+    let m = KERNEL_BENCH;
+    let dm = DeviceModel::h100_optimized();
+    let ctx = 8192;
+    println!(
+        "Fig. {} — decode kernel speed, ctx {ctx}, query len {lq}, 128 query heads",
+        if lq == 1 { "4 (left)" } else { "15 (left)" }
+    );
+    println!("{:<8} {:>6} {:>12} {:>12} {:>12} {:>9}", "variant", "batch", "time/layer", "TB/s", "TFLOP/s", "vs MLA");
+    for batch in [1usize, 8, 32, 64, 128, 256] {
+        let (t_mla, bw_m, tf_m) = dm.kernel_speed(&m, &m.variant("mla"), batch, ctx, lq, 1);
+        let (t_gla, bw_g, tf_g) = dm.kernel_speed(&m, &m.variant("gla2"), batch, ctx, lq, 1);
+        println!("{:<8} {:>6} {:>10.1}us {:>12.2} {:>12.1} {:>9}", "mla", batch, t_mla * 1e6, bw_m, tf_m, "1.00x");
+        println!("{:<8} {:>6} {:>10.1}us {:>12.2} {:>12.1} {:>8.2}x", "gla2", batch, t_gla * 1e6, bw_g, tf_g, t_mla / t_gla);
+    }
+    println!("\npaper @batch128/Lq=1: MLA ~610 TFLOP/s (near compute), GLA ~360 (memory roof);");
+    println!("paper @Lq=2: GLA ~700 TFLOP/s + ~3.0 TB/s, up to 2x faster than FlashMLA.");
+}

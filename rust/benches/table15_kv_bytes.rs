@@ -1,0 +1,39 @@
+//! Tables 15 & 26 — KV-cache bytes per token per device vs TP degree
+//! (XL config, bf16) and the Llama-3-8B-shaped Table 26 in units of d_h.
+//!
+//!     cargo bench --bench table15_kv_bytes
+
+use gla_serve::attention::Variant;
+
+fn main() {
+    println!("Table 15 — KV cache bytes/token/device, XL (h_q=16, d_h=128), bf16");
+    println!("{:<8} {:>8} {:>8} {:>8}", "variant", "TP=1", "TP=2", "TP=4");
+    for name in ["mha", "gqa4", "gta4", "gla2", "mla"] {
+        let v = Variant::parse(name, 16, 128).unwrap();
+        println!(
+            "{:<8} {:>8} {:>8} {:>8}",
+            name,
+            v.kv_bytes_per_token_per_device(1, 2),
+            v.kv_bytes_per_token_per_device(2, 2),
+            v.kv_bytes_per_token_per_device(4, 2),
+        );
+    }
+    println!("(paper: mha 8192/4096/2048, gqa4 2048/1024/512, gta4 1152/640/384,");
+    println!("        gla2 1152/640/640, mla 1152/1152/1152)");
+
+    println!("\nTable 26 — llama-3-8B shapes (h_q=32, h_kv=8, d_h=128), units of d_h:");
+    println!("{:<8} {:>8} {:>8} {:>8} {:>8}", "variant", "TP=1", "TP=2", "TP=4", "TP=8");
+    let dh = 128usize;
+    let vars = [
+        Variant::Mha { h_q: 32, d_h: dh },
+        Variant::Gqa { h_q: 32, h_kv: 8, d_h: dh },
+        Variant::Mqa { h_q: 32, d_h: dh },
+        Variant::Mla { h_q: 32, d_h: dh, d_c: 4 * dh, d_r: dh / 2 },
+        Variant::Gla { h_q: 32, h_c: 2, d_h: dh, d_c: 2 * dh, d_r: dh / 2 },
+        Variant::Gta { h_q: 32, h_kv: 8, d_h: dh },
+    ];
+    for v in vars {
+        let f = |tp| v.kv_bytes_per_token_per_device(tp, 1) as f64 / dh as f64;
+        println!("{:<8} {:>8} {:>8} {:>8} {:>8}", v.name(), f(1), f(2), f(4), f(8));
+    }
+}

@@ -1,0 +1,34 @@
+//! Table 1 — arithmetic intensity per attention variant: exact closed
+//! forms at several context lengths plus the asymptote (L >> h_q).
+//!
+//!     cargo bench --bench table1_intensity
+
+use gla_serve::analytical::{table1_general, table1_intensity};
+use gla_serve::attention::{paper_variants, Variant};
+
+fn main() {
+    let h_q = 128;
+    let d_h = 128;
+    println!("Table 1 — arithmetic intensity (FLOPs/byte), h_q={h_q}, d_h={d_h}");
+    println!("{:<8} {:>10} {:>10} {:>10} {:>12} {:>10}", "variant", "L=4K", "L=32K", "L=128K", "asymptote", "2gq/mkv");
+    for v in paper_variants(h_q, d_h) {
+        let asym = match v {
+            Variant::Mla { h_q, .. } => 2.0 * h_q as f64,
+            Variant::Gla { h_q, h_c, .. } => 2.0 * (h_q / h_c) as f64,
+            ref v => 2.0 * v.group_size() as f64 / v.m_kv() as f64,
+        };
+        println!(
+            "{:<8} {:>10.2} {:>10.2} {:>10.2} {:>12.1} {:>10.1}",
+            v.name(),
+            table1_intensity(&v, 4096.0),
+            table1_intensity(&v, 32768.0),
+            table1_intensity(&v, 131072.0),
+            table1_intensity(&v, 1e12),
+            asym,
+        );
+    }
+    println!("\ngeneral formulation 2L/(2 + (m_kv/g_q)L):");
+    for (mkv, gq) in [(2.0, 4.0), (1.0, 4.0), (2.0, 32.0), (1.0, 64.0)] {
+        println!("  m_kv={mkv} g_q={gq:>4}: {:.2}", table1_general(mkv, gq, 1e9));
+    }
+}

@@ -1,0 +1,52 @@
+//! Tables 27–34 + Figs. 7–12 — the full service-level sweep: E2E latency,
+//! TTFT, ITL and throughput at concurrency 16/64/128 for every parallel
+//! layout of the paper (pure TP8, TP4+DP2, TP2+DP4), 8K/4K lengths, plus
+//! the long-context rows (32K/64K prefill) of Table 33.
+//!
+//!     cargo bench --bench tables27_serving_sweep
+
+use gla_serve::config::{ServingConfig, DSV2};
+use gla_serve::engine::run_benchmark;
+use gla_serve::hardware::DeviceModel;
+use gla_serve::workload::{generate, LengthDist};
+
+fn row(label: &str, variant: &str, tp: usize, dp: usize, prompt: usize, decode: usize, conc: usize, n: usize) {
+    let m = DSV2;
+    let mut met = run_benchmark(
+        m,
+        m.variant(variant),
+        ServingConfig::with_parallelism(tp, dp),
+        DeviceModel::h100_serving(),
+        &generate(LengthDist::Fixed { prompt, decode }, n, 42),
+        conc,
+    );
+    let (e2e, ttft, itl, tput) = met.paper_row();
+    println!(
+        "{label:<22} {:>4}K/{:<4} {conc:>5} {e2e:>12.1} {ttft:>10.2} {itl:>10.1} {tput:>12.0}",
+        prompt / 1024, decode,
+    );
+}
+
+fn main() {
+    println!("Tables 27-32 — 8K/4K sweep (median E2E s / TTFT s / ITL ms / tok/s)");
+    println!("{:<22} {:>9} {:>5} {:>12} {:>10} {:>10} {:>12}", "config", "P/D", "conc", "E2E(s)", "TTFT(s)", "ITL(ms)", "tok/s");
+    for conc in [16usize, 64, 128] {
+        for (label, v, tp, dp) in [
+            ("GLA-8 (TP8)", "gla8", 8usize, 1usize),
+            ("MLA (TP8)", "mla", 8, 1),
+            ("GLA-4 (TP4,DP2)", "gla4", 4, 2),
+            ("MLA (TP4,DP2)", "mla", 4, 2),
+            ("GLA-2 (TP2,DP4)", "gla2", 2, 4),
+            ("MLA (TP2,DP4)", "mla", 2, 4),
+        ] {
+            row(label, v, tp, dp, 8192, 4096, conc, 256);
+        }
+        println!();
+    }
+    println!("Table 33 — long-context: GLA-2 pure TP8 vs MLA hybrid (conc 16)");
+    row("GLA-2 (TP8)", "gla2", 8, 1, 32_768, 4096, 16, 96);
+    row("MLA (TP2,DP4)", "mla", 2, 4, 32_768, 4096, 16, 96);
+    row("GLA-2 (TP8)", "gla2", 8, 1, 65_536, 4096, 16, 96);
+    row("MLA (TP2,DP4)", "mla", 2, 4, 65_536, 4096, 16, 96);
+    println!("\npaper headline @conc64 8K/4K: GLA-8 179s/12s/38ms/1461 vs MLA 381s/193s/43ms/859.");
+}

@@ -1,0 +1,34 @@
+//! Tables 44–45 — attention-kernel latency on two GPUs: MLA replicated
+//! (DP, each GPU full latent) vs GLA-2 sharded (TP=2, half latent each),
+//! batch 1 sweep plus the imbalanced 16-sequence batch of Table 45.
+//!
+//!     cargo bench --bench tables44_kernel_latency
+
+use gla_serve::config::KERNEL_BENCH;
+use gla_serve::hardware::DeviceModel;
+
+fn main() {
+    let m = KERNEL_BENCH;
+    let dm = DeviceModel::h100_optimized();
+    let mla = m.variant("mla");
+    let gla = m.variant("gla2");
+    println!("Table 44 — kernel latency (us), batch 1, 2 GPUs");
+    println!("{:>8} {:>12} {:>12} {:>8}", "seqlen", "MLA (DP)", "GLA (TP=2)", "ratio");
+    for l in [2048usize, 8192, 32_768, 131_072] {
+        let t_m = dm.attn_decode_time(&m, &mla, &[l], 1, 1) * 1e6;
+        let t_g = dm.attn_decode_time(&m, &gla, &[l], 1, 2) * 1e6;
+        println!("{l:>8} {t_m:>12.1} {t_g:>12.1} {:>7.2}x", t_m / t_g);
+    }
+    println!("(paper: 15.0/16.1, 20.8/19.1, 35.9/27.6, 81.0/55.0)");
+
+    println!("\nTable 45 — imbalanced batch [1024]*15 + [long]");
+    println!("{:>8} {:>12} {:>12} {:>8}", "long", "MLA (DP)", "GLA (TP=2)", "ratio");
+    for long in [8192usize, 16_384, 32_768, 65_536] {
+        let mut lens = vec![1024usize; 15];
+        lens.push(long);
+        let t_m = dm.attn_decode_time(&m, &mla, &lens, 1, 1) * 1e6;
+        let t_g = dm.attn_decode_time(&m, &gla, &lens, 1, 2) * 1e6;
+        println!("{long:>8} {t_m:>12.1} {t_g:>12.1} {:>7.2}x", t_m / t_g);
+    }
+    println!("(paper: 23.8/25.4, 29.8/26.2, 41.1/30.6, 56.0/42.6)");
+}

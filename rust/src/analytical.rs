@@ -1,0 +1,146 @@
+//! Closed-form analytical models: Table 1 arithmetic intensities, the
+//! roofline of Fig. 3 / Fig. 15 (right), and the KV-bytes tables.
+//!
+//! These are *exact* formulas from the paper, re-derived and unit-tested
+//! against the paper's printed values; the device timing model
+//! (`hardware::device`) builds on the same byte/FLOP counters in
+//! `attention::Variant`.
+
+use crate::attention::Variant;
+use crate::hardware::GpuSpec;
+
+/// Table 1 closed forms (normalized units, bf16, the paper's notation).
+/// `l` is KV length; returns FLOPs per byte.
+pub fn table1_intensity(v: &Variant, l: f64) -> f64 {
+    let hq = v.h_q() as f64;
+    let gq = v.group_size() as f64;
+    match v {
+        Variant::Mha { .. } => l / (1.0 + l),
+        Variant::Mqa { .. } => l * hq / (hq + l),
+        Variant::Gqa { .. } => l * hq / (hq + (hq / gq) * l),
+        Variant::Gta { .. } => 2.0 * l * hq / (2.0 * hq + (hq / gq) * l),
+        Variant::Mla { .. } => l / (1.0 + l / (2.0 * hq)),
+        Variant::Gla { .. } => l / (1.0 + l / (2.0 * gq)),
+    }
+}
+
+/// Table 1 general formulation: 2L / (2 + (m_kv / g_q) L) ≈ 2 g_q / m_kv.
+pub fn table1_general(m_kv: f64, g_q: f64, l: f64) -> f64 {
+    2.0 * l / (2.0 + (m_kv / g_q) * l)
+}
+
+/// One point on a roofline plot.
+#[derive(Debug, Clone, Copy)]
+pub struct RooflinePoint {
+    pub intensity: f64,
+    /// attainable TFLOP/s at this intensity on the given device
+    pub attainable_tflops: f64,
+    /// true when intensity exceeds the ridge (compute-bound)
+    pub compute_bound: bool,
+}
+
+/// Fig. 3: attainable FLOPs = min(peak, AI × BW).
+pub fn roofline(gpu: &GpuSpec, intensity: f64) -> RooflinePoint {
+    let bw_roof = intensity * gpu.hbm_bw_tbps * 1e12;
+    let attainable = bw_roof.min(gpu.peak_bf16_tflops * 1e12);
+    RooflinePoint {
+        intensity,
+        attainable_tflops: attainable / 1e12,
+        compute_bound: intensity >= gpu.ridge_point(),
+    }
+}
+
+/// Decode-attention roofline position of a variant (Fig. 3): exact
+/// byte/FLOP counting at context `l` and query length `lq`.
+pub fn variant_roofline(gpu: &GpuSpec, v: &Variant, l: usize, lq: usize) -> RooflinePoint {
+    let ai = v.arithmetic_intensity(l, lq, 2) * lq as f64 / lq as f64;
+    roofline(gpu, ai)
+}
+
+/// Fig. 3's key claim, as a predicate: with h_q = 128, MLA at Lq=1 sits
+/// near the ridge, GLA-2 at half the intensity; at Lq=2 MLA crosses into
+/// compute-bound while GLA-2 reaches the inflection.
+pub fn fig3_positions(gpu: &GpuSpec, l: usize) -> Vec<(String, usize, RooflinePoint)> {
+    let mla = Variant::Mla { h_q: 128, d_h: 128, d_c: 512, d_r: 64 };
+    let gla = Variant::Gla { h_q: 128, h_c: 2, d_h: 128, d_c: 256, d_r: 64 };
+    let gqa = Variant::Gqa { h_q: 128, h_kv: 8, d_h: 128 };
+    let mut out = Vec::new();
+    for lq in [1usize, 2] {
+        for (name, v) in [("MLA", mla), ("GLA-2", gla), ("GQA-8", gqa)] {
+            // intensity grows ∝ lq: the same cache bytes feed lq query rows
+            let ai = v.arithmetic_intensity(l, lq, 2);
+            out.push((name.to_string(), lq, roofline(gpu, ai)));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::H100;
+
+    fn v128(name: &str) -> Variant {
+        Variant::parse(name, 128, 128).unwrap()
+    }
+
+    #[test]
+    fn table1_asymptotes() {
+        // h_q = 128: GQA-4 means 4 KV heads -> g_q = 32; GTA doubles it.
+        let l = 1e9;
+        assert!((table1_intensity(&v128("mha"), l) - 1.0).abs() < 1e-3);
+        assert!((table1_intensity(&v128("mqa"), l) - 128.0).abs() < 0.1);
+        assert!((table1_intensity(&v128("gqa4"), l) - 32.0).abs() < 1e-2);
+        assert!((table1_intensity(&v128("gta4"), l) - 64.0).abs() < 1e-2);
+        assert!((table1_intensity(&v128("mla"), l) - 256.0).abs() < 0.1);
+        // GLA with 2 latent heads: 2 g_q = h_q = 128
+        assert!((table1_intensity(&v128("gla2"), l) - 128.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn general_form_matches_specializations() {
+        let l = 1e8;
+        // GQA: m_kv=2 -> ≈ g_q
+        assert!((table1_general(2.0, 4.0, l) - 4.0).abs() < 1e-3);
+        // GTA: m_kv=1 -> ≈ 2 g_q
+        assert!((table1_general(1.0, 4.0, l) - 8.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn h100_ridge_is_295() {
+        let r = H100.ridge_point();
+        assert!((r - 295.0).abs() < 2.0, "ridge {r}");
+    }
+
+    #[test]
+    fn fig3_mla_near_ridge_gla_on_io_roof() {
+        // Paper Fig. 3 left: MLA AI ≈ 2 h_q = 256 (near ridge ~295),
+        // GLA-2 ≈ h_q = 128, memory-bound.
+        let pos = fig3_positions(&H100, 1 << 16);
+        let get = |n: &str, lq: usize| {
+            pos.iter().find(|(m, q, _)| m == n && *q == lq).unwrap().2
+        };
+        let mla1 = get("MLA", 1);
+        assert!(mla1.intensity > 200.0 && mla1.intensity < 295.0, "{}", mla1.intensity);
+        assert!(!mla1.compute_bound);
+        let gla1 = get("GLA-2", 1);
+        assert!(gla1.intensity > 100.0 && gla1.intensity < 160.0);
+        // Fig. 3 right: at Lq=2 MLA crosses the roof; GLA-2 at inflection
+        let mla2 = get("MLA", 2);
+        assert!(mla2.compute_bound, "MLA lq=2 must be compute-bound: {}", mla2.intensity);
+        let gla2 = get("GLA-2", 2);
+        assert!(
+            (gla2.intensity - H100.ridge_point()).abs() / H100.ridge_point() < 0.25,
+            "GLA-2 lq=2 near the inflection: {}",
+            gla2.intensity
+        );
+    }
+
+    #[test]
+    fn roofline_min_rule() {
+        let p = roofline(&H100, 1.0);
+        assert!((p.attainable_tflops - 3.35).abs() < 0.01); // 1 FLOP/B × 3.35 TB/s
+        let p = roofline(&H100, 10_000.0);
+        assert!((p.attainable_tflops - H100.peak_bf16_tflops).abs() < 1e-6);
+    }
+}

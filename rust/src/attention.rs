@@ -1,0 +1,361 @@
+//! Attention-variant algebra: shapes, cache layout, bytes/FLOPs counting.
+//!
+//! This is the single source of truth the analytical models, the device
+//! timing model and the serving engine all consume. The six variants match
+//! the paper (§2.1/§3.3): MHA, MQA, GQA, GTA, MLA, GLA.
+//!
+//! Conventions (paper Table 1): `h_q` query heads, `h_kv` distinct KV (or
+//! latent) heads, group size `g_q = h_q / h_kv`, per-head dim `d_h`, latent
+//! dim `d_c` per latent head, decoupled-RoPE dim `d_r`, KV multiplicity
+//! `m_kv ∈ {1, 2}` (1 when the same loaded tile serves as both K and V).
+
+/// One attention variant with concrete head shapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Multi-Head Attention: every query head has its own K and V head.
+    Mha { h_q: usize, d_h: usize },
+    /// Multi-Query Attention: one shared K and V head.
+    Mqa { h_q: usize, d_h: usize },
+    /// Grouped-Query Attention with `h_kv` distinct KV heads.
+    Gqa { h_q: usize, h_kv: usize, d_h: usize },
+    /// Grouped-Tied Attention (§3.3.1): `h_kv` tied-KV heads plus a single
+    /// broadcast half-width RoPE key head.
+    Gta { h_q: usize, h_kv: usize, d_h: usize },
+    /// Multi-head Latent Attention: single latent head of dim `d_c`
+    /// (DeepSeek default 4·d_h) + decoupled RoPE of dim `d_r`.
+    Mla { h_q: usize, d_h: usize, d_c: usize, d_r: usize },
+    /// Grouped Latent Attention (§3.3.2): `h_c` latent heads of dim `d_c`
+    /// each (paper default 2·d_h) + shared decoupled RoPE of dim `d_r`.
+    Gla { h_q: usize, h_c: usize, d_h: usize, d_c: usize, d_r: usize },
+}
+
+impl Variant {
+    /// Paper-default shapes from `(kind, h_q, d_h)`; `n` is the suffix in
+    /// e.g. "gqa4"/"gla2". `d_r` defaults to d_h/2 (the paper's kernel and
+    /// KV-cache-table configuration, e.g. 64 for d_h = 128).
+    pub fn parse(name: &str, h_q: usize, d_h: usize) -> Option<Variant> {
+        let (kind, n) = split_suffix(name);
+        Some(match kind {
+            "mha" => Variant::Mha { h_q, d_h },
+            "mqa" => Variant::Mqa { h_q, d_h },
+            "gqa" => Variant::Gqa { h_q, h_kv: n.unwrap_or(4), d_h },
+            "gta" => Variant::Gta { h_q, h_kv: n.unwrap_or(4), d_h },
+            "mla" => Variant::Mla { h_q, d_h, d_c: 4 * d_h, d_r: d_h / 2 },
+            "gla" => Variant::Gla {
+                h_q,
+                h_c: n.unwrap_or(2),
+                d_h,
+                d_c: 2 * d_h,
+                d_r: d_h / 2,
+            },
+            _ => return None,
+        })
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Variant::Mha { .. } => "mha",
+            Variant::Mqa { .. } => "mqa",
+            Variant::Gqa { .. } => "gqa",
+            Variant::Gta { .. } => "gta",
+            Variant::Mla { .. } => "mla",
+            Variant::Gla { .. } => "gla",
+        }
+    }
+
+    /// Display name with the head-count suffix, e.g. "gqa4", "gla2".
+    pub fn name(&self) -> String {
+        match self {
+            Variant::Gqa { h_kv, .. } | Variant::Gta { h_kv, .. } => {
+                format!("{}{}", self.kind(), h_kv)
+            }
+            Variant::Gla { h_c, .. } => format!("gla{h_c}"),
+            _ => self.kind().to_string(),
+        }
+    }
+
+    pub fn h_q(&self) -> usize {
+        match *self {
+            Variant::Mha { h_q, .. }
+            | Variant::Mqa { h_q, .. }
+            | Variant::Gqa { h_q, .. }
+            | Variant::Gta { h_q, .. }
+            | Variant::Mla { h_q, .. }
+            | Variant::Gla { h_q, .. } => h_q,
+        }
+    }
+
+    /// Distinct cached heads: KV heads (GQA family / GTA) or latent heads.
+    pub fn h_kv(&self) -> usize {
+        match *self {
+            Variant::Mha { h_q, .. } => h_q,
+            Variant::Mqa { .. } | Variant::Mla { .. } => 1,
+            Variant::Gqa { h_kv, .. } | Variant::Gta { h_kv, .. } => h_kv,
+            Variant::Gla { h_c, .. } => h_c,
+        }
+    }
+
+    pub fn d_h(&self) -> usize {
+        match *self {
+            Variant::Mha { d_h, .. }
+            | Variant::Mqa { d_h, .. }
+            | Variant::Gqa { d_h, .. }
+            | Variant::Gta { d_h, .. }
+            | Variant::Mla { d_h, .. }
+            | Variant::Gla { d_h, .. } => d_h,
+        }
+    }
+
+    /// g_q — queries per distinct cached head (Table 1).
+    pub fn group_size(&self) -> usize {
+        self.h_q() / self.h_kv()
+    }
+
+    /// m_kv — 1 when one loaded tile serves as both K and V (GTA, MLA, GLA),
+    /// 2 when K and V are distinct tensors (MHA, MQA, GQA).
+    pub fn m_kv(&self) -> usize {
+        match self {
+            Variant::Mha { .. } | Variant::Mqa { .. } | Variant::Gqa { .. } => 2,
+            Variant::Gta { .. } | Variant::Mla { .. } | Variant::Gla { .. } => 1,
+        }
+    }
+
+    pub fn is_latent(&self) -> bool {
+        matches!(self, Variant::Mla { .. } | Variant::Gla { .. })
+    }
+
+    /// Width of each cached "main" head (d_h, or d_c for latent variants).
+    pub fn main_head_dim(&self) -> usize {
+        match *self {
+            Variant::Mla { d_c, .. } | Variant::Gla { d_c, .. } => d_c,
+            v => v.d_h(),
+        }
+    }
+
+    /// Width of the broadcast auxiliary head (RoPE keys), 0 if none.
+    pub fn aux_dim(&self) -> usize {
+        match *self {
+            Variant::Gta { d_h, .. } => d_h / 2,
+            Variant::Mla { d_r, .. } | Variant::Gla { d_r, .. } => d_r,
+            _ => 0,
+        }
+    }
+
+    /// Cached elements per token per layer, unsharded (paper §3.2).
+    pub fn kv_elems_per_token(&self) -> usize {
+        self.m_kv() * self.h_kv() * self.main_head_dim()
+            + if self.m_kv() == 2 { 0 } else { self.aux_dim() }
+            + if matches!(self, Variant::Gta { .. }) { 0 } else { 0 }
+    }
+
+    /// Cached heads resident on one of `tp` ranks, with the paper's
+    /// duplication semantics: heads are split when h_kv >= tp, otherwise
+    /// each rank still needs at least one full head (duplication).
+    /// MLA's single latent head is replicated on every rank.
+    pub fn heads_per_rank(&self, tp: usize) -> usize {
+        div_ceil(self.h_kv(), tp).max(1)
+    }
+
+    /// KV-cache bytes per token per device for `tp`-way tensor parallelism
+    /// (Tables 15 / 26). The broadcast RoPE head is replicated per rank.
+    pub fn kv_bytes_per_token_per_device(&self, tp: usize, dtype_bytes: usize) -> usize {
+        let heads = self.heads_per_rank(tp);
+        let main = self.m_kv() * heads * self.main_head_dim();
+        let aux = if self.m_kv() == 1 { self.aux_dim() } else { 0 };
+        (main + aux) * dtype_bytes
+    }
+
+    /// Unsharded KV bytes/token (TP = 1).
+    pub fn kv_bytes_per_token(&self, dtype_bytes: usize) -> usize {
+        self.kv_bytes_per_token_per_device(1, dtype_bytes)
+    }
+
+    /// Duplication factor D = ceil(N · g_q / h_q) ∈ [1, N] (§3.2).
+    pub fn duplication_factor(&self, n_ranks: usize) -> usize {
+        div_ceil(n_ranks * self.group_size(), self.h_q()).clamp(1, n_ranks)
+    }
+
+    /// Zero-redundancy bound: D == 1 ⇔ g_q <= floor(h_q / N) (§3.2).
+    pub fn zero_redundancy(&self, n_ranks: usize) -> bool {
+        self.duplication_factor(n_ranks) == 1
+    }
+
+    /// Decode-attention FLOPs for one token step of one layer, one query
+    /// position (`lq` query tokens), context length `l`: QK^T + PV.
+    /// Latent variants attend in absorbed form, so the "K" width is d_c+d_r
+    /// and the "V" width is d_c — this is MLA's 2× FLOP/byte trick made
+    /// explicit.
+    pub fn decode_attn_flops(&self, l: usize, lq: usize) -> u64 {
+        let hq = self.h_q() as u64;
+        let (dk, dv) = match *self {
+            Variant::Mla { d_c, d_r, .. } | Variant::Gla { d_c, d_r, .. } => (d_c + d_r, d_c),
+            Variant::Gta { d_h, .. } => (d_h, d_h),
+            v => (v.d_h(), v.d_h()),
+        };
+        // 2 FLOPs per MAC; QK^T: hq*l*dk, softmax*V: hq*l*dv, per query row
+        2 * hq * (l as u64) * (lq as u64) * (dk as u64 + dv as u64)
+    }
+
+    /// Bytes of cache loaded from HBM for one decode step of one layer on
+    /// one device (`tp` ranks), context `l`.
+    pub fn decode_cache_bytes(&self, l: usize, tp: usize, dtype_bytes: usize) -> u64 {
+        self.kv_bytes_per_token_per_device(tp, dtype_bytes) as u64 * l as u64
+    }
+
+    /// Exact arithmetic intensity of the decode attention of this variant
+    /// (FLOPs per byte of *cache* traffic), single device, query length lq.
+    pub fn arithmetic_intensity(&self, l: usize, lq: usize, dtype_bytes: usize) -> f64 {
+        self.decode_attn_flops(l, lq) as f64 / self.decode_cache_bytes(l, 1, dtype_bytes) as f64
+    }
+
+    /// Asymptotic arithmetic intensity 2·g_q/m_kv · (bf16 normalization),
+    /// Table 1 right column (valid L >> h_q, lq = 1).
+    pub fn intensity_asymptote(&self) -> f64 {
+        match *self {
+            // latent variants: K width d_c+d_r ≈ d_c == V width; tile d_c
+            Variant::Mla { h_q, .. } => 2.0 * h_q as f64,
+            Variant::Gla { h_q, h_c, .. } => 2.0 * (h_q / h_c) as f64,
+            ref v => 2.0 * v.group_size() as f64 / v.m_kv() as f64,
+        }
+    }
+}
+
+fn split_suffix(name: &str) -> (&str, Option<usize>) {
+    let i = name.find(|c: char| c.is_ascii_digit()).unwrap_or(name.len());
+    let (kind, num) = name.split_at(i);
+    (kind, num.parse().ok())
+}
+
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// The variant ladder benchmarked throughout the paper.
+pub fn paper_variants(h_q: usize, d_h: usize) -> Vec<Variant> {
+    ["mha", "gqa4", "mqa", "gta4", "mla", "gla2"]
+        .iter()
+        .map(|n| Variant::parse(n, h_q, d_h).unwrap())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xl(name: &str) -> Variant {
+        // XL config of Table 6: h_q = 16, d_h = 128
+        Variant::parse(name, 16, 128).unwrap()
+    }
+
+    #[test]
+    fn table15_kv_bytes_per_token_tp1() {
+        // Paper Table 15 (bf16 = 2 bytes), unsharded
+        assert_eq!(xl("mha").kv_bytes_per_token(2), 8192);
+        assert_eq!(xl("gqa4").kv_bytes_per_token(2), 2048);
+        assert_eq!(xl("gta4").kv_bytes_per_token(2), 1152);
+        assert_eq!(xl("gla2").kv_bytes_per_token(2), 1152);
+        assert_eq!(xl("mla").kv_bytes_per_token(2), 1152);
+    }
+
+    #[test]
+    fn table15_kv_bytes_per_token_tp2_tp4() {
+        assert_eq!(xl("mha").kv_bytes_per_token_per_device(2, 2), 4096);
+        assert_eq!(xl("gqa4").kv_bytes_per_token_per_device(2, 2), 1024);
+        assert_eq!(xl("gta4").kv_bytes_per_token_per_device(2, 2), 640);
+        assert_eq!(xl("gla2").kv_bytes_per_token_per_device(2, 2), 640);
+        assert_eq!(xl("mla").kv_bytes_per_token_per_device(2, 2), 1152);
+        assert_eq!(xl("mha").kv_bytes_per_token_per_device(4, 2), 2048);
+        assert_eq!(xl("gqa4").kv_bytes_per_token_per_device(4, 2), 512);
+        assert_eq!(xl("gta4").kv_bytes_per_token_per_device(4, 2), 384);
+        // GLA-2 with TP=4: 2 latent heads cannot split 4 ways -> 640 stays
+        assert_eq!(xl("gla2").kv_bytes_per_token_per_device(4, 2), 640);
+        assert_eq!(xl("mla").kv_bytes_per_token_per_device(4, 2), 1152);
+    }
+
+    #[test]
+    fn table26_llama3_8b_shapes() {
+        // Table 26: h_q = 32, h_kv = 8, per-token cache in units of d_h.
+        let dh = 128;
+        let mha = Variant::Mha { h_q: 32, d_h: dh };
+        let gqa = Variant::Gqa { h_q: 32, h_kv: 8, d_h: dh };
+        let mqa = Variant::Mqa { h_q: 32, d_h: dh };
+        let mla = Variant::Mla { h_q: 32, d_h: dh, d_c: 4 * dh, d_r: dh / 2 };
+        let gla = Variant::Gla { h_q: 32, h_c: 2, d_h: dh, d_c: 2 * dh, d_r: dh / 2 };
+        let gta = Variant::Gta { h_q: 32, h_kv: 8, d_h: dh };
+        let in_dh = |v: &Variant, tp: usize| v.kv_bytes_per_token_per_device(tp, 1) as f64 / dh as f64;
+        assert_eq!(in_dh(&mha, 1), 64.0);
+        assert_eq!(in_dh(&mha, 2), 32.0);
+        assert_eq!(in_dh(&gqa, 1), 16.0);
+        assert_eq!(in_dh(&gqa, 8), 2.0);
+        assert_eq!(in_dh(&mqa, 1), 2.0);
+        assert_eq!(in_dh(&mqa, 4), 2.0); // replicated
+        assert_eq!(in_dh(&mla, 1), 4.5);
+        assert_eq!(in_dh(&mla, 8), 4.5); // replicated
+        assert_eq!(in_dh(&gla, 1), 4.5);
+        assert_eq!(in_dh(&gla, 2), 2.5);
+        assert_eq!(in_dh(&gla, 8), 2.5);
+        assert_eq!(in_dh(&gta, 1), 8.5);
+        assert_eq!(in_dh(&gta, 2), 4.5);
+        assert_eq!(in_dh(&gta, 4), 2.5);
+        assert_eq!(in_dh(&gta, 8), 1.5);
+    }
+
+    #[test]
+    fn intensity_asymptotes_table1() {
+        // Table 1 bottom row: MHA≈1, GQA≈g_q, MQA≈h_q, GTA≈2g_q, MLA≈2h_q,
+        // GLA≈2g_q (= h_q for two latent heads).
+        assert_eq!(xl("mha").intensity_asymptote(), 1.0 * 2.0 / 2.0);
+        assert_eq!(xl("mqa").intensity_asymptote(), 16.0);
+        assert_eq!(xl("gqa4").intensity_asymptote(), 4.0);
+        assert_eq!(xl("gta4").intensity_asymptote(), 8.0);
+        assert_eq!(xl("mla").intensity_asymptote(), 32.0);
+        assert_eq!(xl("gla2").intensity_asymptote(), 16.0);
+    }
+
+    #[test]
+    fn exact_intensity_approaches_asymptote() {
+        for v in paper_variants(128, 128) {
+            let exact = v.arithmetic_intensity(1 << 20, 1, 2);
+            let asym = v.intensity_asymptote();
+            let rel = (exact - asym).abs() / asym;
+            // latent variants carry the +d_r correction; allow 15%
+            assert!(rel < 0.15, "{}: exact {exact} vs asym {asym}", v.name());
+        }
+    }
+
+    #[test]
+    fn duplication_factor_bounds() {
+        let gla8 = Variant::Gla { h_q: 128, h_c: 8, d_h: 128, d_c: 256, d_r: 64 };
+        assert_eq!(gla8.duplication_factor(8), 1); // zero redundancy at TP=8
+        assert!(gla8.zero_redundancy(8));
+        let mla = xl("mla");
+        assert_eq!(mla.duplication_factor(8), 8); // fully replicated
+        assert!(!mla.zero_redundancy(2));
+        let gqa = xl("gqa4");
+        assert!(gqa.zero_redundancy(4));
+        assert!(!gqa.zero_redundancy(8)); // 4 kv heads on 8 ranks duplicate
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for n in ["mha", "mqa", "gqa4", "gqa8", "gta4", "mla", "gla2", "gla8"] {
+            let v = Variant::parse(n, 128, 128).unwrap();
+            assert_eq!(v.name(), *n);
+        }
+        assert!(Variant::parse("bogus", 8, 64).is_none());
+    }
+
+    #[test]
+    fn gta_halves_gqa_cache() {
+        let gqa = xl("gqa4");
+        let gta = xl("gta4");
+        let r = gta.kv_bytes_per_token(2) as f64 / gqa.kv_bytes_per_token(2) as f64;
+        assert!(r > 0.5 && r < 0.6, "GTA ≈ half GQA cache + rope half: {r}");
+    }
+
+    #[test]
+    fn speculative_flops_scale_with_lq() {
+        let v = xl("gla2");
+        assert_eq!(v.decode_attn_flops(4096, 2), 2 * v.decode_attn_flops(4096, 1));
+    }
+}

@@ -1,0 +1,176 @@
+//! Model and serving configurations.
+//!
+//! Mirrors `python/compile/configs.py` (the artifact `.meta.txt` files are
+//! the authoritative shapes for executed models; these structs additionally
+//! carry the paper-scale ladders used by the analytical/simulated
+//! experiments, including the DeepSeek-V2-proportioned serving config of
+//! §B.6).
+
+use crate::attention::Variant;
+
+/// Transformer shapes relevant to the performance models.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub h_q: usize,
+    pub d_h: usize,
+    pub max_len: usize,
+    /// bytes per cached element (2 = bf16/fp8-ish serving, 4 = f32 CPU)
+    pub dtype_bytes: usize,
+    /// total parameter count actually resident per model replica; used by
+    /// the device model for weight-streaming traffic. For MoE models this
+    /// is the *active* parameter count (21B for DeepSeek-V2).
+    pub active_params: u64,
+    /// full parameter count (== active for dense models)
+    pub total_params: u64,
+    /// bytes per weight element (1 = FP8 serving, 2 = bf16, 4 = f32 CPU)
+    pub weight_dtype_bytes: usize,
+    /// MoE routing shape (0 experts = dense). Drives the expert-coverage
+    /// weight-streaming model: with batch decoding, the fraction of expert
+    /// weights touched per step is 1 - (1 - topk/E)^tokens.
+    pub moe_experts: usize,
+    pub moe_topk: usize,
+}
+
+impl ModelConfig {
+    pub fn variant(&self, name: &str) -> Variant {
+        Variant::parse(name, self.h_q, self.d_h)
+            .unwrap_or_else(|| panic!("unknown variant {name}"))
+    }
+}
+
+/// Paper Table 6 ladder.
+pub const SMALL: ModelConfig = ModelConfig {
+    name: "small", vocab: 128_256, d_model: 768, n_layers: 12, d_ff: 2048,
+    h_q: 12, d_h: 64, max_len: 2048, dtype_bytes: 2, active_params: 183_650_000,
+    total_params: 183_650_000, weight_dtype_bytes: 2, moe_experts: 0, moe_topk: 0,
+};
+pub const MEDIUM: ModelConfig = ModelConfig {
+    name: "medium", vocab: 128_256, d_model: 1024, n_layers: 24, d_ff: 2736,
+    h_q: 16, d_h: 64, max_len: 2048, dtype_bytes: 2, active_params: 433_770_000,
+    total_params: 433_770_000, weight_dtype_bytes: 2, moe_experts: 0, moe_topk: 0,
+};
+pub const LARGE: ModelConfig = ModelConfig {
+    name: "large", vocab: 128_256, d_model: 1536, n_layers: 24, d_ff: 4096,
+    h_q: 16, d_h: 96, max_len: 2048, dtype_bytes: 2, active_params: 876_550_000,
+    total_params: 876_550_000, weight_dtype_bytes: 2, moe_experts: 0, moe_topk: 0,
+};
+pub const XL: ModelConfig = ModelConfig {
+    name: "xl", vocab: 128_256, d_model: 2048, n_layers: 24, d_ff: 5464,
+    h_q: 16, d_h: 128, max_len: 2048, dtype_bytes: 2, active_params: 1_471_120_000,
+    total_params: 1_471_120_000, weight_dtype_bytes: 2, moe_experts: 0, moe_topk: 0,
+};
+
+/// The §5.2/§B.6 serving substrate: DeepSeek-Coder-V2 Base proportions
+/// (236B total / 21B active, FP8 weights), h_q = 128, d_h = 128,
+/// MLA d_c = 512 / GLA-h_c d_c = 256, RoPE dim 64, 60 layers.
+pub const DSV2: ModelConfig = ModelConfig {
+    name: "dsv2", vocab: 102_400, d_model: 5120, n_layers: 60, d_ff: 12_288,
+    h_q: 128, d_h: 128, max_len: 163_840, dtype_bytes: 2, active_params: 21_000_000_000,
+    total_params: 236_000_000_000, weight_dtype_bytes: 1, moe_experts: 160, moe_topk: 6,
+};
+
+/// The kernel-benchmark configuration of Fig. 4 (left) / Fig. 15:
+/// 128 query heads, MLA latent 512 / GLA 2×256, RoPE 64, bf16.
+pub const KERNEL_BENCH: ModelConfig = ModelConfig {
+    name: "kernel-bench", vocab: 0, d_model: 5120, n_layers: 1, d_ff: 0,
+    h_q: 128, d_h: 128, max_len: 1 << 20, dtype_bytes: 2, active_params: 0,
+    total_params: 0, weight_dtype_bytes: 2, moe_experts: 0, moe_topk: 0,
+};
+
+/// Execution-scale config matching the AOT artifacts (python `tiny`).
+pub const TINY: ModelConfig = ModelConfig {
+    name: "tiny", vocab: 256, d_model: 128, n_layers: 4, d_ff: 352,
+    h_q: 8, d_h: 16, max_len: 512, dtype_bytes: 4, active_params: 900_000,
+    total_params: 900_000, weight_dtype_bytes: 4, moe_experts: 0, moe_topk: 0,
+};
+
+pub fn by_name(name: &str) -> Option<&'static ModelConfig> {
+    match name {
+        "small" => Some(&SMALL),
+        "medium" => Some(&MEDIUM),
+        "large" => Some(&LARGE),
+        "xl" => Some(&XL),
+        "dsv2" => Some(&DSV2),
+        "tiny" => Some(&TINY),
+        _ => None,
+    }
+}
+
+/// Serving-side knobs (matches the paper's SGLang benchmark setup, §B.6).
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// tensor-parallel degree per replica
+    pub tp: usize,
+    /// data-parallel replicas (attention-only DP in the hybrid setup)
+    pub dp: usize,
+    /// hybrid TP+DP barrier: the MoE all-gather synchronizes all replicas
+    /// every model step (the straggler mechanism of §B.6.3)
+    pub hybrid_barrier: bool,
+    /// chunked-prefill tile (paper: 8192)
+    pub prefill_chunk: usize,
+    /// max decode tokens per formed batch (scheduler token budget)
+    pub max_batch: usize,
+    /// KV page size (paper benchmarks 64; page size 1 enables prefix cache)
+    pub page_size: usize,
+    /// per-device HBM bytes available for KV cache
+    pub kv_hbm_budget: u64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            tp: 8,
+            dp: 1,
+            hybrid_barrier: false,
+            prefill_chunk: 8192,
+            max_batch: 256,
+            page_size: 64,
+            // 80 GB H100 minus weights/activations headroom ≈ 48 GB for KV
+            kv_hbm_budget: 48 * (1 << 30),
+        }
+    }
+}
+
+impl ServingConfig {
+    pub fn with_parallelism(tp: usize, dp: usize) -> Self {
+        ServingConfig { tp, dp, hybrid_barrier: dp > 1, ..Default::default() }
+    }
+    pub fn total_gpus(&self) -> usize {
+        self.tp * self.dp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_lookup() {
+        assert_eq!(by_name("xl").unwrap().d_h, 128);
+        assert_eq!(by_name("dsv2").unwrap().h_q, 128);
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn dsv2_variant_shapes_match_paper() {
+        let m = by_name("dsv2").unwrap();
+        let mla = m.variant("mla");
+        assert_eq!(mla.main_head_dim(), 512); // d_c = 4 d_h
+        assert_eq!(mla.aux_dim(), 64); // RoPE dim
+        let gla8 = m.variant("gla8");
+        assert_eq!(gla8.main_head_dim(), 256);
+        assert_eq!(gla8.h_kv(), 8);
+    }
+
+    #[test]
+    fn hybrid_flag_follows_dp() {
+        assert!(!ServingConfig::with_parallelism(8, 1).hybrid_barrier);
+        assert!(ServingConfig::with_parallelism(2, 4).hybrid_barrier);
+        assert_eq!(ServingConfig::with_parallelism(2, 4).total_gpus(), 8);
+    }
+}

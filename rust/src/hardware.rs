@@ -1,0 +1,370 @@
+//! GPU spec database (Fig. 15 right) and the calibrated device timing model.
+//!
+//! We have no H100; decode is bandwidth-bound (the paper's own §3.1
+//! roofline argument), so per-kernel time is modeled as
+//!
+//! ```text
+//! t = max(bytes / (BW · eff_mem), flops / (peak · eff_comp)) + t_overhead
+//! ```
+//!
+//! with efficiency ceilings taken from the paper's measured kernels (93 %
+//! of bandwidth, 70 % of TFLOPs for the best kernels — §5.3) and a fixed
+//! per-kernel overhead calibrated against Table 44 (15 µs for a batch-1,
+//! 2K-context MLA decode kernel, where fixed costs dominate).
+//!
+//! Everything *counted* (bytes moved, FLOPs) is exact per variant/config;
+//! only the conversion to seconds is modeled. The serving benchmarks run
+//! the real Rust scheduler against this model, so queueing/batching/
+//! straggler effects are emergent, not assumed.
+
+use crate::attention::Variant;
+use crate::config::ModelConfig;
+
+/// Peak numbers for one accelerator generation.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub year: u32,
+    /// dense BF16/FP16 tensor-core peak, TFLOP/s
+    pub peak_bf16_tflops: f64,
+    /// HBM bandwidth, TB/s
+    pub hbm_bw_tbps: f64,
+    pub hbm_gb: f64,
+    /// NVLink per-GPU bidirectional bandwidth, GB/s
+    pub nvlink_gbps: f64,
+}
+
+impl GpuSpec {
+    /// Ridge point (FLOPs/byte) where the memory roof meets the compute roof.
+    pub fn ridge_point(&self) -> f64 {
+        self.peak_bf16_tflops / self.hbm_bw_tbps
+    }
+}
+
+pub const V100: GpuSpec = GpuSpec {
+    name: "V100", year: 2017, peak_bf16_tflops: 125.0, hbm_bw_tbps: 0.9,
+    hbm_gb: 32.0, nvlink_gbps: 300.0,
+};
+pub const A100: GpuSpec = GpuSpec {
+    name: "A100", year: 2020, peak_bf16_tflops: 312.0, hbm_bw_tbps: 2.039,
+    hbm_gb: 80.0, nvlink_gbps: 600.0,
+};
+pub const H100: GpuSpec = GpuSpec {
+    name: "H100", year: 2022, peak_bf16_tflops: 989.0, hbm_bw_tbps: 3.35,
+    hbm_gb: 80.0, nvlink_gbps: 900.0,
+};
+pub const B200: GpuSpec = GpuSpec {
+    name: "B200", year: 2024, peak_bf16_tflops: 2250.0, hbm_bw_tbps: 8.0,
+    hbm_gb: 192.0, nvlink_gbps: 1800.0,
+};
+
+pub const GENERATIONS: [&GpuSpec; 4] = [&V100, &A100, &H100, &B200];
+
+/// Calibrated H100 execution model (see module docs).
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceModel {
+    pub gpu: GpuSpec,
+    /// achievable fraction of peak HBM bandwidth (paper kernels: 0.93)
+    pub eff_mem: f64,
+    /// achievable fraction of peak TFLOPs (paper kernels: 0.70)
+    pub eff_comp: f64,
+    /// fixed per-kernel cost (launch + prologue/epilogue), seconds
+    pub kernel_overhead: f64,
+    /// per-layer non-attention overhead inside one fused decode step
+    pub layer_overhead: f64,
+    /// fixed per-engine-step cost (CPU scheduling, MoE dispatch/routing,
+    /// launch chains) — calibrated so DSV2 ITL at low concurrency lands
+    /// near the paper's measured 27-32 ms; 0 for raw kernel benches
+    pub step_overhead: f64,
+}
+
+impl Default for DeviceModel {
+    fn default() -> Self {
+        DeviceModel {
+            gpu: H100,
+            eff_mem: 0.80,
+            eff_comp: 0.70,
+            kernel_overhead: 12e-6,
+            layer_overhead: 4e-6,
+            step_overhead: 0.0,
+        }
+    }
+}
+
+impl DeviceModel {
+    pub fn h100() -> Self {
+        Self::default()
+    }
+
+    /// Our-kernel variant: the paper's optimized GLA/GTA kernels reach 93 %
+    /// of bandwidth (§5.3).
+    pub fn h100_optimized() -> Self {
+        DeviceModel { eff_mem: 0.93, ..Self::default() }
+    }
+
+    /// Serving-calibrated variant: optimized kernels plus the fixed
+    /// per-step serving overhead of a production MoE stack.
+    pub fn h100_serving() -> Self {
+        DeviceModel { step_overhead: 12e-3, ..Self::h100_optimized() }
+    }
+
+    fn mem_time(&self, bytes: f64) -> f64 {
+        bytes / (self.gpu.hbm_bw_tbps * 1e12 * self.eff_mem)
+    }
+
+    fn comp_time(&self, flops: f64) -> f64 {
+        flops / (self.gpu.peak_bf16_tflops * 1e12 * self.eff_comp)
+    }
+
+    /// One decode-attention kernel (all layers fused accounting) for a
+    /// batch of sequences with context lengths `lens`, query length `lq`,
+    /// on one of `tp` ranks. Returns seconds.
+    pub fn attn_decode_time(
+        &self,
+        cfg: &ModelConfig,
+        v: &Variant,
+        lens: &[usize],
+        lq: usize,
+        tp: usize,
+    ) -> f64 {
+        let total_ctx: u64 = lens.iter().map(|&l| l as u64).sum();
+        let cache_bytes =
+            v.kv_bytes_per_token_per_device(tp, cfg.dtype_bytes) as f64 * total_ctx as f64;
+        // per-rank share of the attention FLOPs (duplicated heads recompute)
+        let rank_frac = v.heads_per_rank(tp) as f64 / v.h_kv() as f64;
+        let flops: f64 = lens
+            .iter()
+            .map(|&l| v.decode_attn_flops(l, lq) as f64 * rank_frac)
+            .sum();
+        let per_layer = self
+            .mem_time(cache_bytes)
+            .max(self.comp_time(flops))
+            + self.kernel_overhead / cfg.n_layers as f64;
+        per_layer * cfg.n_layers as f64 + self.kernel_overhead
+    }
+
+    /// Weight bytes streamed from HBM for one decode step on one device.
+    /// Dense models stream their full per-rank shard; MoE models stream the
+    /// experts the batch's tokens actually touch (coverage
+    /// 1 - (1 - topk/E)^tokens) plus the dense trunk. Expert weights are
+    /// expert-parallel over all `n_gpus` (§B.6: EP in both TP and hybrid
+    /// configurations), so this is *identical across parallel layouts* —
+    /// the layouts differ through KV traffic, barriers and pool capacity.
+    pub fn weight_stream_bytes(&self, cfg: &ModelConfig, tokens: usize, n_gpus: usize) -> f64 {
+        let wb = cfg.weight_dtype_bytes as f64;
+        if cfg.moe_experts == 0 {
+            return cfg.total_params as f64 * wb / n_gpus as f64;
+        }
+        let expert_params = (cfg.total_params - cfg.active_params) as f64
+            * cfg.moe_experts as f64
+            / (cfg.moe_experts as f64 - cfg.moe_topk as f64);
+        let dense_params = cfg.total_params as f64 - expert_params;
+        let p_untouched = (1.0 - cfg.moe_topk as f64 / cfg.moe_experts as f64)
+            .powi(tokens.max(1) as i32);
+        let coverage = 1.0 - p_untouched;
+        (dense_params + expert_params * coverage) * wb / n_gpus as f64
+    }
+
+    /// FFN/projection side of one model step: weight streaming vs GEMM
+    /// compute for `tokens` new tokens. Expert-parallel over the whole
+    /// cluster (§B.6), so in hybrid TP+DP this is *shared* across
+    /// replicas — the engine charges it once per barrier step with the
+    /// total token count, never per replica.
+    pub fn ffn_step_time(&self, cfg: &ModelConfig, tokens: usize, n_gpus: usize) -> f64 {
+        let weight_bytes = self.weight_stream_bytes(cfg, tokens, n_gpus);
+        let gemm_flops = 2.0 * cfg.active_params as f64 * tokens as f64 / n_gpus as f64;
+        self.mem_time(weight_bytes).max(self.comp_time(gemm_flops))
+            + self.layer_overhead * cfg.n_layers as f64
+    }
+
+    /// Attention-only side of a chunked-prefill step on one TP group.
+    pub fn prefill_attn_time(
+        &self,
+        cfg: &ModelConfig,
+        v: &Variant,
+        chunk: usize,
+        ctx: usize,
+        tp: usize,
+    ) -> f64 {
+        let rank_heads = (v.h_q() as f64 / tp as f64).max(1.0);
+        let attn_flops = 4.0
+            * rank_heads
+            * v.d_h() as f64
+            * (chunk as f64)
+            * (ctx as f64)
+            * 0.5
+            * cfg.n_layers as f64;
+        self.comp_time(attn_flops) + self.kernel_overhead
+    }
+
+    /// Full decode model step (attention + GEMMs + weight streaming) on one
+    /// rank of a `tp`-group in an `n_gpus` cluster. Sequences emit `lq`
+    /// tokens each.
+    pub fn decode_step_time_on(
+        &self,
+        cfg: &ModelConfig,
+        v: &Variant,
+        lens: &[usize],
+        lq: usize,
+        tp: usize,
+        n_gpus: usize,
+    ) -> f64 {
+        let tokens = lens.len() * lq;
+        self.ffn_step_time(cfg, tokens, n_gpus) + self.attn_decode_time(cfg, v, lens, lq, tp)
+    }
+
+    /// Single-replica convenience wrapper (n_gpus == tp).
+    pub fn decode_step_time(
+        &self,
+        cfg: &ModelConfig,
+        v: &Variant,
+        lens: &[usize],
+        lq: usize,
+        tp: usize,
+    ) -> f64 {
+        self.decode_step_time_on(cfg, v, lens, lq, tp, tp)
+    }
+
+    /// Chunked-prefill step: `chunk` new tokens of one sequence whose
+    /// context (including the chunk) is `ctx`. Prefill is GEMM-dominated.
+    pub fn prefill_step_time(
+        &self,
+        cfg: &ModelConfig,
+        v: &Variant,
+        chunk: usize,
+        ctx: usize,
+        tp: usize,
+    ) -> f64 {
+        self.prefill_step_time_on(cfg, v, chunk, ctx, tp, tp)
+    }
+
+    pub fn prefill_step_time_on(
+        &self,
+        cfg: &ModelConfig,
+        v: &Variant,
+        chunk: usize,
+        ctx: usize,
+        tp: usize,
+        n_gpus: usize,
+    ) -> f64 {
+        self.ffn_step_time(cfg, chunk, n_gpus) + self.prefill_attn_time(cfg, v, chunk, ctx, tp)
+    }
+
+    /// Achieved bandwidth/TFLOPs report for a decode kernel (Fig. 4 left /
+    /// Fig. 15 left axes): returns (seconds, achieved TB/s, achieved TFLOP/s).
+    pub fn kernel_speed(
+        &self,
+        cfg: &ModelConfig,
+        v: &Variant,
+        batch: usize,
+        ctx: usize,
+        lq: usize,
+        tp: usize,
+    ) -> (f64, f64, f64) {
+        let lens = vec![ctx; batch];
+        let t = self.attn_decode_time(cfg, v, &lens, lq, tp);
+        let bytes = v.kv_bytes_per_token_per_device(tp, cfg.dtype_bytes) as f64
+            * (batch * ctx) as f64
+            * cfg.n_layers as f64;
+        let rank_frac = v.heads_per_rank(tp) as f64 / v.h_kv() as f64;
+        let flops = v.decode_attn_flops(ctx, lq) as f64 * rank_frac * batch as f64
+            * cfg.n_layers as f64;
+        (t, bytes / t / 1e12, flops / t / 1e12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DSV2, KERNEL_BENCH};
+
+    #[test]
+    fn generations_flops_grow_faster_than_bw() {
+        // Fig. 15 (right): FLOPs-to-byte ratio increases every generation.
+        let ridges: Vec<f64> = GENERATIONS.iter().map(|g| g.ridge_point()).collect();
+        for w in ridges.windows(2) {
+            assert!(w[1] > w[0] * 0.95, "ridge must (weakly) grow: {ridges:?}");
+        }
+        assert!(H100.ridge_point() / A100.ridge_point() > 1.5); // most drastic jump
+    }
+
+    #[test]
+    fn table44_kernel_latency_shape() {
+        // Table 44: batch 1, MLA on 1 GPU (DP) vs GLA-2 sharded on 2 (TP=2).
+        // Short context: comparable (overhead-dominated, MLA slightly
+        // ahead); long context: GLA ~1.5x faster (half the bytes/device).
+        // Single-kernel benchmark -> the 1-layer KERNEL_BENCH config.
+        let dm = DeviceModel::h100_optimized();
+        let m = KERNEL_BENCH;
+        let mla = m.variant("mla");
+        let gla2 = m.variant("gla2");
+        let t_mla_2k = dm.attn_decode_time(&m, &mla, &[2048], 1, 1);
+        let t_gla_2k = dm.attn_decode_time(&m, &gla2, &[2048], 1, 2);
+        assert!((t_gla_2k / t_mla_2k) > 0.8 && (t_gla_2k / t_mla_2k) < 1.4);
+        let t_mla_131k = dm.attn_decode_time(&m, &mla, &[131072], 1, 1);
+        let t_gla_131k = dm.attn_decode_time(&m, &gla2, &[131072], 1, 2);
+        let speedup = t_mla_131k / t_gla_131k;
+        assert!(
+            speedup > 1.25 && speedup < 2.0,
+            "paper: 81/55 ≈ 1.47x, model: {speedup:.2}x"
+        );
+    }
+
+    #[test]
+    fn fig4_left_mla_near_compute_gla_on_memory() {
+        // Fig. 4 left @ lq=1, batch 128, ctx 8192: MLA ≈ 610 TFLOP/s
+        // (approaching compute), GLA ≈ 360 TFLOP/s (on the memory roof).
+        let dm = DeviceModel::h100_optimized();
+        let m = KERNEL_BENCH;
+        let mla = m.variant("mla");
+        let gla2 = m.variant("gla2");
+        let (_, _, tf_mla) = dm.kernel_speed(&m, &mla, 128, 8192, 1, 1);
+        let (_, _, tf_gla) = dm.kernel_speed(&m, &gla2, 128, 8192, 1, 1);
+        assert!(tf_mla > 400.0 && tf_mla < 750.0, "MLA {tf_mla:.0} TFLOPs");
+        assert!(tf_gla > 250.0 && tf_gla < 450.0, "GLA {tf_gla:.0} TFLOPs");
+        assert!(tf_mla > 1.4 * tf_gla);
+    }
+
+    #[test]
+    fn fig15_left_lq2_gla_saturates_both() {
+        // Fig. 15 left @ lq=2: GLA reaches ~700 TFLOP/s and ~3 TB/s; MLA
+        // goes compute-bound and GLA is up to ~2x faster.
+        let dm = DeviceModel::h100_optimized();
+        let m = KERNEL_BENCH;
+        let (t_mla, _, _) = dm.kernel_speed(&m, &m.variant("mla"), 128, 8192, 2, 1);
+        let (t_gla, bw, tf) = dm.kernel_speed(&m, &m.variant("gla2"), 128, 8192, 2, 1);
+        assert!(bw > 2.0, "GLA bandwidth {bw:.2} TB/s");
+        assert!(tf > 500.0, "GLA {tf:.0} TFLOP/s");
+        let speedup = t_mla / t_gla;
+        assert!(speedup > 1.5 && speedup < 2.5, "lq=2 speedup {speedup:.2}");
+    }
+
+    #[test]
+    fn decode_step_includes_weight_streaming() {
+        let dm = DeviceModel::h100();
+        let m = DSV2;
+        let v = m.variant("gla8");
+        // batch 1: weight streaming dominates the step
+        let t = dm.decode_step_time(&m, &v, &[1024], 1, 8);
+        let weight_t = dm.weight_stream_bytes(&m, 1, 8) / (3.35e12 * dm.eff_mem);
+        assert!(t > weight_t, "step {t} must exceed weight stream {weight_t}");
+        assert!(t < 20.0 * weight_t);
+    }
+
+    #[test]
+    fn moe_coverage_grows_with_batch_and_saturates() {
+        let dm = DeviceModel::h100();
+        let b1 = dm.weight_stream_bytes(&DSV2, 1, 8);
+        let b64 = dm.weight_stream_bytes(&DSV2, 64, 8);
+        let b4096 = dm.weight_stream_bytes(&DSV2, 4096, 8);
+        assert!(b64 > 2.0 * b1, "coverage must grow: {b1:.2e} -> {b64:.2e}");
+        // saturates at the full per-device shard (236 GB / 8 GPUs FP8)
+        assert!(b4096 <= 236e9 / 8.0 * 1.001);
+        assert!(b4096 > 0.95 * 236e9 / 8.0);
+        // dense model streams its shard regardless of batch
+        assert_eq!(
+            dm.weight_stream_bytes(&crate::config::XL, 1, 2),
+            dm.weight_stream_bytes(&crate::config::XL, 999, 2)
+        );
+    }
+}

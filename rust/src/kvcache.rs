@@ -1,0 +1,418 @@
+//! Paged KV-cache manager: page pool, per-sequence page tables, ref-counted
+//! prefix sharing (RadixAttention-style), and the two gather strategies of
+//! the paper's §4.2 (Fig. 6) — naive per-row 64-bit offset arithmetic vs
+//! cooperative ("distributed") offset calculation.
+//!
+//! The pool is the Rust-side source of truth for cache occupancy in the
+//! serving engine: the scheduler admits work only when pages are available
+//! (PagedAttention semantics, Kwon et al. 2023). The gather strategies are
+//! *measured* by `benches/fig6_paged_offsets.rs`: the paper reports that
+//! cooperative offsets make page size 1 as fast as page size 64 (1.2–1.5×
+//! over the naive address path); the same effect appears on CPU because the
+//! naive path re-derives a 64-bit offset (div/mod/mul) for every row while
+//! the cooperative path computes each page's base once per page-group and
+//! streams whole rows.
+
+use std::collections::HashMap;
+
+pub type PageId = u32;
+pub type SeqId = u64;
+
+/// Fixed-size page pool with reference counting (prefix sharing).
+#[derive(Debug)]
+pub struct PagePool {
+    pub page_size: usize,
+    n_pages: usize,
+    free: Vec<PageId>,
+    ref_count: Vec<u32>,
+    /// page tables of live sequences
+    tables: HashMap<SeqId, Vec<PageId>>,
+    /// tokens currently stored per sequence (for partial last pages)
+    lens: HashMap<SeqId, usize>,
+}
+
+impl PagePool {
+    pub fn new(n_pages: usize, page_size: usize) -> Self {
+        assert!(page_size >= 1);
+        PagePool {
+            page_size,
+            n_pages,
+            free: (0..n_pages as PageId).rev().collect(),
+            ref_count: vec![0; n_pages],
+            tables: HashMap::new(),
+            lens: HashMap::new(),
+        }
+    }
+
+    pub fn pages_free(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn pages_total(&self) -> usize {
+        self.n_pages
+    }
+
+    pub fn pages_needed(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_size)
+    }
+
+    /// Can `tokens` more tokens be appended to `seq` (or a new seq)?
+    pub fn can_grow(&self, seq: SeqId, tokens: usize) -> bool {
+        let cur = self.lens.get(&seq).copied().unwrap_or(0);
+        let have = self.tables.get(&seq).map_or(0, |t| t.len());
+        let need = (cur + tokens).div_ceil(self.page_size).saturating_sub(have);
+        need <= self.free.len()
+    }
+
+    /// Register a sequence and reserve pages for `tokens` tokens.
+    /// Returns false (no-op) if the pool cannot hold them.
+    pub fn allocate(&mut self, seq: SeqId, tokens: usize) -> bool {
+        if self.tables.contains_key(&seq) {
+            return self.grow(seq, tokens);
+        }
+        let need = self.pages_needed(tokens.max(1));
+        if need > self.free.len() {
+            return false;
+        }
+        let pages: Vec<PageId> = (0..need).map(|_| self.take_page()).collect();
+        self.tables.insert(seq, pages);
+        self.lens.insert(seq, tokens);
+        true
+    }
+
+    /// Extend a live sequence by `tokens` tokens.
+    pub fn grow(&mut self, seq: SeqId, tokens: usize) -> bool {
+        let cur = *self.lens.get(&seq).expect("grow of unknown seq");
+        let table_len = self.tables[&seq].len();
+        let need = (cur + tokens).div_ceil(self.page_size).saturating_sub(table_len);
+        if need > self.free.len() {
+            return false;
+        }
+        for _ in 0..need {
+            let p = self.take_page();
+            self.tables.get_mut(&seq).unwrap().push(p);
+        }
+        *self.lens.get_mut(&seq).unwrap() += tokens;
+        true
+    }
+
+    fn take_page(&mut self) -> PageId {
+        let p = self.free.pop().expect("pool exhausted (checked before)");
+        self.ref_count[p as usize] += 1;
+        p
+    }
+
+    /// Release a sequence; pages return to the free list when their
+    /// refcount reaches zero (shared prefix pages survive).
+    pub fn release(&mut self, seq: SeqId) {
+        if let Some(pages) = self.tables.remove(&seq) {
+            for p in pages {
+                let rc = &mut self.ref_count[p as usize];
+                *rc -= 1;
+                if *rc == 0 {
+                    self.free.push(p);
+                }
+            }
+        }
+        self.lens.remove(&seq);
+    }
+
+    /// Fork `child` from `parent`, sharing the first `prefix_tokens` worth
+    /// of full pages (RadixAttention / prefix-cache use case — requires the
+    /// small page sizes that the distributed-offset kernel makes free).
+    pub fn fork_prefix(&mut self, parent: SeqId, child: SeqId, prefix_tokens: usize) -> bool {
+        let Some(ptable) = self.tables.get(&parent) else { return false };
+        let full_pages = (prefix_tokens / self.page_size).min(ptable.len());
+        let shared: Vec<PageId> = ptable[..full_pages].to_vec();
+        for &p in &shared {
+            self.ref_count[p as usize] += 1;
+        }
+        self.tables.insert(child, shared);
+        self.lens.insert(child, full_pages * self.page_size);
+        true
+    }
+
+    pub fn table(&self, seq: SeqId) -> Option<&[PageId]> {
+        self.tables.get(&seq).map(|v| v.as_slice())
+    }
+
+    pub fn len_of(&self, seq: SeqId) -> usize {
+        self.lens.get(&seq).copied().unwrap_or(0)
+    }
+
+    /// Invariant check used by the property tests: refcounts and free list
+    /// must account for every page exactly once.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut counted = vec![0u32; self.n_pages];
+        for t in self.tables.values() {
+            for &p in t {
+                counted[p as usize] += 1;
+            }
+        }
+        for (i, (&rc, &c)) in self.ref_count.iter().zip(&counted).enumerate() {
+            if rc != c {
+                return Err(format!("page {i}: refcount {rc} != referenced {c}"));
+            }
+        }
+        let free_and_used = self.free.len()
+            + self.ref_count.iter().filter(|&&rc| rc > 0).count();
+        if free_and_used != self.n_pages {
+            return Err(format!(
+                "free {} + used {} != total {}",
+                self.free.len(),
+                self.ref_count.iter().filter(|&&rc| rc > 0).count(),
+                self.n_pages
+            ));
+        }
+        if self.free.iter().any(|&p| self.ref_count[p as usize] != 0) {
+            return Err("free page with nonzero refcount".into());
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// §4.2 gather strategies (measured in fig6_paged_offsets)
+// ---------------------------------------------------------------------------
+
+/// Physical page storage: `n_pages × page_size × row_elems` f32.
+pub struct PageStore {
+    pub data: Vec<f32>,
+    pub page_size: usize,
+    pub row_elems: usize,
+}
+
+impl PageStore {
+    pub fn new(n_pages: usize, page_size: usize, row_elems: usize) -> Self {
+        PageStore { data: vec![0.0; n_pages * page_size * row_elems], page_size, row_elems }
+    }
+
+    pub fn fill_from(&mut self, rng: &mut crate::workload::Rng) {
+        for x in &mut self.data {
+            *x = rng.f64() as f32;
+        }
+    }
+
+    #[inline]
+    fn page_base(&self, page: PageId) -> usize {
+        page as usize * self.page_size * self.row_elems
+    }
+
+    /// Naive gather: every row independently recomputes its 64-bit offset
+    /// (page lookup + div + mod + multiply) — the expensive address path
+    /// the paper describes for per-thread cp.async addressing.
+    pub fn gather_naive(&self, table: &[PageId], rows: usize, out: &mut [f32]) {
+        let re = self.row_elems;
+        for r in 0..rows {
+            // deliberate per-row 64-bit arithmetic, as on the GPU
+            let page = table[(r as u64 / self.page_size as u64) as usize];
+            let in_page = (r as u64 % self.page_size as u64) as usize;
+            let src = (page as u64 as usize) * self.page_size * re + in_page * re;
+            out[r * re..(r + 1) * re].copy_from_slice(&self.data[src..src + re]);
+        }
+    }
+
+    /// Cooperative ("distributed") gather, §4.2: the paper has 16 threads
+    /// of a warp compute 16 row addresses together and exchange them via
+    /// warp shuffles, so the load loop itself carries no address math.
+    /// CPU analog: a *leader pass* materializes a group of page base
+    /// offsets into a small register-resident array, then a *consumer
+    /// pass* streams those pages back-to-back. With page size 1 the group
+    /// amortizes the per-page arithmetic exactly the way the warp does,
+    /// which is what makes page size 1 match page size 64 (Fig. 6).
+    pub fn gather_distributed(&self, table: &[PageId], rows: usize, out: &mut [f32]) {
+        const GROUP: usize = 16; // one "warp group" of page offsets
+        let re = self.row_elems;
+        let ps = self.page_size;
+        let full = rows / ps;
+        let page_elems = ps * re;
+        let mut bases = [0usize; GROUP];
+        let mut i = 0;
+        while i < full {
+            let g = GROUP.min(full - i);
+            // leader pass: compute g offsets with no intervening copies
+            for (j, &p) in table[i..i + g].iter().enumerate() {
+                bases[j] = p as usize * page_elems;
+            }
+            // consumer pass: pure streaming, no address math
+            let mut dst = i * page_elems;
+            for &src in &bases[..g] {
+                out[dst..dst + page_elems]
+                    .copy_from_slice(&self.data[src..src + page_elems]);
+                dst += page_elems;
+            }
+            i += g;
+        }
+        let rem = rows - full * ps;
+        if rem > 0 {
+            let src = self.page_base(table[full]);
+            let dst = full * page_elems;
+            out[dst..dst + rem * re].copy_from_slice(&self.data[src..src + rem * re]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// radix prefix index (maps token prefixes to reusable sequences)
+// ---------------------------------------------------------------------------
+
+/// Page-granular radix index for prefix caching: maps chunks of prompt
+/// tokens to the sequence that already holds them, so the scheduler can
+/// `fork_prefix` instead of re-prefilling (Zheng et al. 2024).
+#[derive(Debug, Default)]
+pub struct RadixIndex {
+    /// (depth, chunk-hash) -> (seq that materialized it, node id)
+    nodes: HashMap<(usize, u64), SeqId>,
+}
+
+impl RadixIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn chunk_hash(chunk: &[u32]) -> u64 {
+        // FNV-1a
+        let mut h: u64 = 0xcbf29ce484222325;
+        for &t in chunk {
+            h ^= t as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
+    /// Record that `seq` holds `tokens` (page-aligned chunks only).
+    pub fn insert(&mut self, seq: SeqId, tokens: &[u32], page_size: usize) {
+        let mut h: u64 = 14695981039346656037;
+        for (d, chunk) in tokens.chunks(page_size).enumerate() {
+            if chunk.len() < page_size {
+                break; // only full pages are shareable
+            }
+            h ^= Self::chunk_hash(chunk);
+            h = h.wrapping_mul(0x100000001b3);
+            self.nodes.entry((d, h)).or_insert(seq);
+        }
+    }
+
+    /// Longest shared page-aligned prefix of `tokens` already cached:
+    /// returns (owner sequence, matched token count).
+    pub fn longest_prefix(&self, tokens: &[u32], page_size: usize) -> Option<(SeqId, usize)> {
+        let mut h: u64 = 14695981039346656037;
+        let mut best = None;
+        for (d, chunk) in tokens.chunks(page_size).enumerate() {
+            if chunk.len() < page_size {
+                break;
+            }
+            h ^= Self::chunk_hash(chunk);
+            h = h.wrapping_mul(0x100000001b3);
+            match self.nodes.get(&(d, h)) {
+                Some(&seq) => best = Some((seq, (d + 1) * page_size)),
+                None => break,
+            }
+        }
+        best
+    }
+
+    pub fn remove_seq(&mut self, seq: SeqId) {
+        self.nodes.retain(|_, s| *s != seq);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Rng;
+
+    #[test]
+    fn alloc_grow_release_roundtrip() {
+        let mut pool = PagePool::new(16, 4);
+        assert!(pool.allocate(1, 10)); // 3 pages
+        assert_eq!(pool.pages_free(), 13);
+        assert!(pool.grow(1, 2)); // 12 tokens, still 3 pages
+        assert_eq!(pool.pages_free(), 13);
+        assert!(pool.grow(1, 1)); // 13 tokens -> 4th page
+        assert_eq!(pool.pages_free(), 12);
+        pool.check_invariants().unwrap();
+        pool.release(1);
+        assert_eq!(pool.pages_free(), 16);
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admission_control() {
+        let mut pool = PagePool::new(4, 16);
+        assert!(pool.allocate(1, 64)); // exactly 4 pages
+        assert!(!pool.allocate(2, 1)); // full
+        assert!(!pool.can_grow(1, 1));
+        pool.release(1);
+        assert!(pool.allocate(2, 1));
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefix_fork_shares_pages() {
+        let mut pool = PagePool::new(8, 4);
+        assert!(pool.allocate(1, 16)); // 4 pages
+        assert!(pool.fork_prefix(1, 2, 8)); // share first 2 pages
+        assert_eq!(pool.pages_free(), 4); // no new pages taken
+        assert_eq!(pool.table(2).unwrap(), &pool.table(1).unwrap()[..2]);
+        pool.check_invariants().unwrap();
+        // releasing the parent keeps shared pages alive
+        pool.release(1);
+        pool.check_invariants().unwrap();
+        assert_eq!(pool.pages_free(), 6); // 2 pages still pinned by child
+        pool.release(2);
+        assert_eq!(pool.pages_free(), 8);
+    }
+
+    #[test]
+    fn gather_strategies_agree() {
+        for ps in [1usize, 4, 16, 64] {
+            let n_pages = 64;
+            let re = 8;
+            let mut store = PageStore::new(n_pages, ps, re);
+            let mut rng = Rng::new(9);
+            store.fill_from(&mut rng);
+            // shuffled page table
+            let mut table: Vec<PageId> = (0..n_pages as PageId).collect();
+            for i in (1..table.len()).rev() {
+                table.swap(i, rng.range(0, i));
+            }
+            let rows = 3 * ps + ps.min(2); // cover partial last page
+            let mut a = vec![0.0; rows * re];
+            let mut b = vec![0.0; rows * re];
+            store.gather_naive(&table, rows, &mut a);
+            store.gather_distributed(&table, rows, &mut b);
+            assert_eq!(a, b, "page_size {ps}");
+        }
+    }
+
+    #[test]
+    fn radix_longest_prefix() {
+        let mut idx = RadixIndex::new();
+        let toks: Vec<u32> = (0..64).collect();
+        idx.insert(7, &toks, 16);
+        // identical prompt: full 64-token match
+        assert_eq!(idx.longest_prefix(&toks, 16), Some((7, 64)));
+        // diverges in the third page: 32 tokens match
+        let mut other = toks.clone();
+        other[40] = 999;
+        assert_eq!(idx.longest_prefix(&other, 16), Some((7, 32)));
+        // diverges immediately: no match
+        let mut bad = toks.clone();
+        bad[0] = 999;
+        assert_eq!(idx.longest_prefix(&bad, 16), None);
+        idx.remove_seq(7);
+        assert_eq!(idx.longest_prefix(&toks, 16), None);
+    }
+
+    #[test]
+    fn page_size_one_enables_token_granular_sharing() {
+        // the §4.2 motivation: page size 1 shares arbitrary-length prefixes
+        let mut idx = RadixIndex::new();
+        let toks: Vec<u32> = (0..10).collect();
+        idx.insert(1, &toks, 1);
+        let mut q = toks.clone();
+        q[7] = 42;
+        assert_eq!(idx.longest_prefix(&q, 1), Some((1, 7)));
+    }
+}

@@ -1,0 +1,31 @@
+//! gla-serve — full-system reproduction of *Hardware-Efficient Attention
+//! for Fast Decoding* (Zadouri, Strauss, Dao 2025): Grouped-Tied Attention
+//! (GTA) and Grouped Latent Attention (GLA) as a three-layer
+//! Rust + JAX + Pallas stack, AOT via XLA/PJRT.
+//!
+//! Layer map (see DESIGN.md):
+//! * [`attention`] — variant algebra (shapes, bytes, FLOPs, shard math)
+//! * [`analytical`] — Table 1 intensities and the Fig. 3 roofline
+//! * [`hardware`] — GPU specs (Fig. 15) + calibrated device timing model
+//! * [`parallel`] — TP/DP topologies, duplication factor, collectives
+//! * [`kvcache`] — paged pool, prefix radix, §4.2 gather strategies
+//! * [`workload`] — §B.6 request-length distributions
+//! * [`metrics`] — service-level summaries (E2E/TTFT/ITL/throughput)
+//! * [`engine`] — continuous-batching engine over simulated H100 ranks
+//! * [`runtime`] — PJRT CPU runtime executing the AOT HLO artifacts
+//! * [`server`] — threaded live server + closed-loop load generator
+//! * [`train`] — drives the AOT train-step artifact (quality experiment)
+
+pub mod analytical;
+pub mod attention;
+pub mod config;
+pub mod engine;
+pub mod hardware;
+pub mod kvcache;
+pub mod metrics;
+pub mod parallel;
+pub mod workload;
+
+pub mod runtime;
+pub mod server;
+pub mod train;

@@ -1,0 +1,148 @@
+//! Service-level metrics: streaming summaries of E2E latency, TTFT, ITL
+//! and output throughput — the four metrics of §B.6, reported as median,
+//! mean, p95 and p99 like the paper's tables.
+
+/// Collects samples and reports order statistics. Samples are kept (the
+/// benchmark sizes are ≤ a few thousand requests), sorted lazily.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.samples.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).expect("NaN metric sample"));
+            self.sorted = true;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Quantile by linear interpolation, q in [0, 1].
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let n = self.samples.len();
+        let pos = q.clamp(0.0, 1.0) * (n - 1) as f64;
+        let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+        if lo == hi {
+            self.samples[lo]
+        } else {
+            let w = pos - lo as f64;
+            self.samples[lo] * (1.0 - w) + self.samples[hi] * w
+        }
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.quantile(0.5)
+    }
+    pub fn p95(&mut self) -> f64 {
+        self.quantile(0.95)
+    }
+    pub fn p99(&mut self) -> f64 {
+        self.quantile(0.99)
+    }
+    pub fn max(&mut self) -> f64 {
+        self.quantile(1.0)
+    }
+}
+
+/// Full service-level report for one benchmark run (one table row).
+#[derive(Debug, Clone, Default)]
+pub struct ServiceMetrics {
+    pub e2e: Summary,
+    pub ttft: Summary,
+    pub itl: Summary,
+    /// total output tokens produced
+    pub output_tokens: u64,
+    /// wall-clock duration of the run, seconds
+    pub duration: f64,
+}
+
+impl ServiceMetrics {
+    pub fn throughput(&self) -> f64 {
+        if self.duration <= 0.0 {
+            0.0
+        } else {
+            self.output_tokens as f64 / self.duration
+        }
+    }
+
+    /// One row in the paper's table format:
+    /// (median E2E s, median TTFT s, median ITL ms, tok/s).
+    pub fn paper_row(&mut self) -> (f64, f64, f64, f64) {
+        (
+            self.e2e.median(),
+            self.ttft.median(),
+            self.itl.median() * 1e3,
+            self.throughput(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles() {
+        let mut s = Summary::new();
+        for i in 1..=100 {
+            s.record(i as f64);
+        }
+        assert_eq!(s.median(), 50.5);
+        assert!((s.p99() - 99.01).abs() < 0.02);
+        assert_eq!(s.max(), 100.0);
+        assert_eq!(s.mean(), 50.5);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let mut s = Summary::new();
+        assert_eq!(s.median(), 0.0);
+        assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn interleaved_record_and_read() {
+        let mut s = Summary::new();
+        s.record(3.0);
+        assert_eq!(s.median(), 3.0);
+        s.record(1.0);
+        s.record(2.0);
+        assert_eq!(s.median(), 2.0); // re-sorts after new samples
+    }
+
+    #[test]
+    fn throughput() {
+        let m = ServiceMetrics { output_tokens: 1000, duration: 4.0, ..Default::default() };
+        assert_eq!(m.throughput(), 250.0);
+    }
+}

@@ -1,0 +1,181 @@
+//! Distributed topology: TP/DP layouts, shard plans per attention variant,
+//! and the NVLink collective cost model (§2.2, §3.2, §5.2).
+//!
+//! The serving engine asks two things of this module: (1) how a variant's
+//! cached heads land on ranks (duplicated or sharded — this drives per-rank
+//! KV bytes), and (2) how long the per-step collectives take. The hybrid
+//! TP+DP barrier semantics (every replica synchronizes at the MoE
+//! all-gather, so one straggling replica stalls all — §B.6.3) live in the
+//! engine; this module supplies the costs.
+
+use crate::attention::Variant;
+use crate::hardware::GpuSpec;
+
+/// A TP×DP rank layout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    pub tp: usize,
+    pub dp: usize,
+}
+
+impl Topology {
+    pub fn new(tp: usize, dp: usize) -> Self {
+        assert!(tp >= 1 && dp >= 1);
+        Topology { tp, dp }
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.tp * self.dp
+    }
+
+    pub fn label(&self) -> String {
+        if self.dp == 1 {
+            format!("TP{}", self.tp)
+        } else {
+            format!("TP{},DP{}", self.tp, self.dp)
+        }
+    }
+}
+
+/// How one variant's cache shards over a TP group.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub topology: Topology,
+    /// cached heads resident per rank
+    pub heads_per_rank: usize,
+    /// duplication factor D = ceil(N·g_q/h_q) (§3.2)
+    pub duplication: usize,
+    /// true iff D == 1 (no cache replicated anywhere in the TP group)
+    pub zero_redundancy: bool,
+    /// KV bytes per token per rank
+    pub kv_bytes_per_token: usize,
+}
+
+pub fn shard_plan(v: &Variant, topo: Topology, dtype_bytes: usize) -> ShardPlan {
+    ShardPlan {
+        topology: topo,
+        heads_per_rank: v.heads_per_rank(topo.tp),
+        duplication: v.duplication_factor(topo.tp),
+        zero_redundancy: v.zero_redundancy(topo.tp),
+        kv_bytes_per_token: v.kv_bytes_per_token_per_device(topo.tp, dtype_bytes),
+    }
+}
+
+/// Ring-collective cost model over NVLink.
+#[derive(Debug, Clone, Copy)]
+pub struct CollectiveModel {
+    /// per-link bus bandwidth, bytes/s
+    pub bus_bw: f64,
+    /// per-collective latency (launch + sync), seconds
+    pub alpha: f64,
+}
+
+impl CollectiveModel {
+    pub fn nvlink(gpu: &GpuSpec) -> Self {
+        CollectiveModel { bus_bw: gpu.nvlink_gbps * 1e9 * 0.8, alpha: 4e-6 }
+    }
+
+    /// Ring all-reduce of `bytes` across `n` ranks: 2(n-1)/n · bytes / bw.
+    pub fn all_reduce(&self, bytes: f64, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        self.alpha + 2.0 * (n as f64 - 1.0) / n as f64 * bytes / self.bus_bw
+    }
+
+    /// Ring all-gather of `bytes` (total gathered) across `n` ranks.
+    pub fn all_gather(&self, bytes: f64, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        self.alpha + (n as f64 - 1.0) / n as f64 * bytes / self.bus_bw
+    }
+
+    /// Per-decode-step TP communication: 2 all-reduces per layer of the
+    /// activations (B·lq·d_model), plus the GLA partial-output AllReduce
+    /// pattern of §3.3.2 which is the same wire traffic.
+    pub fn tp_step_time(
+        &self,
+        n_layers: usize,
+        batch_tokens: usize,
+        d_model: usize,
+        dtype_bytes: usize,
+        tp: usize,
+    ) -> f64 {
+        let bytes = (batch_tokens * d_model * dtype_bytes) as f64;
+        2.0 * n_layers as f64 * self.all_reduce(bytes, tp)
+    }
+
+    /// Hybrid-DP attention all-gather before the (expert-parallel) FFN:
+    /// gathers every replica's attention output each step (§B.6).
+    pub fn dp_gather_time(
+        &self,
+        n_layers: usize,
+        batch_tokens: usize,
+        d_model: usize,
+        dtype_bytes: usize,
+        dp: usize,
+    ) -> f64 {
+        let bytes = (batch_tokens * d_model * dtype_bytes * dp) as f64;
+        n_layers as f64 * self.all_gather(bytes, dp)
+    }
+}
+
+/// The §5.2 parallelism sweep: layouts compared in Fig. 4 (right)/Fig. 10.
+pub fn paper_layouts() -> Vec<Topology> {
+    vec![Topology::new(8, 1), Topology::new(4, 2), Topology::new(2, 4)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::H100;
+
+    fn dsv2_variant(name: &str) -> Variant {
+        Variant::parse(name, 128, 128).unwrap()
+    }
+
+    #[test]
+    fn gla8_zero_redundancy_tp8_mla_duplicates() {
+        // §5.2: GLA-8 shards its 8 latent heads across TP=8 with zero
+        // redundancy; MLA replicates its single latent on all 8 ranks.
+        let t8 = Topology::new(8, 1);
+        let gla8 = shard_plan(&dsv2_variant("gla8"), t8, 2);
+        assert!(gla8.zero_redundancy);
+        assert_eq!(gla8.heads_per_rank, 1);
+        // 256-dim latent + 64 rope = 640 B/token/rank
+        assert_eq!(gla8.kv_bytes_per_token, (256 + 64) * 2);
+        let mla = shard_plan(&dsv2_variant("mla"), t8, 2);
+        assert_eq!(mla.duplication, 8);
+        // 512 latent + 64 rope duplicated everywhere = 1152 B/token/rank
+        assert_eq!(mla.kv_bytes_per_token, (512 + 64) * 2);
+        // headline: GLA-8 fetches roughly half the cache per device
+        assert!(mla.kv_bytes_per_token as f64 / gla8.kv_bytes_per_token as f64 == 1.8);
+    }
+
+    #[test]
+    fn allreduce_scales() {
+        let c = CollectiveModel::nvlink(&H100);
+        let t2 = c.all_reduce(1e6, 2);
+        let t8 = c.all_reduce(1e6, 8);
+        assert!(t8 > t2); // 2(n-1)/n grows with n
+        assert_eq!(c.all_reduce(1e9, 1), 0.0);
+    }
+
+    #[test]
+    fn tp_comm_is_small_vs_decode_step() {
+        // sanity: for DSV2-like shapes the per-step TP comm is sub-ms.
+        let c = CollectiveModel::nvlink(&H100);
+        let t = c.tp_step_time(60, 64, 5120, 2, 8);
+        assert!(t < 2e-3, "TP comm {t}");
+        assert!(t > 1e-5);
+    }
+
+    #[test]
+    fn layouts_cover_paper() {
+        let l = paper_layouts();
+        assert_eq!(l.len(), 3);
+        assert!(l.iter().all(|t| t.n_gpus() == 8));
+        assert_eq!(Topology::new(2, 4).label(), "TP2,DP4");
+    }
+}

@@ -1,0 +1,279 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them on the
+//! CPU PJRT client. Python never runs here — the `.hlo.txt`/.meta.txt
+//! pair produced by `make artifacts` is everything the coordinator needs.
+//!
+//! HLO *text* is the interchange format: jax ≥ 0.5 serializes
+//! HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; `HloModuleProto::from_text_file` reassigns ids (see
+//! /opt/xla-example/README.md and DESIGN.md §Artifacts).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Element type of an artifact tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+/// Shape+dtype+name of one artifact input/output, from the meta file.
+#[derive(Debug, Clone)]
+pub struct TensorMeta {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorMeta {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Parsed `<artifact>.meta.txt`: model shapes + tensor manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub fields: HashMap<String, String>,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+impl ArtifactMeta {
+    pub fn parse_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut fields = HashMap::new();
+        let mut inputs = Vec::new();
+        let mut outputs = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("bad meta line: {line}"))?;
+            if k.starts_with("input.") || k.starts_with("output.") {
+                let mut parts = v.splitn(3, ':');
+                let name = parts.next().unwrap_or_default().to_string();
+                let dtype = DType::parse(parts.next().unwrap_or_default())?;
+                let shape: Vec<usize> = parts
+                    .next()
+                    .unwrap_or_default()
+                    .split(',')
+                    .filter(|s| !s.is_empty())
+                    .map(|s| s.parse().map_err(|e| anyhow!("bad dim {s}: {e}")))
+                    .collect::<Result<_>>()?;
+                let tm = TensorMeta { name, dtype, shape };
+                if k.starts_with("input.") {
+                    inputs.push(tm);
+                } else {
+                    outputs.push(tm);
+                }
+            } else {
+                fields.insert(k.to_string(), v.to_string());
+            }
+        }
+        let name = fields.get("name").cloned().unwrap_or_default();
+        Ok(ArtifactMeta { name, fields, inputs, outputs })
+    }
+
+    pub fn usize_field(&self, k: &str) -> Result<usize> {
+        self.fields
+            .get(k)
+            .ok_or_else(|| anyhow!("meta missing field {k}"))?
+            .parse()
+            .map_err(|e| anyhow!("meta field {k}: {e}"))
+    }
+
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|t| t.name == name)
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|t| t.name == name)
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Artifact {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with host literals; returns the flattened output literals
+    /// (the lowering wraps results in a 1-tuple — see aot.py).
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: got {} args, artifact wants {}",
+                self.meta.name,
+                args.len(),
+                self.meta.inputs.len()
+            );
+        }
+        let out = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.meta.name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal {}: {e:?}", self.meta.name))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {}: {e:?}", self.meta.name))?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!(
+                "{}: {} outputs, meta says {}",
+                self.meta.name,
+                parts.len(),
+                self.meta.outputs.len()
+            );
+        }
+        Ok(parts)
+    }
+}
+
+/// Loads artifacts from a directory over one shared PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    pub fn new<P: AsRef<Path>>(artifact_dir: P) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Runtime { client, dir: artifact_dir.as_ref().to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<name>.hlo.txt` / `<name>.meta.txt`.
+    pub fn load(&self, name: &str) -> Result<Artifact> {
+        let meta = ArtifactMeta::parse_file(&self.dir.join(format!("{name}.meta.txt")))?;
+        let hlo = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&hlo)
+            .map_err(|e| anyhow!("parse {}: {e:?}", hlo.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        Ok(Artifact { meta, exe })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// literal helpers
+// ---------------------------------------------------------------------------
+
+/// f32 literal of the given shape.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if data.len() != n {
+        bail!("lit_f32: {} elems for shape {shape:?}", data.len());
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// i32 literal of the given shape.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if data.len() != n {
+        bail!("lit_i32: {} elems for shape {shape:?}", data.len());
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Scalar literals (rank 0).
+pub fn lit_f32_scalar(x: f32) -> xla::Literal {
+    xla::Literal::from(x)
+}
+
+/// All-zeros literal matching a tensor meta entry.
+pub fn zeros_like(tm: &TensorMeta) -> Result<xla::Literal> {
+    match tm.dtype {
+        DType::F32 => {
+            if tm.shape.is_empty() {
+                Ok(xla::Literal::from(0f32))
+            } else {
+                lit_f32(&tm.shape, &vec![0f32; tm.elems()])
+            }
+        }
+        DType::I32 => {
+            if tm.shape.is_empty() {
+                Ok(xla::Literal::from(0i32))
+            } else {
+                lit_i32(&tm.shape, &vec![0i32; tm.elems()])
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_meta_roundtrip() {
+        let text = "name=decode_gla2\nvariant=gla\nmax_len=512\nbatch=8\n\
+                    n_inputs=2\ninput.0=params.embed:f32:256,128\ninput.1=lens:i32:8\n\
+                    n_outputs=1\noutput.0=logits:f32:8,1,256\n";
+        let m = ArtifactMeta::parse(text).unwrap();
+        assert_eq!(m.name, "decode_gla2");
+        assert_eq!(m.usize_field("max_len").unwrap(), 512);
+        assert_eq!(m.inputs.len(), 2);
+        assert_eq!(m.inputs[0].shape, vec![256, 128]);
+        assert_eq!(m.inputs[1].dtype, DType::I32);
+        assert_eq!(m.output_index("logits"), Some(0));
+        assert_eq!(m.input_index("lens"), Some(1));
+        assert_eq!(m.input_index("nope"), None);
+    }
+
+    #[test]
+    fn meta_rejects_garbage() {
+        assert!(ArtifactMeta::parse("input.0=bad-line-no-colon").is_err());
+        assert!(ArtifactMeta::parse("???").is_err());
+    }
+
+    #[test]
+    fn literal_builders() {
+        let l = lit_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+        assert!(lit_f32(&[2, 2], &[1.0]).is_err());
+        let z = zeros_like(&TensorMeta {
+            name: "x".into(),
+            dtype: DType::I32,
+            shape: vec![4],
+        })
+        .unwrap();
+        assert_eq!(z.to_vec::<i32>().unwrap(), vec![0; 4]);
+    }
+}

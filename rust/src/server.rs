@@ -1,0 +1,517 @@
+//! Live serving over the real PJRT runtime: a continuous-batching engine
+//! that executes the AOT decode artifacts, a threaded server front-end,
+//! and a closed-loop load generator — the execution-scale counterpart of
+//! the simulated §B.6 benchmarks (real tokens, real wall-clock metrics).
+//!
+//! The model is the `tiny` artifact config (see python/compile/configs.py):
+//! batch slots are fixed at the artifact's lowered batch size; the engine
+//! continuously refills free slots from the waiting queue (prefill batch),
+//! splices the prefilled cache rows into the live decode cache, and runs
+//! one fused decode step per iteration — Python is never on this path.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::metrics::ServiceMetrics;
+use crate::runtime::{lit_f32, lit_i32, Artifact, Runtime, TensorMeta};
+use crate::workload::Request;
+
+/// Host-resident tensor state (f32) with its logical shape.
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    fn from_literal(meta: &TensorMeta, lit: &xla::Literal) -> Result<Self> {
+        Ok(HostTensor {
+            shape: meta.shape.clone(),
+            data: lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?,
+        })
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        lit_f32(&self.shape, &self.data)
+    }
+}
+
+/// A loaded tiny model: init/absorb/prefill/decode artifacts + parameters.
+pub struct TinyModel {
+    pub variant: String,
+    prefill: Artifact,
+    decode: Artifact,
+    /// named training parameters (prefill consumes these)
+    params_train: Vec<(String, xla::Literal)>,
+    /// named absorbed parameters (decode consumes these)
+    params_dec: Vec<(String, xla::Literal)>,
+    pub batch: usize,
+    pub prefill_t: usize,
+    pub max_len: usize,
+    pub vocab: usize,
+}
+
+/// Order `args` for an artifact by matching meta input names: `params.*`
+/// pulls from the named parameter list, everything else from `extras`.
+fn order_args(
+    art: &Artifact,
+    params: &[(String, xla::Literal)],
+    extras: &[(&str, xla::Literal)],
+) -> Result<Vec<xla::Literal>> {
+    let mut out = Vec::with_capacity(art.meta.inputs.len());
+    for tm in &art.meta.inputs {
+        if let Some(rest) = tm.name.strip_prefix("params.") {
+            let lit = params
+                .iter()
+                .find(|(n, _)| n == rest)
+                .map(|(_, l)| l.clone())
+                .ok_or_else(|| anyhow!("missing param {rest}"))?;
+            out.push(lit);
+        } else {
+            let lit = extras
+                .iter()
+                .find(|(n, _)| *n == tm.name)
+                .map(|(_, l)| l.clone())
+                .ok_or_else(|| anyhow!("missing arg {}", tm.name))?;
+            out.push(lit);
+        }
+    }
+    Ok(out)
+}
+
+impl TinyModel {
+    /// Load all artifacts of `variant`, initialize parameters on device
+    /// with `seed`, and absorb them for decoding.
+    pub fn load(rt: &Runtime, variant: &str, seed: i32) -> Result<Self> {
+        let init = rt.load(&format!("init_{variant}"))?;
+        let absorb = rt.load(&format!("absorb_{variant}"))?;
+        let prefill = rt.load(&format!("prefill_{variant}"))?;
+        let decode = rt.load(&format!("decode_{variant}"))?;
+
+        let seed_lit = lit_i32(&[1], &[seed])?;
+        let raw = init.run(&[seed_lit])?;
+        let params_train: Vec<(String, xla::Literal)> = init
+            .meta
+            .outputs
+            .iter()
+            .zip(raw)
+            .map(|(tm, l)| (tm.name.clone(), l))
+            .collect();
+        // absorb consumes the train params under their own names
+        let absorb_args: Vec<xla::Literal> = absorb
+            .meta
+            .inputs
+            .iter()
+            .map(|tm| {
+                params_train
+                    .iter()
+                    .find(|(n, _)| *n == tm.name)
+                    .map(|(_, l)| l.clone())
+                    .ok_or_else(|| anyhow!("absorb arg {} missing", tm.name))
+            })
+            .collect::<Result<_>>()?;
+        let raw = absorb.run(&absorb_args)?;
+        let params_dec: Vec<(String, xla::Literal)> = absorb
+            .meta
+            .outputs
+            .iter()
+            .zip(raw)
+            .map(|(tm, l)| (tm.name.clone(), l))
+            .collect();
+
+        let batch = prefill.meta.usize_field("batch")?;
+        let prefill_t = prefill.meta.usize_field("prefill_t")?;
+        let max_len = prefill.meta.usize_field("max_len")?;
+        let vocab = prefill.meta.usize_field("vocab")?;
+        Ok(TinyModel {
+            variant: variant.to_string(),
+            prefill,
+            decode,
+            params_train,
+            params_dec,
+            batch,
+            prefill_t,
+            max_len,
+            vocab,
+        })
+    }
+
+    /// Replace the model's parameters with externally trained ones (from
+    /// the train driver), re-absorbing for decode via the given artifact.
+    pub fn set_params(
+        &mut self,
+        absorb: &Artifact,
+        params: Vec<(String, xla::Literal)>,
+    ) -> Result<()> {
+        let args: Vec<xla::Literal> = absorb
+            .meta
+            .inputs
+            .iter()
+            .map(|tm| {
+                params
+                    .iter()
+                    .find(|(n, _)| *n == tm.name)
+                    .map(|(_, l)| l.clone())
+                    .ok_or_else(|| anyhow!("absorb arg {} missing", tm.name))
+            })
+            .collect::<Result<_>>()?;
+        let raw = absorb.run(&args)?;
+        self.params_dec = absorb
+            .meta
+            .outputs
+            .iter()
+            .zip(raw)
+            .map(|(tm, l)| (tm.name.clone(), l))
+            .collect();
+        self.params_train = params;
+        Ok(())
+    }
+
+    /// Prefill a full batch of token rows (padded to `prefill_t`).
+    /// Returns (logits, cache_main, cache_aux) as host tensors.
+    pub fn run_prefill(&self, tokens: &[i32]) -> Result<(HostTensor, HostTensor, HostTensor)> {
+        if tokens.len() != self.batch * self.prefill_t {
+            bail!("prefill wants {}x{} tokens", self.batch, self.prefill_t);
+        }
+        let toks = lit_i32(&[self.batch, self.prefill_t], tokens)?;
+        let args = order_args(&self.prefill, &self.params_train, &[("tokens", toks)])?;
+        let outs = self.prefill.run(&args)?;
+        let om = &self.prefill.meta.outputs;
+        let find = |n: &str| -> Result<usize> {
+            self.prefill
+                .meta
+                .output_index(n)
+                .ok_or_else(|| anyhow!("prefill output {n} missing"))
+        };
+        let (li, mi, ai) = (find("logits")?, find("main")?, find("aux")?);
+        Ok((
+            HostTensor::from_literal(&om[li], &outs[li])?,
+            HostTensor::from_literal(&om[mi], &outs[mi])?,
+            HostTensor::from_literal(&om[ai], &outs[ai])?,
+        ))
+    }
+
+    /// One decode step: tokens (B,) at per-sequence positions `lens`.
+    /// Returns (logits, new main, new aux).
+    pub fn run_decode(
+        &self,
+        main: &HostTensor,
+        aux: &HostTensor,
+        tokens: &[i32],
+        lens: &[i32],
+    ) -> Result<(HostTensor, HostTensor, HostTensor)> {
+        let toks = lit_i32(&[self.batch, 1], tokens)?;
+        let lens_l = lit_i32(&[self.batch], lens)?;
+        let args = order_args(
+            &self.decode,
+            &self.params_dec,
+            &[
+                ("tokens", toks),
+                ("lens", lens_l),
+                ("main", main.to_literal()?),
+                ("aux", aux.to_literal()?),
+            ],
+        )?;
+        let outs = self.decode.run(&args)?;
+        let om = &self.decode.meta.outputs;
+        let find = |n: &str| -> Result<usize> {
+            self.decode
+                .meta
+                .output_index(n)
+                .ok_or_else(|| anyhow!("decode output {n} missing"))
+        };
+        let (li, mi, ai) = (find("logits")?, find("main")?, find("aux")?);
+        Ok((
+            HostTensor::from_literal(&om[li], &outs[li])?,
+            HostTensor::from_literal(&om[mi], &outs[mi])?,
+            HostTensor::from_literal(&om[ai], &outs[ai])?,
+        ))
+    }
+
+    /// Clone a named absorbed (decode) parameter — used by drivers that
+    /// call auxiliary artifacts (e.g. the lq=2 speculative decode).
+    pub fn decode_param(&self, name: &str) -> Result<xla::Literal> {
+        self.params_dec
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, l)| l.clone())
+            .ok_or_else(|| anyhow!("no decode param {name}"))
+    }
+
+    /// Zero-filled cache pair matching the decode artifact's shapes.
+    pub fn empty_cache(&self) -> Result<(HostTensor, HostTensor)> {
+        let shape_of = |n: &str| -> Result<Vec<usize>> {
+            Ok(self.decode.meta.inputs[self
+                .decode
+                .meta
+                .input_index(n)
+                .ok_or_else(|| anyhow!("decode input {n} missing"))?]
+            .shape
+            .clone())
+        };
+        let sm = shape_of("main")?;
+        let sa = shape_of("aux")?;
+        Ok((
+            HostTensor { data: vec![0.0; sm.iter().product()], shape: sm },
+            HostTensor { data: vec![0.0; sa.iter().product()], shape: sa },
+        ))
+    }
+}
+
+/// Copy batch-row `src_b` of `src` into row `dst_b` of `dst` for a cache
+/// tensor laid out (n_layers, B, L, H, D).
+pub fn splice_cache_row(dst: &mut HostTensor, src: &HostTensor, dst_b: usize, src_b: usize) {
+    let (nl, b) = (dst.shape[0], dst.shape[1]);
+    let row: usize = dst.shape[2..].iter().product();
+    debug_assert_eq!(src.shape[0], nl);
+    let src_bs = src.shape[1];
+    for l in 0..nl {
+        let d0 = (l * b + dst_b) * row;
+        let s0 = (l * src_bs + src_b) * row;
+        dst.data[d0..d0 + row].copy_from_slice(&src.data[s0..s0 + row]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// continuous-batching engine over the real model
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct Slot {
+    req: Request,
+    len: usize,
+    produced: usize,
+    next_token: i32,
+    sent_t: Instant,
+    first_token_t: Option<Instant>,
+    last_token_t: Instant,
+}
+
+/// Continuous-batching engine executing real decode steps on PJRT-CPU.
+pub struct RealEngine {
+    pub model: TinyModel,
+    slots: Vec<Option<Slot>>,
+    waiting: VecDeque<(Request, Instant)>,
+    cache_main: HostTensor,
+    cache_aux: HostTensor,
+    pub metrics: ServiceMetrics,
+    pub steps: u64,
+}
+
+impl RealEngine {
+    pub fn new(model: TinyModel) -> Result<Self> {
+        let (cache_main, cache_aux) = model.empty_cache()?;
+        let slots = vec![None; model.batch];
+        Ok(RealEngine {
+            model,
+            slots,
+            waiting: VecDeque::new(),
+            cache_main,
+            cache_aux,
+            metrics: ServiceMetrics::default(),
+            steps: 0,
+        })
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.waiting.push_back((req, Instant::now()));
+    }
+
+    pub fn idle(&self) -> bool {
+        self.waiting.is_empty() && self.slots.iter().all(|s| s.is_none())
+    }
+
+    /// Deterministic prompt for request ids (the serving benchmark follows
+    /// the paper in benchmarking performance, not content: §B.6 serves a
+    /// randomly-initialized restructured model).
+    pub fn prompt_tokens(&self, req: &Request) -> Vec<i32> {
+        let v = self.model.vocab as u64;
+        (0..req.prompt_len)
+            .map(|i| (((req.id as u64).wrapping_mul(31) + i as u64 * 7) % v) as i32)
+            .collect()
+    }
+
+    /// Refill free slots: batch-prefill up to `batch` waiting prompts and
+    /// splice their cache rows into the live cache.
+    fn refill(&mut self) -> Result<()> {
+        let free: Vec<usize> = (0..self.slots.len())
+            .filter(|&i| self.slots[i].is_none())
+            .collect();
+        if free.is_empty() || self.waiting.is_empty() {
+            return Ok(());
+        }
+        let n = free.len().min(self.waiting.len());
+        let t = self.model.prefill_t;
+        let mut tokens = vec![0i32; self.model.batch * t];
+        let mut admitted = Vec::new();
+        for bi in 0..n {
+            let (req, sent) = self.waiting.pop_front().unwrap();
+            let prompt = self.prompt_tokens(&req);
+            let plen = prompt.len().min(t);
+            tokens[bi * t..bi * t + plen].copy_from_slice(&prompt[..plen]);
+            admitted.push((free[bi], bi, req, sent, plen));
+        }
+        let (logits, pm, pa) = self.model.run_prefill(&tokens)?;
+        let now = Instant::now();
+        let vocab = self.model.vocab;
+        for (slot, bi, req, sent, plen) in admitted {
+            splice_cache_row(&mut self.cache_main, &pm, slot, bi);
+            splice_cache_row(&mut self.cache_aux, &pa, slot, bi);
+            // greedy first token from the last prompt position
+            let base = (bi * t + plen - 1) * vocab;
+            let row = &logits.data[base..base + vocab];
+            let tok = argmax(row);
+            self.metrics.output_tokens += 1;
+            self.slots[slot] = Some(Slot {
+                req,
+                len: plen,
+                produced: 1,
+                next_token: tok,
+                sent_t: sent,
+                first_token_t: Some(now),
+                last_token_t: now,
+            });
+        }
+        Ok(())
+    }
+
+    /// One engine iteration: refill slots, then one fused decode step.
+    pub fn step(&mut self) -> Result<()> {
+        self.refill()?;
+        if self.slots.iter().all(|s| s.is_none()) {
+            return Ok(());
+        }
+        let b = self.model.batch;
+        let mut tokens = vec![0i32; b];
+        let mut lens = vec![0i32; b];
+        for (i, s) in self.slots.iter().enumerate() {
+            if let Some(s) = s {
+                tokens[i] = s.next_token;
+                lens[i] = s.len as i32;
+            }
+        }
+        let (logits, nm, na) =
+            self.model
+                .run_decode(&self.cache_main, &self.cache_aux, &tokens, &lens)?;
+        self.cache_main = nm;
+        self.cache_aux = na;
+        self.steps += 1;
+        let now = Instant::now();
+        let vocab = self.model.vocab;
+        for i in 0..b {
+            let Some(s) = &mut self.slots[i] else { continue };
+            s.len += 1;
+            s.produced += 1;
+            self.metrics.itl.record(now.duration_since(s.last_token_t).as_secs_f64());
+            s.last_token_t = now;
+            self.metrics.output_tokens += 1;
+            s.next_token = argmax(&logits.data[i * vocab..(i + 1) * vocab]);
+            let done = s.produced >= s.req.decode_len || s.len + 1 >= self.model.max_len;
+            if done {
+                self.metrics
+                    .e2e
+                    .record(now.duration_since(s.sent_t).as_secs_f64());
+                self.metrics.ttft.record(
+                    s.first_token_t
+                        .unwrap_or(now)
+                        .duration_since(s.sent_t)
+                        .as_secs_f64(),
+                );
+                self.slots[i] = None;
+            }
+        }
+        Ok(())
+    }
+
+    /// Drain everything; returns wall-clock seconds.
+    pub fn run_to_completion(&mut self) -> Result<f64> {
+        let t0 = Instant::now();
+        while !self.idle() {
+            self.step()?;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        self.metrics.duration = dt;
+        Ok(dt)
+    }
+}
+
+fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in row.iter().enumerate() {
+        if x > row[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+// ---------------------------------------------------------------------------
+// threaded live server + closed-loop load generator
+// ---------------------------------------------------------------------------
+
+/// Run a live threaded benchmark: a server thread constructs and owns the
+/// engine (PJRT handles are not `Send`, so the model must be born on the
+/// serving thread); the load generator keeps `concurrency` requests in
+/// flight. Returns the populated wall-clock metrics.
+pub fn serve_benchmark(
+    artifact_dir: &str,
+    variant: &str,
+    seed: i32,
+    reqs: Vec<Request>,
+    concurrency: usize,
+) -> Result<ServiceMetrics> {
+    let (tx, rx) = mpsc::channel::<Request>();
+    let (done_tx, done_rx) = mpsc::channel::<usize>();
+    let n_total = reqs.len();
+    let dir = artifact_dir.to_string();
+    let variant = variant.to_string();
+
+    let server = std::thread::spawn(move || -> Result<ServiceMetrics> {
+        let rt = Runtime::new(&dir)?;
+        let model = TinyModel::load(&rt, &variant, seed)?;
+        let mut eng = RealEngine::new(model)?;
+        let mut finished = 0usize;
+        let t0 = Instant::now();
+        while finished < n_total {
+            // ingest without blocking the decode loop
+            while let Ok(r) = rx.try_recv() {
+                eng.submit(r);
+            }
+            if eng.idle() {
+                if let Ok(r) = rx.recv() {
+                    eng.submit(r);
+                } else {
+                    break;
+                }
+            }
+            let before: usize = eng.metrics.e2e.len();
+            eng.step()?;
+            let after: usize = eng.metrics.e2e.len();
+            for _ in before..after {
+                finished += 1;
+                let _ = done_tx.send(finished);
+            }
+        }
+        eng.metrics.duration = t0.elapsed().as_secs_f64();
+        Ok(eng.metrics)
+    });
+
+    // closed-loop client
+    let mut completed = 0usize;
+    let mut queue: VecDeque<Request> = reqs.into();
+    for _ in 0..concurrency.min(n_total) {
+        tx.send(queue.pop_front().unwrap()).context("send")?;
+    }
+    while completed < n_total {
+        let _ = done_rx.recv().context("server died")?;
+        completed += 1;
+        if let Some(r) = queue.pop_front() {
+            tx.send(r).context("send")?;
+        }
+    }
+    drop(tx);
+    server.join().map_err(|_| anyhow!("server panicked"))?
+}

@@ -1,0 +1,228 @@
+//! Training driver: runs the AOT `train_<variant>` artifact in a loop over
+//! a deterministic synthetic bigram corpus — the quality experiment
+//! substitute for the paper's FineWeb-Edu runs (DESIGN.md §substitutions).
+//!
+//! Everything executes through PJRT from Rust: params are initialized by
+//! the `init` artifact, AdamW state starts at zero, and each step feeds a
+//! (B, T+1) token batch. The per-variant loss curves (GTA ≤ GQA,
+//! GLA ≈ MLA) are the reproduced *shape* of Tables 2/5.
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{lit_f32_scalar, lit_i32, zeros_like, Artifact, Runtime};
+use crate::workload::Rng;
+
+/// Deterministic synthetic bigram language (mirrors python train.py in
+/// spirit; Rust generates its own batches so training never touches
+/// Python). Zipf-ish unigram base + a few preferred continuations.
+pub struct Corpus {
+    cum: Vec<Vec<f32>>, // cumulative transition rows
+    vocab: usize,
+}
+
+impl Corpus {
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let zipf: Vec<f32> = (1..=vocab).map(|r| 1.0 / r as f32).collect();
+        let z: f32 = zipf.iter().sum();
+        let mut cum = Vec::with_capacity(vocab);
+        for _ in 0..vocab {
+            // 30% zipf soup + 70% mass on 8 preferred continuations
+            let mut row: Vec<f32> = zipf.iter().map(|p| 0.3 * p / z).collect();
+            for _ in 0..8 {
+                row[rng.range(0, vocab - 1)] += 0.7 / 8.0;
+            }
+            let total: f32 = row.iter().sum();
+            let mut acc = 0.0;
+            let c: Vec<f32> = row
+                .iter()
+                .map(|p| {
+                    acc += p / total;
+                    acc
+                })
+                .collect();
+            cum.push(c);
+        }
+        Corpus { cum, vocab }
+    }
+
+    /// Sample a (batch, seq+1) token block, deterministic in `rng`.
+    pub fn batch(&self, rng: &mut Rng, batch: usize, seq: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(batch * (seq + 1));
+        for _ in 0..batch {
+            let mut t = rng.range(0, self.vocab - 1);
+            for _ in 0..=seq {
+                let u = rng.f64() as f32;
+                t = self.cum[t].partition_point(|&c| c < u).min(self.vocab - 1);
+                out.push(t as i32);
+            }
+        }
+        out
+    }
+}
+
+/// One variant's training session over the AOT artifacts.
+pub struct Trainer {
+    train: Artifact,
+    /// flat state in the train artifact's input order (params ++ opt)
+    state: Vec<xla::Literal>,
+    /// indices of `state` within train inputs (everything except batch/lr)
+    batch_idx: usize,
+    lr_idx: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    loss_out: usize,
+}
+
+impl Trainer {
+    /// Initialize from artifacts: params from `init_<v>`, AdamW zeros.
+    pub fn new(rt: &Runtime, variant: &str, seed: i32) -> Result<Self> {
+        let init = rt.load(&format!("init_{variant}"))?;
+        let train = rt.load(&format!("train_{variant}"))?;
+        let params = init.run(&[lit_i32(&[1], &[seed])?])?;
+        let batch = train.meta.usize_field("train_b")?;
+        let seq = train.meta.usize_field("train_t")?;
+        let vocab = train.meta.usize_field("vocab")?;
+
+        // Assemble initial state in input order: params.* come from init
+        // outputs (same names), opt.* start at zero, batch/lr are per-step.
+        let mut state = Vec::new();
+        let mut batch_idx = usize::MAX;
+        let mut lr_idx = usize::MAX;
+        for (i, tm) in train.meta.inputs.iter().enumerate() {
+            if tm.name == "batch" {
+                batch_idx = i;
+                state.push(zeros_like(tm)?); // placeholder
+            } else if tm.name == "lr" {
+                lr_idx = i;
+                state.push(lit_f32_scalar(0.0));
+            } else if let Some(rest) = tm.name.strip_prefix("params.") {
+                let j = init
+                    .meta
+                    .outputs
+                    .iter()
+                    .position(|o| o.name == rest)
+                    .ok_or_else(|| anyhow!("init missing {rest}"))?;
+                state.push(params[j].clone());
+            } else {
+                // opt.m.* / opt.v.* / opt.step — zeros
+                state.push(zeros_like(tm)?);
+            }
+        }
+        let loss_out = train
+            .meta
+            .output_index("loss")
+            .ok_or_else(|| anyhow!("train artifact has no loss output"))?;
+        Ok(Trainer { train, state, batch_idx, lr_idx, batch, seq, vocab, loss_out })
+    }
+
+    /// One optimizer step; returns the loss.
+    pub fn step(&mut self, tokens: &[i32], lr: f32) -> Result<f32> {
+        self.state[self.batch_idx] = lit_i32(&[self.batch, self.seq + 1], tokens)?;
+        self.state[self.lr_idx] = lit_f32_scalar(lr);
+        let outs = self.train.run(&self.state)?;
+        let loss = outs[self.loss_out]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("loss: {e:?}"))?[0];
+        // thread updated params/opt back into the state (outputs carry the
+        // same names as inputs: params.*, opt.*)
+        for (tm, lit) in self.train.meta.outputs.iter().zip(outs) {
+            if tm.name == "loss" {
+                continue;
+            }
+            let i = self
+                .train
+                .meta
+                .inputs
+                .iter()
+                .position(|im| im.name == tm.name)
+                .ok_or_else(|| anyhow!("output {} has no input slot", tm.name))?;
+            self.state[i] = lit;
+        }
+        Ok(loss)
+    }
+
+    /// Current named parameters (for handoff to the serving engine).
+    pub fn params(&self) -> Vec<(String, xla::Literal)> {
+        self.train
+            .meta
+            .inputs
+            .iter()
+            .enumerate()
+            .filter_map(|(i, tm)| {
+                tm.name
+                    .strip_prefix("params.")
+                    .map(|rest| (rest.to_string(), self.state[i].clone()))
+            })
+            .collect()
+    }
+
+    /// Cosine learning-rate schedule to 1% of max (paper §B.1).
+    pub fn lr_at(step: usize, total: usize, max_lr: f32) -> f32 {
+        let t = step as f32 / total.max(1) as f32;
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+        max_lr * (0.01 + 0.99 * cos)
+    }
+}
+
+/// Train `variant` for `steps` steps; returns the loss curve.
+pub fn train_variant(
+    rt: &Runtime,
+    variant: &str,
+    steps: usize,
+    seed: u64,
+    max_lr: f32,
+) -> Result<Vec<f32>> {
+    let mut tr = Trainer::new(rt, variant, seed as i32)?;
+    let corpus = Corpus::new(tr.vocab, 1234); // shared language across variants
+    let mut rng = Rng::new(seed + 1); // shared batch stream across variants
+    let mut losses = Vec::with_capacity(steps);
+    for s in 0..steps {
+        let toks = corpus.batch(&mut rng, tr.batch, tr.seq);
+        let lr = Trainer::lr_at(s, steps, max_lr);
+        losses.push(tr.step(&toks, lr)?);
+    }
+    Ok(losses)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_deterministic_and_in_vocab() {
+        let c = Corpus::new(256, 7);
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = c.batch(&mut r1, 4, 32);
+        let b = c.batch(&mut r2, 4, 32);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4 * 33);
+        assert!(a.iter().all(|&t| (0..256).contains(&t)));
+    }
+
+    #[test]
+    fn corpus_has_bigram_structure() {
+        // preferred continuations should make some bigrams much more
+        // frequent than the unigram base rate
+        let c = Corpus::new(64, 7);
+        let mut rng = Rng::new(1);
+        let toks = c.batch(&mut rng, 1, 4000);
+        let mut big = std::collections::HashMap::new();
+        for w in toks.windows(2) {
+            *big.entry((w[0], w[1])).or_insert(0usize) += 1;
+        }
+        let max_big = *big.values().max().unwrap();
+        assert!(max_big > 20, "peaked bigrams expected, max count {max_big}");
+    }
+
+    #[test]
+    fn lr_schedule_decays_to_one_percent() {
+        let lr0 = Trainer::lr_at(0, 100, 1.0);
+        let lr_end = Trainer::lr_at(100, 100, 1.0);
+        assert!((lr0 - 1.0).abs() < 1e-5);
+        assert!((lr_end - 0.01).abs() < 1e-5);
+        assert!(Trainer::lr_at(50, 100, 1.0) < lr0);
+    }
+}

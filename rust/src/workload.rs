@@ -1,0 +1,121 @@
+//! Workload generation: the request-length distributions of §B.6 and a
+//! deterministic xorshift PRNG (no external rand crate; results are
+//! reproducible by seed, which EXPERIMENTS.md relies on).
+
+/// Minimal xorshift64* PRNG — deterministic, seedable, no dependencies.
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        if hi <= lo {
+            return lo;
+        }
+        lo + (self.next_u64() % (hi - lo + 1) as u64) as usize
+    }
+}
+
+/// One request to the serving system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Request {
+    pub id: usize,
+    pub prompt_len: usize,
+    pub decode_len: usize,
+}
+
+/// §B.6 length distributions. `random_ratio` is the paper's knob: each
+/// length is drawn uniformly from [ratio·max, max] (ratio 0 = from 1).
+#[derive(Debug, Clone, Copy)]
+pub enum LengthDist {
+    /// every request identical (the 8K/4K style rows)
+    Fixed { prompt: usize, decode: usize },
+    /// uniform with the paper's random-ratio lower bound (§B.6.3)
+    RandomRatio { max_prompt: usize, max_decode: usize, ratio: f64 },
+    /// the §5.2 mixed load: mostly short prompts, every k-th very long
+    ImbalancedMix { short: usize, long: usize, decode: usize, every: usize },
+}
+
+/// Deterministic benchmark workload: `n` requests (paper: 1280) submitted
+/// through a closed-loop concurrency limiter by the load generator.
+pub fn generate(dist: LengthDist, n: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|id| match dist {
+            LengthDist::Fixed { prompt, decode } => Request { id, prompt_len: prompt, decode_len: decode },
+            LengthDist::RandomRatio { max_prompt, max_decode, ratio } => {
+                let plo = ((max_prompt as f64 * ratio) as usize).max(1);
+                let dlo = ((max_decode as f64 * ratio) as usize).max(1);
+                Request {
+                    id,
+                    prompt_len: rng.range(plo, max_prompt),
+                    decode_len: rng.range(dlo, max_decode),
+                }
+            }
+            LengthDist::ImbalancedMix { short, long, decode, every } => Request {
+                id,
+                prompt_len: if every > 0 && id % every == every - 1 { long } else { short },
+                decode_len: decode,
+            },
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_by_seed() {
+        let d = LengthDist::RandomRatio { max_prompt: 131_072, max_decode: 4096, ratio: 0.125 };
+        assert_eq!(generate(d, 64, 7), generate(d, 64, 7));
+        assert_ne!(generate(d, 64, 7), generate(d, 64, 8));
+    }
+
+    #[test]
+    fn random_ratio_bounds() {
+        let d = LengthDist::RandomRatio { max_prompt: 4096, max_decode: 4096, ratio: 0.125 };
+        for r in generate(d, 500, 1) {
+            assert!(r.prompt_len >= 512 && r.prompt_len <= 4096, "{r:?}");
+            assert!(r.decode_len >= 512 && r.decode_len <= 4096);
+        }
+        // ratio 0 starts at 1 token
+        let d0 = LengthDist::RandomRatio { max_prompt: 4096, max_decode: 4096, ratio: 0.0 };
+        assert!(generate(d0, 500, 1).iter().any(|r| r.prompt_len < 512));
+    }
+
+    #[test]
+    fn imbalanced_mix_places_long() {
+        // §5.2: one very long sequence per group of four
+        let d = LengthDist::ImbalancedMix { short: 1024, long: 131_072, decode: 4096, every: 4 };
+        let reqs = generate(d, 8, 1);
+        assert_eq!(reqs[3].prompt_len, 131_072);
+        assert_eq!(reqs[7].prompt_len, 131_072);
+        assert_eq!(reqs[0].prompt_len, 1024);
+    }
+
+    #[test]
+    fn rng_uniformish() {
+        let mut rng = Rng::new(42);
+        let mean: f64 = (0..10_000).map(|_| rng.f64()).sum::<f64>() / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "{mean}");
+    }
+}

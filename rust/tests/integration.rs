@@ -1,0 +1,135 @@
+//! Integration tests over the PJRT runtime + real artifacts.
+//!
+//! These need `make artifacts` (skipped with a clear message otherwise)
+//! and exercise the exact path the serving binary uses: meta parsing,
+//! HLO-text compile, parameter init on device, absorption, prefill,
+//! batched decode with ragged per-sequence lengths, and failure paths.
+
+use gla_serve::runtime::Runtime;
+use gla_serve::server::{RealEngine, TinyModel};
+use gla_serve::workload::Request;
+
+fn artifacts() -> Option<String> {
+    let dir = std::env::var("GLA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    std::path::Path::new(&dir).join("decode_gla2.meta.txt").exists().then_some(dir)
+}
+
+macro_rules! need_artifacts {
+    () => {
+        match artifacts() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts/ not built");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn decode_round_trip_all_variants() {
+    let dir = need_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    for variant in ["gqa4", "gta4", "mla", "gla2"] {
+        let model = TinyModel::load(&rt, variant, 0).unwrap();
+        let (main, aux) = model.empty_cache().unwrap();
+        let b = model.batch;
+        // ragged lens: rows at different positions in the same step
+        let lens: Vec<i32> = (0..b as i32).map(|i| i * 3).collect();
+        let tokens: Vec<i32> = (0..b as i32).map(|i| (i * 7) % 256).collect();
+        let (logits, nm, na) = model.run_decode(&main, &aux, &tokens, &lens).unwrap();
+        assert_eq!(logits.shape, vec![b, 1, model.vocab]);
+        assert!(logits.data.iter().all(|x| x.is_finite()), "{variant}: non-finite logits");
+        // the cache must have changed exactly at the written positions
+        assert_ne!(nm.data, main.data, "{variant}: main cache unchanged");
+        assert_ne!(na.data, aux.data, "{variant}: aux cache unchanged");
+    }
+}
+
+#[test]
+fn decode_is_deterministic() {
+    let dir = need_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let model = TinyModel::load(&rt, "gla2", 0).unwrap();
+    let (main, aux) = model.empty_cache().unwrap();
+    let tokens = vec![5i32; model.batch];
+    let lens = vec![0i32; model.batch];
+    let (l1, m1, _) = model.run_decode(&main, &aux, &tokens, &lens).unwrap();
+    let (l2, m2, _) = model.run_decode(&main, &aux, &tokens, &lens).unwrap();
+    assert_eq!(l1.data, l2.data);
+    assert_eq!(m1.data, m2.data);
+}
+
+#[test]
+fn same_seed_same_params_different_seed_differs() {
+    let dir = need_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let m0 = TinyModel::load(&rt, "gla2", 0).unwrap();
+    let m0b = TinyModel::load(&rt, "gla2", 0).unwrap();
+    let m1 = TinyModel::load(&rt, "gla2", 1).unwrap();
+    let (main, aux) = m0.empty_cache().unwrap();
+    let toks = vec![1i32; m0.batch];
+    let lens = vec![0i32; m0.batch];
+    let (a, _, _) = m0.run_decode(&main, &aux, &toks, &lens).unwrap();
+    let (b, _, _) = m0b.run_decode(&main, &aux, &toks, &lens).unwrap();
+    let (c, _, _) = m1.run_decode(&main, &aux, &toks, &lens).unwrap();
+    assert_eq!(a.data, b.data, "same seed must reproduce");
+    assert_ne!(a.data, c.data, "different seed must differ");
+}
+
+#[test]
+fn engine_serves_mixed_lengths() {
+    let dir = need_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let model = TinyModel::load(&rt, "gta4", 0).unwrap();
+    let mut eng = RealEngine::new(model).unwrap();
+    for (i, (p, d)) in [(16usize, 4usize), (96, 8), (3, 2), (200, 6)].iter().enumerate() {
+        eng.submit(Request { id: i, prompt_len: *p, decode_len: *d });
+    }
+    eng.run_to_completion().unwrap();
+    assert_eq!(eng.metrics.e2e.len(), 4);
+    assert_eq!(eng.metrics.output_tokens, (4 + 8 + 2 + 6) as u64);
+}
+
+#[test]
+fn continuous_batching_interleaves() {
+    // more requests than slots: later requests must join mid-flight
+    let dir = need_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let model = TinyModel::load(&rt, "gla2", 0).unwrap();
+    let nslots = model.batch;
+    let mut eng = RealEngine::new(model).unwrap();
+    for i in 0..nslots + 4 {
+        eng.submit(Request { id: i, prompt_len: 8, decode_len: 6 });
+    }
+    eng.run_to_completion().unwrap();
+    assert_eq!(eng.metrics.e2e.len(), nslots + 4);
+}
+
+#[test]
+fn missing_artifact_is_clean_error() {
+    let dir = need_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let err = match rt.load("decode_nonexistent") {
+        Err(e) => e,
+        Ok(_) => panic!("loading a missing artifact must fail"),
+    };
+    assert!(format!("{err:?}").contains("decode_nonexistent"));
+    let err = match TinyModel::load(&rt, "nonexistent", 0) {
+        Err(e) => e,
+        Ok(_) => panic!("loading a missing variant must fail"),
+    };
+    assert!(format!("{err:?}").contains("nonexistent"));
+}
+
+#[test]
+fn wrong_arity_is_clean_error() {
+    let dir = need_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let art = rt.load("init_gla2").unwrap();
+    let err = match art.run(&[]) {
+        Err(e) => e,
+        Ok(_) => panic!("wrong arity must fail"),
+    };
+    assert!(format!("{err}").contains("wants"));
+}

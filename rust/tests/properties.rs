@@ -1,0 +1,205 @@
+//! Randomized property tests (seeded xorshift; no external proptest crate
+//! is vendored in this environment — DESIGN.md documents the substitution).
+//! Each property runs a few hundred random cases and shrink-prints the
+//! failing seed, which is enough to reproduce deterministically.
+
+use gla_serve::attention::Variant;
+use gla_serve::config::{ServingConfig, DSV2};
+use gla_serve::engine::run_benchmark;
+use gla_serve::hardware::DeviceModel;
+use gla_serve::kvcache::{PagePool, PageStore, RadixIndex};
+use gla_serve::workload::{generate, LengthDist, Rng};
+
+fn variants(rng: &mut Rng) -> Variant {
+    let names = ["mha", "mqa", "gqa4", "gqa8", "gta4", "gta8", "mla", "gla2", "gla4", "gla8"];
+    let h_q = [8usize, 16, 32, 128][rng.range(0, 3)];
+    let d_h = [64usize, 128][rng.range(0, 1)];
+    loop {
+        let n = names[rng.range(0, names.len() - 1)];
+        if let Some(v) = Variant::parse(n, h_q, d_h) {
+            if v.h_q() % v.h_kv() == 0 && v.h_kv() <= v.h_q() {
+                return v;
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_kv_bytes_monotone_in_tp_and_bounded() {
+    // sharding can never increase per-device bytes, and per-device bytes
+    // times ranks can never be less than the unsharded total
+    let mut rng = Rng::new(0xC0FFEE);
+    for case in 0..500 {
+        let v = variants(&mut rng);
+        let total = v.kv_bytes_per_token(2);
+        let mut prev = usize::MAX;
+        for tp in [1usize, 2, 4, 8, 16] {
+            let b = v.kv_bytes_per_token_per_device(tp, 2);
+            assert!(b <= prev, "case {case} {}: tp={tp} grew {prev}->{b}", v.name());
+            assert!(b * tp >= total, "case {case} {}: lost cache at tp={tp}", v.name());
+            prev = b;
+        }
+    }
+}
+
+#[test]
+fn prop_duplication_factor_matches_bytes() {
+    // zero redundancy <=> per-device bytes * tp == unsharded bytes
+    // (up to the broadcast rope head, which is always replicated)
+    let mut rng = Rng::new(42);
+    for _ in 0..500 {
+        let v = variants(&mut rng);
+        for tp in [1usize, 2, 4, 8] {
+            let zero_red = v.zero_redundancy(tp);
+            let per_dev_main = v.m_kv() * v.heads_per_rank(tp) * v.main_head_dim();
+            let total_main = v.m_kv() * v.h_kv() * v.main_head_dim();
+            if zero_red {
+                assert_eq!(per_dev_main * tp, total_main, "{} tp={tp}", v.name());
+            } else {
+                assert!(per_dev_main * tp > total_main, "{} tp={tp}", v.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_intensity_increases_with_gq_decreases_with_mkv() {
+    // Table 1's design rule: AI ≈ 2 g_q / m_kv
+    for h_kv in [1usize, 2, 4, 8, 16] {
+        let gqa = Variant::Gqa { h_q: 32, h_kv, d_h: 128 };
+        let gta = Variant::Gta { h_q: 32, h_kv, d_h: 128 };
+        let ai_gqa = gqa.arithmetic_intensity(1 << 20, 1, 2);
+        let ai_gta = gta.arithmetic_intensity(1 << 20, 1, 2);
+        // the broadcast RoPE half dilutes the 2x for tiny h_kv (1.5 d_h vs
+        // 2 d_h at h_kv=1); from h_kv=2 the ratio approaches 16/9 -> 2
+        let floor = if h_kv == 1 { 1.3 } else { 1.5 };
+        assert!(ai_gta > floor * ai_gqa, "tying must ~double AI (h_kv={h_kv})");
+        if h_kv > 1 {
+            let coarser = Variant::Gqa { h_q: 32, h_kv: h_kv / 2, d_h: 128 };
+            assert!(coarser.arithmetic_intensity(1 << 20, 1, 2) > ai_gqa);
+        }
+    }
+}
+
+#[test]
+fn prop_pool_never_leaks_pages() {
+    // random alloc/grow/fork/release interleavings preserve invariants
+    let mut rng = Rng::new(7);
+    for case in 0..60 {
+        let ps = [1usize, 4, 16, 64][rng.range(0, 3)];
+        let mut pool = PagePool::new(rng.range(8, 64), ps);
+        let mut live: Vec<u64> = Vec::new();
+        for op in 0..300 {
+            match rng.range(0, 3) {
+                0 => {
+                    let id = (case * 1000 + op) as u64;
+                    if pool.allocate(id, rng.range(1, 100)) {
+                        live.push(id);
+                    }
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let id = live[rng.range(0, live.len() - 1)];
+                        let _ = pool.grow(id, rng.range(1, 20));
+                    }
+                }
+                2 => {
+                    if !live.is_empty() {
+                        let parent = live[rng.range(0, live.len() - 1)];
+                        let child = (case * 1000 + op) as u64 + 500_000;
+                        if pool.fork_prefix(parent, child, rng.range(0, 64)) {
+                            live.push(child);
+                        }
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let i = rng.range(0, live.len() - 1);
+                        pool.release(live.swap_remove(i));
+                    }
+                }
+            }
+            pool.check_invariants().unwrap_or_else(|e| panic!("case {case} op {op}: {e}"));
+        }
+        for id in live {
+            pool.release(id);
+        }
+        pool.check_invariants().unwrap();
+        assert_eq!(pool.pages_free(), pool.pages_total(), "case {case} leaked");
+    }
+}
+
+#[test]
+fn prop_gather_strategies_always_agree() {
+    let mut rng = Rng::new(11);
+    for case in 0..80 {
+        let ps = [1usize, 2, 8, 32, 64][rng.range(0, 4)];
+        let re = [4usize, 64, 576][rng.range(0, 2)];
+        let n_pages = rng.range(4, 40);
+        let mut store = PageStore::new(n_pages, ps, re);
+        store.fill_from(&mut rng);
+        let mut table: Vec<u32> = (0..n_pages as u32).collect();
+        for i in (1..table.len()).rev() {
+            table.swap(i, rng.range(0, i));
+        }
+        let rows = rng.range(1, n_pages * ps);
+        let mut a = vec![0.0; rows * re];
+        let mut b = vec![0.0; rows * re];
+        store.gather_naive(&table, rows, &mut a);
+        store.gather_distributed(&table, rows, &mut b);
+        assert_eq!(a, b, "case {case}: ps={ps} re={re} rows={rows}");
+    }
+}
+
+#[test]
+fn prop_radix_prefix_is_page_aligned_and_correct() {
+    let mut rng = Rng::new(5);
+    for case in 0..200 {
+        let ps = [1usize, 2, 4, 16][rng.range(0, 3)];
+        let n = rng.range(ps, 6 * ps);
+        let toks: Vec<u32> = (0..n).map(|_| rng.range(0, 7) as u32).collect();
+        let mut idx = RadixIndex::new();
+        idx.insert(1, &toks, ps);
+        // a query equal to the inserted tokens matches all full pages
+        let full = (n / ps) * ps;
+        match idx.longest_prefix(&toks, ps) {
+            Some((seq, m)) => {
+                assert_eq!(seq, 1);
+                assert_eq!(m, full, "case {case}");
+                assert_eq!(m % ps, 0);
+            }
+            None => assert_eq!(full, 0, "case {case}"),
+        }
+    }
+}
+
+#[test]
+fn prop_sim_benchmark_conserves_requests_and_tokens() {
+    // failure-injection-ish: random workloads and layouts never lose or
+    // double-count requests, and throughput is finite and positive
+    let mut rng = Rng::new(13);
+    for case in 0..12 {
+        let m = DSV2;
+        let (tp, dp) = [(8usize, 1usize), (4, 2), (2, 4)][rng.range(0, 2)];
+        let dist = LengthDist::RandomRatio {
+            max_prompt: 16_384,
+            max_decode: 512,
+            ratio: 0.1,
+        };
+        let n = rng.range(8, 48);
+        let conc = rng.range(1, 24);
+        let reqs = generate(dist, n, case as u64);
+        let expected_tokens: u64 = reqs.iter().map(|r| r.decode_len as u64).sum();
+        let met = run_benchmark(
+            m,
+            m.variant("gla8"),
+            ServingConfig::with_parallelism(tp, dp),
+            DeviceModel::h100_serving(),
+            &reqs,
+            conc,
+        );
+        assert_eq!(met.e2e.len(), n, "case {case}");
+        assert_eq!(met.output_tokens, expected_tokens, "case {case}");
+        assert!(met.throughput().is_finite() && met.throughput() > 0.0);
+    }
+}
