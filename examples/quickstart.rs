@@ -4,7 +4,7 @@
 //!
 //!     make artifacts && cargo run --release --example quickstart [variant]
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use gla_serve::runtime::Runtime;
 use gla_serve::server::{RealEngine, TinyModel};
 use gla_serve::workload::Request;
@@ -22,10 +22,10 @@ fn main() -> Result<()> {
         model.batch, model.prefill_t, model.max_len, model.vocab
     );
 
-    let mut eng = RealEngine::new(model)?;
+    let mut eng = RealEngine::new(model).map_err(|e| anyhow!("engine: {e}"))?;
     // serve one request: 32-token prompt, 16 decoded tokens
-    eng.submit(Request { id: 1, prompt_len: 32, decode_len: 16 });
-    let dt = eng.run_to_completion()?;
+    eng.submit(Request::new(1, 32, 16));
+    let dt = eng.run_to_completion().map_err(|e| anyhow!("serve: {e}"))?;
     let (e2e, ttft, itl, tput) = eng.metrics.paper_row();
     println!(
         "served 1 request in {dt:.3}s  e2e={e2e:.3}s ttft={ttft:.3}s itl={itl:.1}ms {tput:.1} tok/s"

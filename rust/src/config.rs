@@ -7,6 +7,7 @@
 //! §B.6).
 
 use crate::attention::Variant;
+use crate::sched::{DriveMode, PolicyKind};
 
 /// Transformer shapes relevant to the performance models.
 #[derive(Debug, Clone, Copy)]
@@ -119,6 +120,14 @@ pub struct ServingConfig {
     pub page_size: usize,
     /// per-device HBM bytes available for KV cache
     pub kv_hbm_budget: u64,
+    /// scheduling policy (admission order + prefill/decode arbitration)
+    pub policy: PolicyKind,
+    /// how the load generator drives the engine: closed-loop concurrency
+    /// (the paper's §B.6 setup) or open-loop Poisson arrivals (QPS sweeps).
+    /// `SimEngine::new`/`run_benchmark` override this with their explicit
+    /// concurrency argument; `SimEngine::from_config`/`run_benchmark_with`
+    /// honor it.
+    pub drive: DriveMode,
 }
 
 impl Default for ServingConfig {
@@ -132,6 +141,8 @@ impl Default for ServingConfig {
             page_size: 64,
             // 80 GB H100 minus weights/activations headroom ≈ 48 GB for KV
             kv_hbm_budget: 48 * (1 << 30),
+            policy: PolicyKind::Fcfs,
+            drive: DriveMode::Closed { concurrency: 64 },
         }
     }
 }
@@ -140,6 +151,23 @@ impl ServingConfig {
     pub fn with_parallelism(tp: usize, dp: usize) -> Self {
         ServingConfig { tp, dp, hybrid_barrier: dp > 1, ..Default::default() }
     }
+
+    pub fn with_policy(mut self, policy: PolicyKind) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_drive(mut self, drive: DriveMode) -> Self {
+        self.drive = drive;
+        self
+    }
+
+    /// Open-loop drive: requests arrive at their own `arrival_t` stamps
+    /// (see `workload::generate_open`).
+    pub fn open_loop(self) -> Self {
+        self.with_drive(DriveMode::Open)
+    }
+
     pub fn total_gpus(&self) -> usize {
         self.tp * self.dp
     }
@@ -172,5 +200,16 @@ mod tests {
         assert!(!ServingConfig::with_parallelism(8, 1).hybrid_barrier);
         assert!(ServingConfig::with_parallelism(2, 4).hybrid_barrier);
         assert_eq!(ServingConfig::with_parallelism(2, 4).total_gpus(), 8);
+    }
+
+    #[test]
+    fn sched_knobs_default_and_compose() {
+        let c = ServingConfig::with_parallelism(8, 1);
+        assert_eq!(c.policy, PolicyKind::Fcfs);
+        assert_eq!(c.drive, DriveMode::Closed { concurrency: 64 });
+        let c = c.with_policy(PolicyKind::ShortestPromptFirst).open_loop();
+        assert_eq!(c.policy, PolicyKind::ShortestPromptFirst);
+        assert_eq!(c.drive, DriveMode::Open);
+        assert_eq!(c.tp, 8);
     }
 }

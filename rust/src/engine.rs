@@ -2,19 +2,23 @@
 //! chunked prefill, paged-KV admission control, and the hybrid-DP barrier.
 //!
 //! This is the system half of the paper's §5.2/§B.6 benchmarks. The
-//! scheduler/batcher/router/pool logic is real (the same state machines a
-//! production server runs); only the per-step device time comes from the
-//! calibrated model in `hardware::DeviceModel`. Consequences the paper
-//! reports — MLA's KV duplication exhausting pool capacity and exploding
-//! TTFT at high concurrency, DP stragglers collapsing hybrid throughput
-//! under imbalanced lengths, GLA's smaller per-device cache admitting more
-//! concurrent work — all *emerge* from this state machine rather than
-//! being encoded in a formula.
+//! request-lifecycle state machine — wait queue, token-budget admission,
+//! phase tracking, prefill/decode arbitration, preemption — lives in
+//! [`crate::sched`] and is the *same code* the live PJRT server executes;
+//! this module contributes only virtual time: the per-step durations come
+//! from the calibrated model in `hardware::DeviceModel`. Consequences the
+//! paper reports — MLA's KV duplication exhausting pool capacity and
+//! exploding TTFT at high concurrency, DP stragglers collapsing hybrid
+//! throughput under imbalanced lengths, GLA's smaller per-device cache
+//! admitting more concurrent work — all *emerge* from the shared state
+//! machine rather than being encoded in a formula.
 //!
 //! Time is virtual (discrete-event), so a full 1280-request benchmark that
 //! takes hours of H100 time replays in milliseconds, deterministically.
-
-use std::collections::VecDeque;
+//! Both drive modes of [`crate::sched::DriveMode`] are supported: the
+//! closed loop of the paper's benchmarks and an open-loop Poisson arrival
+//! schedule for request-rate (QPS) sweeps, where an idle engine jumps its
+//! clock to the next arrival.
 
 use crate::attention::Variant;
 use crate::config::{ModelConfig, ServingConfig};
@@ -22,49 +26,13 @@ use crate::hardware::DeviceModel;
 use crate::kvcache::PagePool;
 use crate::metrics::ServiceMetrics;
 use crate::parallel::CollectiveModel;
+use crate::sched::{DriveMode, SchedPolicy, Scheduler, WaitQueue, Work};
 use crate::workload::Request;
 
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum Phase {
-    /// prompt tokens prefilled so far
-    Prefill { done: usize },
-    /// output tokens produced so far (first comes from the prefill epilogue)
-    Decode { produced: usize },
-}
-
-#[derive(Debug, Clone)]
-struct Seq {
-    req: Request,
-    phase: Phase,
-    /// virtual time the request was admitted to a replica
-    start_t: f64,
-    first_token_t: Option<f64>,
-    last_token_t: f64,
-}
-
-impl Seq {
-    fn ctx_len(&self) -> usize {
-        match self.phase {
-            Phase::Prefill { done } => done,
-            Phase::Decode { produced } => self.req.prompt_len + produced,
-        }
-    }
-}
-
-/// One DP replica: its own scheduler state and KV pool (per-device pool —
-/// all TP ranks of the replica hold the same number of tokens).
+/// One DP replica: its own scheduler and KV pool (per-device pool — all TP
+/// ranks of the replica hold the same number of tokens).
 struct Replica {
-    seqs: Vec<Seq>,
-    pool: PagePool,
-    /// alternate prefill/decode so chunked prefill cannot starve decode
-    prefer_decode: bool,
-}
-
-/// What a replica chose to run for one engine step.
-enum Work {
-    PrefillChunk { idx: usize, chunk: usize },
-    DecodeBatch { idxs: Vec<usize> },
-    Idle,
+    sched: Scheduler,
 }
 
 pub struct SimEngine {
@@ -74,29 +42,47 @@ pub struct SimEngine {
     pub device: DeviceModel,
     coll: CollectiveModel,
     replicas: Vec<Replica>,
-    /// not yet sent by the (closed-loop) client
-    pending: VecDeque<Request>,
-    /// sent by the client, waiting in the server queue for pool space;
-    /// their TTFT clock is already running
-    queued: VecDeque<Request>,
-    /// client send time per request id — preserved across preemption so
-    /// TTFT/E2E account the full wait (the paper measures from send)
-    first_start: std::collections::HashMap<usize, f64>,
+    /// the load generator + server queue in front of every replica
+    queue: WaitQueue,
+    /// admission-order policy (each replica's scheduler holds its own copy
+    /// of the same policy for prefill/decode arbitration)
+    policy: Box<dyn SchedPolicy>,
     clock: f64,
     pub metrics: ServiceMetrics,
-    /// max concurrent requests admitted across the server (load generator's
-    /// closed-loop limit)
-    concurrency: usize,
-    next_seq: u64,
 }
 
 impl SimEngine {
+    /// Closed-loop engine (the paper's §B.6 setup): the load generator
+    /// keeps `concurrency` requests in flight. Policy comes from
+    /// `serving.policy`; `serving.drive` is overridden by `concurrency`.
     pub fn new(
         model: ModelConfig,
         variant: Variant,
         serving: ServingConfig,
         device: DeviceModel,
         concurrency: usize,
+    ) -> Self {
+        Self::with_drive(model, variant, serving, device, DriveMode::Closed { concurrency })
+    }
+
+    /// Engine with the drive mode taken from `serving.drive` (closed-loop
+    /// concurrency or open-loop arrivals).
+    pub fn from_config(
+        model: ModelConfig,
+        variant: Variant,
+        serving: ServingConfig,
+        device: DeviceModel,
+    ) -> Self {
+        let drive = serving.drive;
+        Self::with_drive(model, variant, serving, device, drive)
+    }
+
+    pub fn with_drive(
+        model: ModelConfig,
+        variant: Variant,
+        serving: ServingConfig,
+        device: DeviceModel,
+        drive: DriveMode,
     ) -> Self {
         let kv_per_token =
             variant.kv_bytes_per_token_per_device(serving.tp, model.dtype_bytes) as u64
@@ -105,125 +91,89 @@ impl SimEngine {
             .max(1) as usize;
         let replicas = (0..serving.dp)
             .map(|_| Replica {
-                seqs: Vec::new(),
-                pool: PagePool::new(n_pages, serving.page_size),
-                prefer_decode: false,
+                sched: Scheduler::new(
+                    PagePool::new(n_pages, serving.page_size),
+                    serving.policy.build(),
+                    serving.prefill_chunk,
+                    serving.max_batch,
+                ),
             })
             .collect();
         SimEngine {
             coll: CollectiveModel::nvlink(&device.gpu),
+            policy: serving.policy.build(),
+            queue: WaitQueue::new(drive),
             model,
             variant,
             serving,
             device,
             replicas,
-            pending: VecDeque::new(),
-            queued: VecDeque::new(),
-            first_start: std::collections::HashMap::new(),
             clock: 0.0,
             metrics: ServiceMetrics::default(),
-            concurrency,
-            next_seq: 0,
         }
     }
 
     /// Tokens of KV capacity per replica (how many cached tokens fit).
     pub fn pool_capacity_tokens(&self) -> usize {
-        self.replicas[0].pool.pages_total() * self.serving.page_size
+        self.replicas[0].sched.pool_capacity_tokens()
     }
 
     pub fn submit(&mut self, reqs: &[Request]) {
-        self.pending.extend(reqs.iter().copied());
+        self.queue.submit(reqs);
     }
 
     fn live(&self) -> usize {
-        self.replicas.iter().map(|r| r.seqs.len()).sum()
-    }
-
-    fn in_flight(&self) -> usize {
-        self.live() + self.queued.len()
+        self.replicas.iter().map(|r| r.sched.n_live()).sum()
     }
 
     /// Two-stage admission, as in the paper's live-server setup:
-    /// 1. the closed-loop client keeps `concurrency` requests in flight —
-    ///    a request's TTFT clock starts when the client *sends* it;
-    /// 2. the server moves queued requests onto the replica with the
-    ///    fewest live sequences only while that replica's KV pool can hold
-    ///    them (token-budget admission, as in vLLM/SGLang). A full pool
-    ///    leaves requests queued with their clocks running — exactly how
-    ///    MLA's duplicated cache becomes head-of-line TTFT blowup (§B.6.1).
+    /// 1. the load generator puts requests on the wire (closed loop: up to
+    ///    the concurrency cap; open loop: at their arrival times) — a
+    ///    request's TTFT clock starts when the client *sends* it;
+    /// 2. the server moves the policy-picked queued request onto the
+    ///    replica with the fewest live sequences only while that replica's
+    ///    KV pool can hold its full footprint (token-budget admission, as
+    ///    in vLLM/SGLang). A full pool leaves requests queued with their
+    ///    clocks running — exactly how MLA's duplicated cache becomes
+    ///    head-of-line TTFT blowup (§B.6.1).
     fn admit(&mut self) {
-        while self.in_flight() < self.concurrency {
-            let Some(req) = self.pending.pop_front() else { break };
-            self.first_start.entry(req.id).or_insert(self.clock);
-            self.queued.push_back(req);
-        }
-        while let Some(&req) = self.queued.front() {
-            let (ri, r) = self
+        let live = self.live();
+        self.queue.release(self.clock, live);
+        loop {
+            let Some(pick) = self.policy.pick_waiting(self.queue.queued()) else {
+                break;
+            };
+            let ri = self
                 .replicas
                 .iter()
                 .enumerate()
-                .min_by_key(|(_, r)| r.seqs.len())
+                .min_by_key(|(_, r)| r.sched.n_live())
+                .map(|(i, _)| i)
                 .expect("at least one replica");
-            let committed: usize = r
-                .seqs
-                .iter()
-                .map(|s| r.pool.pages_needed(s.req.prompt_len + s.req.decode_len))
-                .sum();
-            let need = r.pool.pages_needed(req.prompt_len + req.decode_len);
-            if committed + need > r.pool.pages_total() {
-                return; // FCFS head-of-line wait for pool space
+            let (req, _) = self.queue.queued()[pick];
+            if !self.replicas[ri].sched.can_admit(&req) {
+                // a request even an EMPTY replica cannot hold would wait
+                // (and spin the virtual clock) forever — fail loudly
+                // instead of hanging the simulation
+                assert!(
+                    self.replicas[ri].sched.n_live() > 0,
+                    "request {} ({} prompt + {} decode tokens) exceeds a replica's \
+                     KV pool capacity of {} tokens",
+                    req.id,
+                    req.prompt_len,
+                    req.decode_len,
+                    self.replicas[ri].sched.pool_capacity_tokens()
+                );
+                break; // head-of-line wait for pool space (policy's order)
             }
-            self.queued.pop_front();
-            self.next_seq += 1;
-            let start_t = self.first_start[&req.id];
-            self.replicas[ri].seqs.push(Seq {
-                req,
-                phase: Phase::Prefill { done: 0 },
-                start_t,
-                first_token_t: None,
-                last_token_t: self.clock,
-            });
+            let (req, send_t) = self.queue.remove(pick);
+            self.replicas[ri].sched.admit(req, send_t, self.clock, &mut self.metrics);
         }
     }
 
     /// Pick one engine step of work for a replica (without running it).
-    /// Pool-aware: a prefill chunk is only planned when its pages fit.
     fn plan(&self, ri: usize) -> Work {
-        let r = &self.replicas[ri];
-        let prefill_idx = r.seqs.iter().position(|s| {
-            let Phase::Prefill { done } = s.phase else { return false };
-            let chunk = (s.req.prompt_len - done).min(self.serving.prefill_chunk);
-            let seq_id = s.req.id as u64;
-            if r.pool.table(seq_id).is_none() {
-                r.pool.pages_needed(chunk) <= r.pool.pages_free()
-            } else {
-                r.pool.can_grow(seq_id, chunk)
-            }
-        });
-        let decode_idxs: Vec<usize> = r
-            .seqs
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| matches!(s.phase, Phase::Decode { .. }))
-            .map(|(i, _)| i)
-            .take(self.serving.max_batch)
-            .collect();
-        let want_decode = !decode_idxs.is_empty()
-            && (r.prefer_decode || prefill_idx.is_none());
-        if want_decode {
-            return Work::DecodeBatch { idxs: decode_idxs };
-        }
-        if let Some(idx) = prefill_idx {
-            let s = &r.seqs[idx];
-            let done = match s.phase {
-                Phase::Prefill { done } => done,
-                _ => unreachable!(),
-            };
-            let chunk = (s.req.prompt_len - done).min(self.serving.prefill_chunk);
-            return Work::PrefillChunk { idx, chunk };
-        }
-        Work::Idle
+        self.replicas[ri].sched.plan()
     }
 
     /// Per-replica (attention + TP-comm) time of one unit of work, plus
@@ -232,11 +182,11 @@ impl SimEngine {
     /// the summed token count (shared in hybrid, exclusive in pure TP).
     fn attn_part(&self, ri: usize, work: &Work) -> (f64, usize) {
         let tp = self.serving.tp;
-        let r = &self.replicas[ri];
+        let seqs = self.replicas[ri].sched.seqs();
         match work {
             Work::Idle => (0.0, 0),
             Work::PrefillChunk { idx, chunk } => {
-                let ctx = r.seqs[*idx].ctx_len() + chunk;
+                let ctx = seqs[*idx].ctx_len() + chunk;
                 let t = self
                     .device
                     .prefill_attn_time(&self.model, &self.variant, *chunk, ctx, tp)
@@ -244,7 +194,7 @@ impl SimEngine {
                 (t, *chunk)
             }
             Work::DecodeBatch { idxs } => {
-                let lens: Vec<usize> = idxs.iter().map(|&i| r.seqs[i].ctx_len()).collect();
+                let lens: Vec<usize> = idxs.iter().map(|&i| seqs[i].ctx_len()).collect();
                 let t = self
                     .device
                     .attn_decode_time(&self.model, &self.variant, &lens, 1, tp)
@@ -264,114 +214,50 @@ impl SimEngine {
             + self.device.step_overhead
     }
 
-    /// Apply the outcome of one unit of work at virtual time `now`.
-    /// Returns indices of finished sequences.
+    /// Apply the outcome of one unit of work at virtual time `now` by
+    /// feeding it back to the replica's scheduler.
     fn apply(&mut self, ri: usize, work: Work, now: f64) {
-        let page_size = self.serving.page_size;
-        let _ = page_size;
-        let r = &mut self.replicas[ri];
+        let sched = &mut self.replicas[ri].sched;
         match work {
             Work::Idle => {}
             Work::PrefillChunk { idx, chunk } => {
-                r.prefer_decode = true; // alternate with decode next step
-                let seq_id = r.seqs[idx].req.id as u64;
-                // allocate pages for the chunk (admission was pool-checked)
-                if r.pool.table(seq_id).is_none() {
-                    r.pool.allocate(seq_id, chunk);
-                } else {
-                    r.pool.grow(seq_id, chunk);
-                }
-                let s = &mut r.seqs[idx];
-                let done = match s.phase {
-                    Phase::Prefill { done } => done + chunk,
-                    _ => unreachable!(),
-                };
-                if done >= s.req.prompt_len {
-                    // prefill epilogue emits the first token
-                    s.phase = Phase::Decode { produced: 1 };
-                    s.first_token_t = Some(now);
-                    s.last_token_t = now;
-                    self.metrics.output_tokens += 1;
-                } else {
-                    s.phase = Phase::Prefill { done };
-                }
+                // a decode_len <= 1 sequence retires at the epilogue; the
+                // sim has no slot table to update, so drop the record
+                let _ = sched.complete_prefill(idx, chunk, now, &mut self.metrics);
             }
             Work::DecodeBatch { idxs } => {
-                r.prefer_decode = false;
-                let mut finished: Vec<usize> = Vec::new();
-                for &i in &idxs {
-                    let seq_id = r.seqs[i].req.id as u64;
-                    // grow the cache by the generated token; if the pool is
-                    // exhausted the token still computes (activations) but
-                    // the engine must free space: finish-at-budget policy
-                    let _grew = r.pool.grow(seq_id, 1);
-                    let s = &mut r.seqs[i];
-                    let produced = match s.phase {
-                        Phase::Decode { produced } => produced + 1,
-                        _ => unreachable!(),
-                    };
-                    self.metrics.itl.record(now - s.last_token_t);
-                    s.last_token_t = now;
-                    self.metrics.output_tokens += 1;
-                    if produced >= s.req.decode_len {
-                        finished.push(i);
-                    } else {
-                        s.phase = Phase::Decode { produced };
-                    }
-                }
-                // retire finished sequences (release pages, record metrics)
-                finished.sort_unstable_by(|a, b| b.cmp(a));
-                for i in finished {
-                    let s = r.seqs.swap_remove(i);
-                    r.pool.release(s.req.id as u64);
-                    self.metrics.e2e.record(now - s.start_t);
-                    self.metrics
-                        .ttft
-                        .record(s.first_token_t.unwrap_or(now) - s.start_t);
-                }
+                // finished sequences' pool pages are released inside;
+                // the sim has no slot table to update
+                let _ = sched.complete_decode(&idxs, now, &mut self.metrics);
             }
         }
     }
 
-    /// Pool admission: the next decode step appends one token per decoding
-    /// sequence; sequences whose stored length sits exactly at a page
-    /// boundary need a fresh page. If the pool cannot supply them, evict
-    /// the youngest decoding sequence back to the pending queue
-    /// (vLLM-style preemption; it will re-prefill from scratch).
+    /// Pool-pressure relief before planning: preempted requests go back to
+    /// the front of the server queue with their send times intact (they
+    /// will re-prefill from scratch, vLLM-style).
     fn ensure_capacity(&mut self, ri: usize) {
-        loop {
-            let r = &self.replicas[ri];
-            let ps = self.serving.page_size;
-            let new_pages_needed = r
-                .seqs
-                .iter()
-                .filter(|s| matches!(s.phase, Phase::Decode { .. }))
-                .filter(|s| {
-                    let stored = r.pool.len_of(s.req.id as u64);
-                    stored > 0 && stored % ps == 0
-                })
-                .count();
-            let n_decoding = r
-                .seqs
-                .iter()
-                .filter(|s| matches!(s.phase, Phase::Decode { .. }))
-                .count();
-            if new_pages_needed <= r.pool.pages_free() || n_decoding <= 1 {
-                return;
-            }
-            // evict the youngest decoding sequence
-            let (youngest_idx, _) = self.replicas[ri]
-                .seqs
-                .iter()
-                .enumerate()
-                .filter(|(_, s)| matches!(s.phase, Phase::Decode { .. }))
-                .max_by(|a, b| a.1.start_t.partial_cmp(&b.1.start_t).unwrap())
-                .unwrap();
-            let s = self.replicas[ri].seqs.swap_remove(youngest_idx);
-            self.replicas[ri].pool.release(s.req.id as u64);
-            // already sent by the client: back to the server queue head
-            self.queued.push_front(s.req);
+        let evicted = self.replicas[ri].sched.preempt_for_decode(&mut self.metrics);
+        for (req, send_t) in evicted {
+            self.queue.requeue_front(req, send_t);
         }
+    }
+
+    /// Handle a step on which no replica can make progress: finish when
+    /// the workload is drained, or jump the virtual clock to the next
+    /// open-loop arrival. Returns false when the run is complete.
+    fn step_idle(&mut self) -> bool {
+        if self.queue.is_drained() && self.live() == 0 {
+            return false;
+        }
+        if self.live() == 0 && self.queue.n_queued() == 0 {
+            if let Some(t) = self.queue.next_arrival() {
+                if t > self.clock {
+                    self.clock = t;
+                }
+            }
+        }
+        true
     }
 
     /// Run the benchmark to completion; returns total virtual duration.
@@ -386,12 +272,13 @@ impl SimEngine {
             if hybrid {
                 // lockstep: every replica does one step; the MoE all-gather
                 // barrier makes everyone wait for the slowest (§B.6.3)
-                let works: Vec<Work> = (0..self.replicas.len()).map(|ri| self.plan(ri)).collect();
+                let works: Vec<Work> =
+                    (0..self.replicas.len()).map(|ri| self.plan(ri)).collect();
                 if works.iter().all(|w| matches!(w, Work::Idle)) {
-                    if self.pending.is_empty() && self.queued.is_empty() && self.live() == 0 {
-                        break;
+                    if self.step_idle() {
+                        continue;
                     }
-                    continue;
+                    break;
                 }
                 // per-replica attention runs concurrently (max = barrier);
                 // the expert-parallel FFN is charged once for all tokens
@@ -426,10 +313,10 @@ impl SimEngine {
                 let ri = 0; // dp == 1 in non-hybrid configurations
                 let work = self.plan(ri);
                 if matches!(work, Work::Idle) {
-                    if self.pending.is_empty() && self.queued.is_empty() && self.live() == 0 {
-                        break;
+                    if self.step_idle() {
+                        continue;
                     }
-                    continue;
+                    break;
                 }
                 let d = self.duration(ri, &work);
                 self.clock += d;
@@ -442,8 +329,8 @@ impl SimEngine {
     }
 }
 
-/// Run one paper-style benchmark row: `n` requests under a concurrency
-/// limit; returns the populated metrics.
+/// Run one paper-style benchmark row: `n` requests under a closed-loop
+/// concurrency limit; returns the populated metrics.
 pub fn run_benchmark(
     model: ModelConfig,
     variant: Variant,
@@ -458,11 +345,28 @@ pub fn run_benchmark(
     eng.metrics
 }
 
+/// Run a benchmark with policy *and* drive mode taken from the serving
+/// config — the entry point for open-loop QPS sweeps
+/// (`ServingConfig::open_loop` + `workload::generate_open`).
+pub fn run_benchmark_with(
+    model: ModelConfig,
+    variant: Variant,
+    serving: ServingConfig,
+    device: DeviceModel,
+    reqs: &[Request],
+) -> ServiceMetrics {
+    let mut eng = SimEngine::from_config(model, variant, serving, device);
+    eng.submit(reqs);
+    eng.run();
+    eng.metrics
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::{ServingConfig, DSV2};
-    use crate::workload::{generate, LengthDist};
+    use crate::sched::PolicyKind;
+    use crate::workload::{generate, generate_open, LengthDist};
 
     fn bench_len(
         variant: &str, tp: usize, dp: usize, conc: usize, n: usize, decode: usize,
@@ -561,8 +465,77 @@ mod tests {
         eng.submit(&generate(LengthDist::Fixed { prompt: 4096, decode: 128 }, 32, 3));
         eng.run();
         for r in &eng.replicas {
-            r.pool.check_invariants().unwrap();
-            assert_eq!(r.pool.pages_free(), r.pool.pages_total());
+            r.sched.pool().check_invariants().unwrap();
+            assert_eq!(r.sched.pool().pages_free(), r.sched.pool().pages_total());
         }
+    }
+
+    #[test]
+    fn policy_swap_changes_ttft_and_same_policy_reproduces() {
+        // §5.2 imbalanced mix on pool-limited MLA: admission order matters,
+        // so swapping the policy must move TTFT, while the same policy +
+        // seed must reproduce identical virtual-time metrics.
+        let m = DSV2;
+        let reqs = generate(
+            LengthDist::ImbalancedMix { short: 2048, long: 131_072, decode: 512, every: 2 },
+            16,
+            3,
+        );
+        let run = |k: PolicyKind| {
+            run_benchmark(
+                m,
+                m.variant("mla"),
+                ServingConfig::with_parallelism(8, 1).with_policy(k),
+                DeviceModel::h100_optimized(),
+                &reqs,
+                16,
+            )
+        };
+        let mut fcfs = run(PolicyKind::Fcfs);
+        let mut again = run(PolicyKind::Fcfs);
+        assert_eq!(fcfs.duration, again.duration, "determinism");
+        assert_eq!(fcfs.ttft.median(), again.ttft.median(), "determinism");
+        assert_eq!(fcfs.output_tokens, again.output_tokens);
+        let mut spf = run(PolicyKind::ShortestPromptFirst);
+        assert_eq!(spf.e2e.len(), 16, "no lost requests under SPF");
+        assert_eq!(spf.output_tokens, fcfs.output_tokens);
+        assert_ne!(
+            spf.ttft.median(),
+            fcfs.ttft.median(),
+            "SPF must reorder admissions on the imbalanced mix"
+        );
+    }
+
+    #[test]
+    fn open_loop_drive_completes_and_is_rate_sensitive() {
+        let m = DSV2;
+        let dist = LengthDist::Fixed { prompt: 8192, decode: 512 };
+        let run = |qps: f64| {
+            run_benchmark_with(
+                m,
+                m.variant("mla"),
+                ServingConfig::with_parallelism(8, 1).open_loop(),
+                DeviceModel::h100_serving(),
+                &generate_open(dist, 48, 7, qps),
+            )
+        };
+        let slow = run(0.5);
+        let again = run(0.5);
+        assert_eq!(slow.e2e.len(), 48);
+        assert_eq!(slow.output_tokens, 48 * 512);
+        assert_eq!(slow.queue_wait.len(), 48);
+        assert_eq!(slow.duration, again.duration, "open loop must be deterministic");
+        // at 0.5 QPS the run is arrival-bound (~96 s of schedule); at 50
+        // QPS the same work is service-bound and finishes much sooner
+        let fast = run(50.0);
+        assert_eq!(fast.e2e.len(), 48);
+        assert!(
+            slow.duration > fast.duration,
+            "arrival-bound {:.1}s must exceed service-bound {:.1}s",
+            slow.duration,
+            fast.duration
+        );
+        let last_arrival = generate_open(dist, 48, 7, 0.5).last().unwrap().arrival_t;
+        assert!(slow.duration >= last_arrival, "idle engine must jump to arrivals");
     }
 }

@@ -102,6 +102,17 @@ impl PagePool {
         p
     }
 
+    /// Preempt a running sequence (scheduler eviction under pool pressure):
+    /// identical page accounting to [`PagePool::release`], but reports
+    /// whether the sequence was actually live. Idempotent — a second call
+    /// (or a preempt of an unknown sequence) is a no-op returning false,
+    /// so scheduler/engine races can never underflow a refcount.
+    pub fn preempt(&mut self, seq: SeqId) -> bool {
+        let live = self.tables.contains_key(&seq);
+        self.release(seq);
+        live
+    }
+
     /// Release a sequence; pages return to the free list when their
     /// refcount reaches zero (shared prefix pages survive).
     pub fn release(&mut self, seq: SeqId) {
@@ -345,6 +356,34 @@ mod tests {
         assert!(!pool.can_grow(1, 1));
         pool.release(1);
         assert!(pool.allocate(2, 1));
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn preempt_is_release_plus_liveness_and_idempotent() {
+        let mut pool = PagePool::new(8, 4);
+        assert!(pool.allocate(1, 10)); // 3 pages
+        assert_eq!(pool.pages_free(), 5);
+        assert!(pool.preempt(1));
+        assert_eq!(pool.pages_free(), 8);
+        pool.check_invariants().unwrap();
+        // double-preempt and unknown-seq preempt are no-ops
+        assert!(!pool.preempt(1));
+        assert!(!pool.preempt(999));
+        assert_eq!(pool.pages_free(), 8);
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn preempt_respects_shared_prefix_refcounts() {
+        let mut pool = PagePool::new(8, 4);
+        assert!(pool.allocate(1, 16)); // 4 pages
+        assert!(pool.fork_prefix(1, 2, 8)); // child pins first 2 pages
+        assert!(pool.preempt(1));
+        pool.check_invariants().unwrap();
+        assert_eq!(pool.pages_free(), 6); // 2 pages survive via the child
+        assert!(pool.preempt(2));
+        assert_eq!(pool.pages_free(), 8);
         pool.check_invariants().unwrap();
     }
 

@@ -9,12 +9,16 @@
 //! * [`hardware`] — GPU specs (Fig. 15) + calibrated device timing model
 //! * [`parallel`] — TP/DP topologies, duplication factor, collectives
 //! * [`kvcache`] — paged pool, prefix radix, §4.2 gather strategies
-//! * [`workload`] — §B.6 request-length distributions
+//! * [`workload`] — §B.6 request-length distributions + open-loop arrivals
 //! * [`metrics`] — service-level summaries (E2E/TTFT/ITL/throughput)
+//! * [`sched`] — the shared scheduling core: request lifecycle, paged-KV
+//!   admission, pluggable policies, preemption — executed by BOTH engines
 //! * [`engine`] — continuous-batching engine over simulated H100 ranks
 //! * [`runtime`] — PJRT CPU runtime executing the AOT HLO artifacts
-//! * [`server`] — threaded live server + closed-loop load generator
-//! * [`train`] — drives the AOT train-step artifact (quality experiment)
+//!   (`pjrt` feature)
+//! * [`server`] — continuous-batching engine over a real step model, plus
+//!   the threaded live server + load generator (`pjrt` feature)
+//! * [`train`] — drives the AOT train-step artifact (`pjrt` feature)
 
 pub mod analytical;
 pub mod attention;
@@ -24,8 +28,11 @@ pub mod hardware;
 pub mod kvcache;
 pub mod metrics;
 pub mod parallel;
+pub mod sched;
 pub mod workload;
 
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod server;
+#[cfg(feature = "pjrt")]
 pub mod train;

@@ -2,76 +2,161 @@
 //!
 //! Subcommands:
 //!   info                         print variant shapes / shard plans
-//!   serve  [variant] [n] [conc]  live-serve the tiny AOT model (PJRT CPU)
+//!   serve  [variant] [n] [conc]  live-serve the tiny AOT model (PJRT CPU;
+//!                                needs the `pjrt` feature)
 //!   train  [variant] [steps]     train a variant via the AOT train step
-//!   sim    [variant] [tp] [dp] [conc]
-//!                                simulated DSV2 serving benchmark row
+//!                                (needs the `pjrt` feature)
+//!   sim    [variant] [tp] [dp] [conc] [policy]
+//!                                simulated DSV2 closed-loop benchmark row
+//!   qps    [variant] [tp] [dp] [rate] [policy]
+//!                                simulated DSV2 open-loop (Poisson) row
 //!
 //! Run `make artifacts` first for `serve`/`train`.
 
-use anyhow::Result;
 use gla_serve::config::{ServingConfig, DSV2};
-use gla_serve::engine::run_benchmark;
+use gla_serve::engine::{run_benchmark, run_benchmark_with};
 use gla_serve::hardware::DeviceModel;
 use gla_serve::parallel::{paper_layouts, shard_plan};
-use gla_serve::workload::{generate, LengthDist};
+use gla_serve::sched::PolicyKind;
+use gla_serve::workload::{generate, generate_open, LengthDist};
 
+#[cfg(feature = "pjrt")]
 fn artifacts_dir() -> String {
     std::env::var("GLA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
 }
 
-fn main() -> Result<()> {
+fn policy_arg(args: &[String], i: usize) -> PolicyKind {
+    args.get(i)
+        .map(|s| {
+            PolicyKind::parse(s).unwrap_or_else(|| {
+                eprintln!("unknown policy `{s}` (try: fcfs spf decode-priority)");
+                std::process::exit(2);
+            })
+        })
+        .unwrap_or_default()
+}
+
+fn main() {
     let args: Vec<String> = std::env::args().collect();
     let cmd = args.get(1).map(String::as_str).unwrap_or("info");
     match cmd {
         "info" => {
             let m = DSV2;
             println!("DSV2 serving config (paper §B.6): h_q={}, d_h={}", m.h_q, m.d_h);
-            println!("{:<8} {:>6} {:>6} {:>8} {:>14} {:>8}", "variant", "g_q", "m_kv", "AI(asym)", "B/token (TP8)", "zero-red");
+            println!(
+                "{:<8} {:>6} {:>6} {:>8} {:>14} {:>8}",
+                "variant", "g_q", "m_kv", "AI(asym)", "B/token (TP8)", "zero-red"
+            );
             for name in ["mha", "gqa8", "mqa", "gta8", "mla", "gla8"] {
                 let v = m.variant(name);
                 let plan = shard_plan(&v, paper_layouts()[0], m.dtype_bytes);
                 println!(
                     "{:<8} {:>6} {:>6} {:>8.0} {:>14} {:>8}",
-                    name, v.group_size(), v.m_kv(), v.intensity_asymptote(),
-                    plan.kv_bytes_per_token, plan.zero_redundancy,
+                    name,
+                    v.group_size(),
+                    v.m_kv(),
+                    v.intensity_asymptote(),
+                    plan.kv_bytes_per_token,
+                    plan.zero_redundancy,
                 );
             }
         }
         "serve" => {
-            let variant = args.get(2).cloned().unwrap_or_else(|| "gla2".into());
-            let n: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(16);
-            let conc: usize = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(8);
-            let reqs = generate(LengthDist::Fixed { prompt: 96, decode: 48 }, n, 42);
-            let mut met = gla_serve::server::serve_benchmark(&artifacts_dir(), &variant, 0, reqs, conc)?;
-            let (e2e, ttft, itl, tput) = met.paper_row();
-            println!("{variant}: e2e {e2e:.2}s ttft {ttft:.2}s itl {itl:.1}ms {tput:.1} tok/s");
+            #[cfg(feature = "pjrt")]
+            {
+                let variant = args.get(2).cloned().unwrap_or_else(|| "gla2".into());
+                let n: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(16);
+                let conc: usize = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(8);
+                let reqs = generate(LengthDist::Fixed { prompt: 96, decode: 48 }, n, 42);
+                let mut met =
+                    gla_serve::server::serve_benchmark(&artifacts_dir(), &variant, 0, reqs, conc)
+                        .unwrap_or_else(|e| {
+                            eprintln!("serve failed: {e:?}");
+                            std::process::exit(1);
+                        });
+                let (e2e, ttft, itl, tput) = met.paper_row();
+                println!(
+                    "{variant}: e2e {e2e:.2}s ttft {ttft:.2}s itl {itl:.1}ms {tput:.1} tok/s"
+                );
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                eprintln!("`serve` runs the PJRT runtime: rebuild with --features pjrt");
+                std::process::exit(2);
+            }
         }
         "train" => {
-            let variant = args.get(2).cloned().unwrap_or_else(|| "gla2".into());
-            let steps: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(50);
-            let rt = gla_serve::runtime::Runtime::new(artifacts_dir())?;
-            let losses = gla_serve::train::train_variant(&rt, &variant, steps, 7, 3e-3)?;
-            println!("{variant}: loss {:.4} -> {:.4}", losses[0], losses[steps - 1]);
+            #[cfg(feature = "pjrt")]
+            {
+                let variant = args.get(2).cloned().unwrap_or_else(|| "gla2".into());
+                let steps: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(50);
+                let run = || -> Result<Vec<f32>, anyhow::Error> {
+                    let rt = gla_serve::runtime::Runtime::new(artifacts_dir())?;
+                    gla_serve::train::train_variant(&rt, &variant, steps, 7, 3e-3)
+                };
+                let losses = run().unwrap_or_else(|e| {
+                    eprintln!("train failed: {e:?}");
+                    std::process::exit(1);
+                });
+                println!("{variant}: loss {:.4} -> {:.4}", losses[0], losses[steps - 1]);
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                eprintln!("`train` runs the PJRT runtime: rebuild with --features pjrt");
+                std::process::exit(2);
+            }
         }
         "sim" => {
             let variant = args.get(2).cloned().unwrap_or_else(|| "gla8".into());
             let tp: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(8);
             let dp: usize = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(1);
             let conc: usize = args.get(5).and_then(|s| s.parse().ok()).unwrap_or(64);
+            let policy = policy_arg(&args, 6);
             let m = DSV2;
             let mut met = run_benchmark(
-                m, m.variant(&variant), ServingConfig::with_parallelism(tp, dp),
+                m,
+                m.variant(&variant),
+                ServingConfig::with_parallelism(tp, dp).with_policy(policy),
                 DeviceModel::h100_serving(),
-                &generate(LengthDist::Fixed { prompt: 8192, decode: 4096 }, 256, 42), conc,
+                &generate(LengthDist::Fixed { prompt: 8192, decode: 4096 }, 256, 42),
+                conc,
             );
             let (e2e, ttft, itl, tput) = met.paper_row();
-            println!("{variant} TP{tp}xDP{dp} conc{conc}: e2e {e2e:.1}s ttft {ttft:.1}s itl {itl:.1}ms {tput:.0} tok/s");
+            println!(
+                "{variant} TP{tp}xDP{dp} conc{conc} {}: e2e {e2e:.1}s ttft {ttft:.1}s \
+                 itl {itl:.1}ms {tput:.0} tok/s",
+                policy.name()
+            );
+        }
+        "qps" => {
+            let variant = args.get(2).cloned().unwrap_or_else(|| "gla8".into());
+            let tp: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(8);
+            let dp: usize = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(1);
+            let rate: f64 = args.get(5).and_then(|s| s.parse().ok()).unwrap_or(1.0);
+            if rate <= 0.0 || !rate.is_finite() {
+                eprintln!("rate must be a positive req/s value, got {rate}");
+                std::process::exit(2);
+            }
+            let policy = policy_arg(&args, 6);
+            let m = DSV2;
+            let mut met = run_benchmark_with(
+                m,
+                m.variant(&variant),
+                ServingConfig::with_parallelism(tp, dp).with_policy(policy).open_loop(),
+                DeviceModel::h100_serving(),
+                &generate_open(LengthDist::Fixed { prompt: 8192, decode: 1024 }, 256, 42, rate),
+            );
+            let (e2e, ttft, itl, tput) = met.paper_row();
+            println!(
+                "{variant} TP{tp}xDP{dp} {rate:.2} req/s {}: e2e {e2e:.1}s ttft {ttft:.1}s \
+                 itl {itl:.1}ms queue-wait {:.1}s {tput:.0} tok/s",
+                policy.name(),
+                met.queue_wait.median(),
+            );
         }
         other => {
-            eprintln!("unknown command `{other}` (try: info serve train sim)");
+            eprintln!("unknown command `{other}` (try: info serve train sim qps)");
             std::process::exit(2);
         }
     }
-    Ok(())
 }

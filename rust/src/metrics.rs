@@ -80,6 +80,12 @@ pub struct ServiceMetrics {
     pub e2e: Summary,
     pub ttft: Summary,
     pub itl: Summary,
+    /// client send -> replica admission wait (one sample per admission,
+    /// so a preempted-and-readmitted request contributes twice); under
+    /// open-loop drive this is the queueing-delay curve a QPS sweep bends
+    pub queue_wait: Summary,
+    /// scheduler evictions (preempt + re-prefill from scratch)
+    pub preemptions: u64,
     /// total output tokens produced
     pub output_tokens: u64,
     /// wall-clock duration of the run, seconds

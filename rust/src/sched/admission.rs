@@ -1,0 +1,214 @@
+//! Admission control: the wait queue in front of the replicas and the
+//! paged-KV token-budget check that decides when a queued request may
+//! occupy pool space (vLLM/SGLang-style reservation admission).
+//!
+//! Two drive modes feed the queue:
+//!
+//! * **Closed loop** — a load generator keeps at most `concurrency`
+//!   requests in flight (live + queued); a finished request immediately
+//!   releases the next one. This is the paper's §B.6 benchmark setup.
+//! * **Open loop** — requests arrive at the times stamped on them
+//!   ([`crate::workload::Request::arrival_t`], e.g. a Poisson process from
+//!   [`crate::workload::generate_open`]), independent of completions. This
+//!   is how request-rate (QPS) sweeps find the saturation knee.
+//!
+//! In both modes a request's latency clocks (TTFT/E2E) start at its *send*
+//! time, not its admission time — a full pool leaves requests queued with
+//! their clocks running, which is exactly how MLA's duplicated KV becomes
+//! head-of-line TTFT blowup (§B.6.1).
+
+use std::collections::VecDeque;
+
+use super::policy::QueuedReq;
+use super::Scheduler;
+use crate::workload::Request;
+
+/// How the load generator drives the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DriveMode {
+    /// Keep at most `concurrency` requests in flight (live + queued).
+    Closed { concurrency: usize },
+    /// Release each request at its own `arrival_t`, regardless of load.
+    Open,
+}
+
+impl Default for DriveMode {
+    fn default() -> Self {
+        DriveMode::Closed { concurrency: 64 }
+    }
+}
+
+/// The server-side wait queue shared by every replica: requests the client
+/// has not yet sent (`pending`) and requests sent but not yet admitted to
+/// a replica (`queued`, TTFT clocks running).
+#[derive(Debug)]
+pub struct WaitQueue {
+    /// not yet sent by the load generator; for [`DriveMode::Open`] these
+    /// must be sorted by `arrival_t` (as [`crate::workload::generate_open`]
+    /// produces them)
+    pending: VecDeque<Request>,
+    /// sent, waiting for pool space: `(request, send time)`
+    queued: Vec<QueuedReq>,
+    mode: DriveMode,
+}
+
+impl WaitQueue {
+    pub fn new(mode: DriveMode) -> Self {
+        WaitQueue { pending: VecDeque::new(), queued: Vec::new(), mode }
+    }
+
+    /// Closed-loop queue with the given in-flight cap.
+    pub fn closed(concurrency: usize) -> Self {
+        Self::new(DriveMode::Closed { concurrency })
+    }
+
+    /// Open-loop queue (arrival times carried by the requests).
+    pub fn open() -> Self {
+        Self::new(DriveMode::Open)
+    }
+
+    pub fn mode(&self) -> DriveMode {
+        self.mode
+    }
+
+    pub fn submit(&mut self, reqs: &[Request]) {
+        self.pending.extend(reqs.iter().copied());
+    }
+
+    /// Move pending requests onto the wire according to the drive mode.
+    /// `live` is the number of sequences currently running on replicas
+    /// (only the closed loop looks at it).
+    pub fn release(&mut self, now: f64, live: usize) {
+        match self.mode {
+            DriveMode::Closed { concurrency } => {
+                while live + self.queued.len() < concurrency {
+                    let Some(req) = self.pending.pop_front() else { break };
+                    self.queued.push((req, now));
+                }
+            }
+            DriveMode::Open => {
+                while self
+                    .pending
+                    .front()
+                    .is_some_and(|r| r.arrival_t <= now)
+                {
+                    let req = self.pending.pop_front().expect("front checked");
+                    self.queued.push((req, req.arrival_t));
+                }
+            }
+        }
+    }
+
+    /// Earliest send time still pending (open loop only) — lets an idle
+    /// engine jump its virtual clock to the next arrival.
+    pub fn next_arrival(&self) -> Option<f64> {
+        match self.mode {
+            DriveMode::Open => self.pending.front().map(|r| r.arrival_t),
+            DriveMode::Closed { .. } => None,
+        }
+    }
+
+    pub fn queued(&self) -> &[QueuedReq] {
+        &self.queued
+    }
+
+    /// Remove the i-th queued entry (policy-picked admission).
+    pub fn remove(&mut self, i: usize) -> QueuedReq {
+        self.queued.remove(i)
+    }
+
+    /// Put a preempted request back at the head of the queue, preserving
+    /// its original send time so TTFT/E2E account the full wait.
+    pub fn requeue_front(&mut self, req: Request, send_t: f64) {
+        self.queued.insert(0, (req, send_t));
+    }
+
+    pub fn n_queued(&self) -> usize {
+        self.queued.len()
+    }
+
+    pub fn n_pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// True when the client has nothing left to send and nothing queued.
+    pub fn is_drained(&self) -> bool {
+        self.pending.is_empty() && self.queued.is_empty()
+    }
+}
+
+impl Scheduler {
+    /// Reservation-based admission (PagedAttention semantics): a request is
+    /// admitted only when its *full* final footprint (prompt + decode) fits
+    /// next to the reservations of every live sequence. This is what makes
+    /// pool pressure show up as queueing delay rather than mid-decode
+    /// eviction, and it is shared verbatim by the simulator and the live
+    /// server.
+    pub fn can_admit(&self, req: &Request) -> bool {
+        let committed: usize = self
+            .seqs
+            .iter()
+            .map(|s| self.pool.pages_needed(s.req.prompt_len + s.req.decode_len))
+            .sum();
+        let need = self.pool.pages_needed(req.prompt_len + req.decode_len);
+        committed + need <= self.pool.pages_total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, arrival: f64) -> Request {
+        let mut r = Request::new(id, 8, 4);
+        r.arrival_t = arrival;
+        r
+    }
+
+    #[test]
+    fn closed_loop_caps_in_flight() {
+        let mut q = WaitQueue::closed(2);
+        q.submit(&[req(0, 0.0), req(1, 0.0), req(2, 0.0)]);
+        q.release(1.0, 0);
+        assert_eq!(q.n_queued(), 2);
+        assert_eq!(q.n_pending(), 1);
+        // one live seq: only one more may be on the wire
+        let (r, sent) = q.remove(0);
+        assert_eq!(r.id, 0);
+        assert_eq!(sent, 1.0);
+        q.release(2.0, 1);
+        assert_eq!(q.n_queued(), 2);
+        assert_eq!(q.n_pending(), 0);
+        assert!(!q.is_drained());
+    }
+
+    #[test]
+    fn open_loop_releases_by_arrival_time() {
+        let mut q = WaitQueue::open();
+        q.submit(&[req(0, 0.5), req(1, 1.5), req(2, 9.0)]);
+        q.release(0.0, 0);
+        assert_eq!(q.n_queued(), 0);
+        assert_eq!(q.next_arrival(), Some(0.5));
+        q.release(2.0, 0);
+        assert_eq!(q.n_queued(), 2);
+        // send time is the arrival time, not the release-call time
+        assert_eq!(q.queued()[0].1, 0.5);
+        assert_eq!(q.queued()[1].1, 1.5);
+        assert_eq!(q.next_arrival(), Some(9.0));
+        q.release(10.0, 123); // live count is ignored in open loop
+        assert_eq!(q.n_queued(), 3);
+        assert_eq!(q.next_arrival(), None);
+    }
+
+    #[test]
+    fn requeue_front_preserves_send_time() {
+        let mut q = WaitQueue::closed(8);
+        q.submit(&[req(0, 0.0), req(1, 0.0)]);
+        q.release(5.0, 0);
+        let (r0, t0) = q.remove(0);
+        q.requeue_front(r0, t0);
+        assert_eq!(q.queued()[0].0.id, 0);
+        assert_eq!(q.queued()[0].1, 5.0);
+        assert_eq!(q.queued()[1].0.id, 1);
+    }
+}

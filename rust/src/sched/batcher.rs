@@ -1,0 +1,65 @@
+//! Batch formation: given the live sequences and the pool, pick what one
+//! engine step runs — a chunked-prefill tile or a decode batch. The
+//! arbitration between the two is delegated to the [`SchedPolicy`]; the
+//! pool-awareness (a prefill chunk is only planned when its pages fit) is
+//! not, because it is a correctness rule, not a preference.
+
+use super::{Phase, Scheduler};
+
+/// What a replica chose to run for one engine step.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Work {
+    PrefillChunk { idx: usize, chunk: usize },
+    DecodeBatch { idxs: Vec<usize> },
+    Idle,
+}
+
+impl Scheduler {
+    /// Remaining-prompt chunk size for a prefilling sequence.
+    fn chunk_of(&self, idx: usize) -> usize {
+        let s = &self.seqs[idx];
+        match s.phase {
+            Phase::Prefill { done } => (s.req.prompt_len - done).min(self.prefill_chunk),
+            Phase::Decode { .. } => 0,
+        }
+    }
+
+    /// Pick one engine step of work (without running it). Pool-aware: a
+    /// prefill chunk is only planned when its pages fit right now.
+    pub fn plan(&self) -> Work {
+        let candidates: Vec<usize> = self
+            .seqs
+            .iter()
+            .enumerate()
+            .filter(|(i, s)| {
+                let Phase::Prefill { .. } = s.phase else { return false };
+                let chunk = self.chunk_of(*i);
+                let seq_id = s.req.id as u64;
+                if self.pool.table(seq_id).is_none() {
+                    self.pool.pages_needed(chunk) <= self.pool.pages_free()
+                } else {
+                    self.pool.can_grow(seq_id, chunk)
+                }
+            })
+            .map(|(i, _)| i)
+            .collect();
+        let prefill_idx = self.policy.pick_prefill(&self.seqs, &candidates);
+        let decode_idxs: Vec<usize> = self
+            .seqs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| matches!(s.phase, Phase::Decode { .. }))
+            .map(|(i, _)| i)
+            .take(self.max_batch)
+            .collect();
+        let want_decode = !decode_idxs.is_empty()
+            && (self.policy.decode_first(self.prefer_decode) || prefill_idx.is_none());
+        if want_decode {
+            return Work::DecodeBatch { idxs: decode_idxs };
+        }
+        if let Some(idx) = prefill_idx {
+            return Work::PrefillChunk { idx, chunk: self.chunk_of(idx) };
+        }
+        Work::Idle
+    }
+}

@@ -1,0 +1,417 @@
+//! The shared scheduling core: one request-lifecycle state machine that
+//! both the discrete-event simulator ([`crate::engine::SimEngine`]) and
+//! the live PJRT server ([`crate::server::RealEngine`]) execute.
+//!
+//! Layering (see ../DESIGN.md):
+//!
+//! * [`policy`]    — pluggable ordering/arbitration ([`SchedPolicy`]:
+//!   FCFS, shortest-prompt-first, decode-priority)
+//! * [`admission`] — wait queue, closed/open-loop drive, paged-KV
+//!   reservation admission
+//! * [`batcher`]   — chunked-prefill vs decode batch formation
+//! * this module   — per-sequence [`Phase`] tracking, token accounting,
+//!   metric recording, preemption/requeue
+//!
+//! Time is an `f64` in seconds the *caller* supplies: the simulator passes
+//! virtual time, the live server passes wall-clock seconds since start.
+//! The scheduler never reads a clock, which is what makes a policy
+//! validated in virtual time run unchanged against real tokens.
+
+pub mod admission;
+pub mod batcher;
+pub mod policy;
+
+pub use admission::{DriveMode, WaitQueue};
+pub use batcher::Work;
+pub use policy::{DecodePriority, Fcfs, PolicyKind, SchedPolicy, ShortestPromptFirst};
+
+use crate::kvcache::{PageId, PagePool};
+use crate::metrics::ServiceMetrics;
+use crate::workload::Request;
+
+/// Where a sequence is in its lifecycle. This is the single definition in
+/// the codebase — `engine` and `server` both consume it from here.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// prompt tokens prefilled so far
+    Prefill { done: usize },
+    /// output tokens produced so far (first comes from the prefill epilogue)
+    Decode { produced: usize },
+}
+
+/// One admitted sequence: its request, phase and latency clocks.
+#[derive(Debug, Clone)]
+pub struct SeqState {
+    pub req: Request,
+    pub phase: Phase,
+    /// time the client *sent* the request (preserved across preemption so
+    /// TTFT/E2E account the full wait — the paper measures from send)
+    pub start_t: f64,
+    pub first_token_t: Option<f64>,
+    pub last_token_t: f64,
+}
+
+impl SeqState {
+    /// Tokens of context the attention kernel sees for this sequence.
+    pub fn ctx_len(&self) -> usize {
+        match self.phase {
+            Phase::Prefill { done } => done,
+            Phase::Decode { produced } => self.req.prompt_len + produced,
+        }
+    }
+
+    pub fn is_decoding(&self) -> bool {
+        matches!(self.phase, Phase::Decode { .. })
+    }
+}
+
+/// A sequence that just produced its last token. `pages` is its page table
+/// at release time — the live server maps `pages[0]` back to a batch slot;
+/// the simulator ignores it.
+#[derive(Debug, Clone)]
+pub struct FinishedSeq {
+    pub state: SeqState,
+    pub pages: Vec<PageId>,
+}
+
+/// The per-replica scheduler: waiting sequences live in a [`WaitQueue`]
+/// *outside* this struct (it is shared across replicas); everything after
+/// admission — pool occupancy, phases, batching, preemption — lives here.
+pub struct Scheduler {
+    pub(crate) seqs: Vec<SeqState>,
+    pub(crate) pool: PagePool,
+    pub(crate) policy: Box<dyn SchedPolicy>,
+    pub(crate) prefill_chunk: usize,
+    pub(crate) max_batch: usize,
+    /// alternate prefill/decode so chunked prefill cannot starve decode
+    pub(crate) prefer_decode: bool,
+}
+
+impl Scheduler {
+    pub fn new(
+        pool: PagePool,
+        policy: Box<dyn SchedPolicy>,
+        prefill_chunk: usize,
+        max_batch: usize,
+    ) -> Self {
+        assert!(prefill_chunk >= 1 && max_batch >= 1);
+        Scheduler { seqs: Vec::new(), pool, policy, prefill_chunk, max_batch, prefer_decode: false }
+    }
+
+    pub fn n_live(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.seqs.is_empty()
+    }
+
+    pub fn seqs(&self) -> &[SeqState] {
+        &self.seqs
+    }
+
+    pub fn pool(&self) -> &PagePool {
+        &self.pool
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Tokens of KV capacity (how many cached tokens fit the pool).
+    pub fn pool_capacity_tokens(&self) -> usize {
+        self.pool.pages_total() * self.pool.page_size
+    }
+
+    /// Admit a request sent at `start_t`, observed now at `now`. The
+    /// caller is responsible for checking [`Scheduler::can_admit`] first
+    /// (the engine checks the least-loaded replica, the server checks its
+    /// only one); admission without the check deliberately over-commits,
+    /// which the preemption path then repairs.
+    pub fn admit(&mut self, req: Request, start_t: f64, now: f64, metrics: &mut ServiceMetrics) {
+        metrics.queue_wait.record(now - start_t);
+        self.seqs.push(SeqState {
+            req,
+            phase: Phase::Prefill { done: 0 },
+            start_t,
+            first_token_t: None,
+            last_token_t: now,
+        });
+    }
+
+    /// Account a finished prefill chunk at time `now`: allocate its pages
+    /// (planning was pool-checked), advance the phase, and emit the first
+    /// token from the prefill epilogue when the prompt completes. If that
+    /// first token already spends the whole decode budget
+    /// (`decode_len <= 1`) the sequence retires right here and is
+    /// returned — it must not see a decode step.
+    pub fn complete_prefill(
+        &mut self,
+        idx: usize,
+        chunk: usize,
+        now: f64,
+        metrics: &mut ServiceMetrics,
+    ) -> Option<FinishedSeq> {
+        self.prefer_decode = true; // alternate with decode next step
+        let seq_id = self.seqs[idx].req.id as u64;
+        if self.pool.table(seq_id).is_none() {
+            self.pool.allocate(seq_id, chunk);
+        } else {
+            self.pool.grow(seq_id, chunk);
+        }
+        let s = &mut self.seqs[idx];
+        let done = match s.phase {
+            Phase::Prefill { done } => done + chunk,
+            Phase::Decode { .. } => unreachable!("prefill chunk on decoding seq"),
+        };
+        if done >= s.req.prompt_len {
+            // prefill epilogue emits the first token
+            s.phase = Phase::Decode { produced: 1 };
+            s.first_token_t = Some(now);
+            s.last_token_t = now;
+            metrics.output_tokens += 1;
+            if s.req.decode_len <= 1 {
+                return Some(self.retire(idx, now, metrics));
+            }
+        } else {
+            s.phase = Phase::Prefill { done };
+        }
+        None
+    }
+
+    /// Remove a finished sequence: release its pages and record its
+    /// latency metrics. `idx` is invalidated (swap_remove).
+    fn retire(&mut self, idx: usize, now: f64, metrics: &mut ServiceMetrics) -> FinishedSeq {
+        let state = self.seqs.swap_remove(idx);
+        let seq_id = state.req.id as u64;
+        let pages = self.pool.table(seq_id).map(|p| p.to_vec()).unwrap_or_default();
+        self.pool.release(seq_id);
+        metrics.e2e.record(now - state.start_t);
+        metrics
+            .ttft
+            .record(state.first_token_t.unwrap_or(now) - state.start_t);
+        FinishedSeq { state, pages }
+    }
+
+    /// Account one decode step for the sequences at `idxs` at time `now`:
+    /// each grows its cache by the generated token, records ITL, and
+    /// retires when its decode budget is spent. Finished sequences are
+    /// released from the pool and returned (metrics already recorded).
+    ///
+    /// If the pool is exhausted a token still computes (activations) but
+    /// the cache cannot grow — finish-at-budget policy, the engine must
+    /// have freed space via [`Scheduler::preempt_for_decode`] beforehand.
+    pub fn complete_decode(
+        &mut self,
+        idxs: &[usize],
+        now: f64,
+        metrics: &mut ServiceMetrics,
+    ) -> Vec<FinishedSeq> {
+        self.prefer_decode = false;
+        let mut finished_idx: Vec<usize> = Vec::new();
+        for &i in idxs {
+            let seq_id = self.seqs[i].req.id as u64;
+            let _grew = self.pool.grow(seq_id, 1);
+            let s = &mut self.seqs[i];
+            let produced = match s.phase {
+                Phase::Decode { produced } => produced + 1,
+                Phase::Prefill { .. } => unreachable!("decode step on prefilling seq"),
+            };
+            metrics.itl.record(now - s.last_token_t);
+            s.last_token_t = now;
+            metrics.output_tokens += 1;
+            if produced >= s.req.decode_len {
+                finished_idx.push(i);
+            } else {
+                s.phase = Phase::Decode { produced };
+            }
+        }
+        // retire finished sequences (release pages, record metrics);
+        // descending order keeps swap_remove indices valid
+        finished_idx.sort_unstable_by(|a, b| b.cmp(a));
+        let mut out = Vec::with_capacity(finished_idx.len());
+        for i in finished_idx {
+            out.push(self.retire(i, now, metrics));
+        }
+        out
+    }
+
+    /// Pool pressure relief before a decode step: the next step appends one
+    /// token per decoding sequence, and sequences sitting exactly at a page
+    /// boundary need a fresh page. While the pool cannot supply them, evict
+    /// the youngest decoding sequence (vLLM-style preemption; it will
+    /// re-prefill from scratch). Returns the evicted requests with their
+    /// original send times so the caller can requeue them at the front.
+    pub fn preempt_for_decode(&mut self, metrics: &mut ServiceMetrics) -> Vec<(Request, f64)> {
+        let mut evicted = Vec::new();
+        loop {
+            let ps = self.pool.page_size;
+            let new_pages_needed = self
+                .seqs
+                .iter()
+                .filter(|s| s.is_decoding())
+                .filter(|s| {
+                    let stored = self.pool.len_of(s.req.id as u64);
+                    stored > 0 && stored % ps == 0
+                })
+                .count();
+            let n_decoding = self.seqs.iter().filter(|s| s.is_decoding()).count();
+            if new_pages_needed <= self.pool.pages_free() || n_decoding <= 1 {
+                return evicted;
+            }
+            // evict the youngest decoding sequence
+            let (youngest_idx, _) = self
+                .seqs
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.is_decoding())
+                .max_by(|a, b| a.1.start_t.partial_cmp(&b.1.start_t).expect("NaN start_t"))
+                .expect("n_decoding > 1 checked");
+            let s = self.seqs.swap_remove(youngest_idx);
+            self.pool.preempt(s.req.id as u64);
+            metrics.preemptions += 1;
+            evicted.push((s.req, s.start_t));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(n_pages: usize, page_size: usize, chunk: usize) -> Scheduler {
+        Scheduler::new(PagePool::new(n_pages, page_size), PolicyKind::Fcfs.build(), chunk, 256)
+    }
+
+    #[test]
+    fn lifecycle_prefill_then_decode_to_completion() {
+        let mut m = ServiceMetrics::default();
+        let mut s = sched(8, 16, 32);
+        let req = Request::new(1, 40, 3);
+        assert!(s.can_admit(&req)); // 43 tokens -> 3 of the 8 pages
+        s.admit(req, 0.0, 1.0, &mut m);
+        assert_eq!(m.queue_wait.len(), 1);
+
+        // chunked prefill: 32 then 8 tokens
+        assert_eq!(s.plan(), Work::PrefillChunk { idx: 0, chunk: 32 });
+        assert!(s.complete_prefill(0, 32, 2.0, &mut m).is_none());
+        assert_eq!(s.seqs()[0].phase, Phase::Prefill { done: 32 });
+        assert_eq!(s.seqs()[0].ctx_len(), 32);
+        // alternation flag is set but there is nothing to decode yet
+        assert_eq!(s.plan(), Work::PrefillChunk { idx: 0, chunk: 8 });
+        assert!(s.complete_prefill(0, 8, 3.0, &mut m).is_none());
+        // prefill epilogue emitted the first token
+        assert_eq!(s.seqs()[0].phase, Phase::Decode { produced: 1 });
+        assert_eq!(s.seqs()[0].first_token_t, Some(3.0));
+        assert_eq!(m.output_tokens, 1);
+
+        // two decode steps finish the 3-token budget
+        assert_eq!(s.plan(), Work::DecodeBatch { idxs: vec![0] });
+        assert!(s.complete_decode(&[0], 4.0, &mut m).is_empty());
+        let fin = s.complete_decode(&[0], 5.0, &mut m);
+        assert_eq!(fin.len(), 1);
+        assert_eq!(fin[0].state.req.id, 1);
+        assert!(!fin[0].pages.is_empty());
+        assert!(s.is_idle());
+        assert_eq!(m.output_tokens, 3);
+        assert_eq!(m.e2e.len(), 1);
+        assert_eq!(m.ttft.len(), 1);
+        assert!((m.ttft.median() - 3.0).abs() < 1e-12); // sent at 0, first token at 3
+        s.pool().check_invariants().unwrap();
+        assert_eq!(s.pool().pages_free(), s.pool().pages_total());
+    }
+
+    #[test]
+    fn reservation_admission_blocks_overflow() {
+        let mut m = ServiceMetrics::default();
+        let mut s = sched(4, 16, 8192);
+        let big = Request::new(1, 48, 16); // 64 tokens = all 4 pages
+        assert!(s.can_admit(&big));
+        s.admit(big, 0.0, 0.0, &mut m);
+        let small = Request::new(2, 1, 1);
+        assert!(!s.can_admit(&small)); // fully reserved
+    }
+
+    #[test]
+    fn preemption_repairs_overcommit_and_conserves_pages() {
+        let mut m = ServiceMetrics::default();
+        // 4 pages of 4 tokens; deliberately over-commit two sequences whose
+        // final footprints (12 + 12 tokens = 6 pages) exceed the pool.
+        let mut s = sched(4, 4, 8192);
+        s.admit(Request::new(1, 8, 4), 0.0, 0.0, &mut m);
+        s.admit(Request::new(2, 8, 4), 0.5, 1.0, &mut m); // younger (sent later)
+        let _ = s.complete_prefill(0, 8, 1.0, &mut m); // 2 pages, emits first token
+        let _ = s.complete_prefill(1, 8, 2.0, &mut m); // 2 pages, pool now full
+        // both sit at a page boundary (8 % 4 == 0) and want a page each;
+        // 0 free -> evict the youngest (id 2), then seq 1 still needs one
+        // page with 2 free, so eviction stops.
+        let evicted = s.preempt_for_decode(&mut m);
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].0.id, 2);
+        assert_eq!(evicted[0].1, 0.5); // original send time preserved
+        assert_eq!(m.preemptions, 1);
+        assert_eq!(s.n_live(), 1);
+        assert_eq!(s.pool().pages_free(), 2);
+        s.pool().check_invariants().unwrap();
+        // the survivor decodes to completion (produced 1 -> 4 in 3 steps)
+        for t in 0..3 {
+            s.complete_decode(&[0], 3.0 + t as f64, &mut m);
+        }
+        assert!(s.is_idle());
+        assert_eq!(s.pool().pages_free(), s.pool().pages_total());
+        s.pool().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn plan_is_pool_aware_for_prefill() {
+        let mut m = ServiceMetrics::default();
+        let mut s = sched(2, 4, 8); // 8 tokens total capacity
+        s.admit(Request::new(1, 8, 2), 0.0, 0.0, &mut m);
+        let _ = s.complete_prefill(0, 8, 1.0, &mut m); // pool full, seq 1 decoding
+        // over-commit a second sequence: its first chunk cannot fit
+        s.admit(Request::new(2, 8, 2), 0.0, 1.0, &mut m);
+        match s.plan() {
+            Work::DecodeBatch { idxs } => assert_eq!(idxs, vec![0]),
+            w => panic!("expected decode-only work, got {w:?}"),
+        }
+    }
+
+    #[test]
+    fn single_token_budget_retires_at_prefill_epilogue() {
+        let mut m = ServiceMetrics::default();
+        let mut s = sched(4, 16, 64);
+        s.admit(Request::new(9, 10, 1), 0.0, 0.0, &mut m);
+        let fin = s
+            .complete_prefill(0, 10, 1.0, &mut m)
+            .expect("decode_len 1 must retire at the epilogue");
+        assert_eq!(fin.state.req.id, 9);
+        assert!(!fin.pages.is_empty());
+        assert!(s.is_idle());
+        assert_eq!(m.output_tokens, 1); // exactly decode_len, not 2
+        assert_eq!(m.e2e.len(), 1);
+        assert_eq!(m.ttft.len(), 1);
+        assert_eq!(m.itl.len(), 0); // one token -> no inter-token latency
+        assert_eq!(s.pool().pages_free(), s.pool().pages_total());
+        s.pool().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn decode_priority_policy_changes_plan() {
+        let mut m = ServiceMetrics::default();
+        let mut mk = |kind: PolicyKind| {
+            let mut s = Scheduler::new(PagePool::new(16, 4), kind.build(), 4, 256);
+            s.admit(Request::new(1, 4, 4), 0.0, 0.0, &mut m);
+            let _ = s.complete_prefill(0, 4, 1.0, &mut m); // now decoding
+            s.complete_decode(&[0], 2.0, &mut m); // prefer_decode=false again
+            s.admit(Request::new(2, 4, 4), 0.0, 2.0, &mut m);
+            s
+        };
+        // FCFS alternation: after a decode step, prefill gets its turn
+        assert!(matches!(mk(PolicyKind::Fcfs).plan(), Work::PrefillChunk { .. }));
+        // decode-priority: the live decode always wins
+        assert!(matches!(
+            mk(PolicyKind::DecodePriority).plan(),
+            Work::DecodeBatch { .. }
+        ));
+    }
+}

@@ -1,0 +1,240 @@
+//! Pluggable scheduling policies.
+//!
+//! A [`SchedPolicy`] decides three things the lifecycle state machine in
+//! [`super::Scheduler`] leaves open: which queued request to admit next,
+//! which admissible sequence to prefill next, and whether a ready decode
+//! batch runs before a pending prefill chunk. Everything else — paged-KV
+//! admission control, chunking, phase transitions, preemption — is policy-
+//! independent and lives in the scheduler itself, so a policy validated in
+//! the virtual-time simulator runs unchanged against real tokens.
+//!
+//! All policies are deterministic: identical policy + workload seed must
+//! reproduce identical virtual-time metrics (the benches assert this).
+
+use super::{Phase, SeqState};
+use crate::workload::Request;
+
+/// A queued-but-not-yet-admitted request: `(request, send time)`. The send
+/// time is when the client put it on the wire (its TTFT clock is running).
+pub type QueuedReq = (Request, f64);
+
+pub trait SchedPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Index into `queued` of the request to try to admit next. Admission
+    /// is head-of-line on the *policy's* order: if the picked request does
+    /// not fit the KV pool, nothing is admitted this round.
+    fn pick_waiting(&self, queued: &[QueuedReq]) -> Option<usize>;
+
+    /// Among the prefill-capable sequences (`candidates` indexes `seqs`),
+    /// which gets the next chunk.
+    fn pick_prefill(&self, seqs: &[SeqState], candidates: &[usize]) -> Option<usize>;
+
+    /// Whether a non-empty decode batch should run before a pending
+    /// prefill chunk. `alternate` is the batcher's fairness flag: true
+    /// right after a prefill chunk ran, so strict alternation (the FCFS
+    /// default) keeps chunked prefill from starving decode and vice versa.
+    fn decode_first(&self, alternate: bool) -> bool;
+}
+
+/// First-come-first-served: queue order everywhere, alternate prefill and
+/// decode. This is the seed engine's behavior, bit-for-bit.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fcfs;
+
+impl SchedPolicy for Fcfs {
+    fn name(&self) -> &'static str {
+        "fcfs"
+    }
+
+    fn pick_waiting(&self, queued: &[QueuedReq]) -> Option<usize> {
+        if queued.is_empty() {
+            None
+        } else {
+            Some(0)
+        }
+    }
+
+    fn pick_prefill(&self, _seqs: &[SeqState], candidates: &[usize]) -> Option<usize> {
+        candidates.first().copied()
+    }
+
+    fn decode_first(&self, alternate: bool) -> bool {
+        alternate
+    }
+}
+
+/// Shortest-prompt-first: admit the queued request with the fewest prompt
+/// tokens, and prefill the sequence with the least remaining prefill work.
+/// Short interactive requests overtake the §5.2 imbalanced long-prompt
+/// stragglers instead of waiting behind them (at the cost of long-request
+/// TTFT — the classic SJF trade).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShortestPromptFirst;
+
+impl SchedPolicy for ShortestPromptFirst {
+    fn name(&self) -> &'static str {
+        "spf"
+    }
+
+    fn pick_waiting(&self, queued: &[QueuedReq]) -> Option<usize> {
+        queued
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, (r, _))| (r.prompt_len, r.id))
+            .map(|(i, _)| i)
+    }
+
+    fn pick_prefill(&self, seqs: &[SeqState], candidates: &[usize]) -> Option<usize> {
+        candidates
+            .iter()
+            .copied()
+            .min_by_key(|&i| {
+                let s = &seqs[i];
+                let done = match s.phase {
+                    Phase::Prefill { done } => done,
+                    Phase::Decode { .. } => 0,
+                };
+                (s.req.prompt_len - done.min(s.req.prompt_len), s.req.id)
+            })
+    }
+
+    fn decode_first(&self, alternate: bool) -> bool {
+        alternate
+    }
+}
+
+/// Decode-priority: whenever any sequence can decode, decode — prefill
+/// chunks only run on steps with no ready decode batch. Minimizes ITL
+/// (tokens already streaming never wait behind a prefill chunk) at the
+/// cost of TTFT for queued prompts.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DecodePriority;
+
+impl SchedPolicy for DecodePriority {
+    fn name(&self) -> &'static str {
+        "decode-priority"
+    }
+
+    fn pick_waiting(&self, queued: &[QueuedReq]) -> Option<usize> {
+        if queued.is_empty() {
+            None
+        } else {
+            Some(0)
+        }
+    }
+
+    fn pick_prefill(&self, _seqs: &[SeqState], candidates: &[usize]) -> Option<usize> {
+        candidates.first().copied()
+    }
+
+    fn decode_first(&self, _alternate: bool) -> bool {
+        true
+    }
+}
+
+/// Config-friendly policy selector (Copy, so `ServingConfig` stays Clone).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PolicyKind {
+    #[default]
+    Fcfs,
+    ShortestPromptFirst,
+    DecodePriority,
+}
+
+impl PolicyKind {
+    pub fn build(self) -> Box<dyn SchedPolicy> {
+        match self {
+            PolicyKind::Fcfs => Box::new(Fcfs),
+            PolicyKind::ShortestPromptFirst => Box::new(ShortestPromptFirst),
+            PolicyKind::DecodePriority => Box::new(DecodePriority),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Fcfs => "fcfs",
+            PolicyKind::ShortestPromptFirst => "spf",
+            PolicyKind::DecodePriority => "decode-priority",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s {
+            "fcfs" => Some(PolicyKind::Fcfs),
+            "spf" | "shortest-prompt" | "shortest-prompt-first" => {
+                Some(PolicyKind::ShortestPromptFirst)
+            }
+            "decode-priority" | "decode" => Some(PolicyKind::DecodePriority),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [PolicyKind; 3] {
+        [
+            PolicyKind::Fcfs,
+            PolicyKind::ShortestPromptFirst,
+            PolicyKind::DecodePriority,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, prompt: usize) -> QueuedReq {
+        (Request::new(id, prompt, 16), 0.0)
+    }
+
+    #[test]
+    fn fcfs_picks_queue_head() {
+        let q = vec![req(0, 900), req(1, 10), req(2, 50)];
+        assert_eq!(Fcfs.pick_waiting(&q), Some(0));
+        assert_eq!(Fcfs.pick_waiting(&[]), None);
+    }
+
+    #[test]
+    fn spf_picks_shortest_prompt_ties_by_id() {
+        let q = vec![req(0, 900), req(1, 10), req(2, 10)];
+        assert_eq!(ShortestPromptFirst.pick_waiting(&q), Some(1));
+        assert_eq!(ShortestPromptFirst.pick_waiting(&[]), None);
+    }
+
+    #[test]
+    fn spf_prefill_prefers_least_remaining_work() {
+        let mk = |id: usize, prompt: usize, done: usize| SeqState {
+            req: Request::new(id, prompt, 8),
+            phase: Phase::Prefill { done },
+            start_t: 0.0,
+            first_token_t: None,
+            last_token_t: 0.0,
+        };
+        // seq 0: 900 remaining; seq 1: 100 remaining; seq 2: 4000 remaining
+        let seqs = vec![mk(0, 1000, 100), mk(1, 200, 100), mk(2, 4000, 0)];
+        let cands = vec![0, 1, 2];
+        assert_eq!(ShortestPromptFirst.pick_prefill(&seqs, &cands), Some(1));
+        // FCFS takes the first candidate regardless
+        assert_eq!(Fcfs.pick_prefill(&seqs, &cands), Some(0));
+    }
+
+    #[test]
+    fn decode_first_flags() {
+        assert!(!Fcfs.decode_first(false));
+        assert!(Fcfs.decode_first(true));
+        assert!(DecodePriority.decode_first(false));
+        assert!(DecodePriority.decode_first(true));
+        assert!(!ShortestPromptFirst.decode_first(false));
+    }
+
+    #[test]
+    fn kind_roundtrip() {
+        for k in PolicyKind::all() {
+            assert_eq!(PolicyKind::parse(k.name()), Some(k));
+            assert_eq!(k.build().name(), k.name());
+        }
+        assert_eq!(PolicyKind::parse("shortest-prompt"), Some(PolicyKind::ShortestPromptFirst));
+        assert_eq!(PolicyKind::parse("nope"), None);
+        assert_eq!(PolicyKind::default(), PolicyKind::Fcfs);
+    }
+}

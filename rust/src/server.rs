@@ -1,23 +1,38 @@
-//! Live serving over the real PJRT runtime: a continuous-batching engine
-//! that executes the AOT decode artifacts, a threaded server front-end,
-//! and a closed-loop load generator — the execution-scale counterpart of
-//! the simulated §B.6 benchmarks (real tokens, real wall-clock metrics).
+//! Live serving over a real step-executing model: a continuous-batching
+//! engine whose request lifecycle is the *same* [`crate::sched::Scheduler`]
+//! the virtual-time simulator runs, driven here by real step results and
+//! wall-clock time. A threaded server front-end and a closed-loop load
+//! generator sit on top — the execution-scale counterpart of the simulated
+//! §B.6 benchmarks (real tokens, real wall-clock metrics).
 //!
-//! The model is the `tiny` artifact config (see python/compile/configs.py):
-//! batch slots are fixed at the artifact's lowered batch size; the engine
-//! continuously refills free slots from the waiting queue (prefill batch),
-//! splices the prefilled cache rows into the live decode cache, and runs
-//! one fused decode step per iteration — Python is never on this path.
+//! The engine is generic over [`StepModel`] so the scheduling path is
+//! compiled and tested without any accelerator runtime; the PJRT-backed
+//! [`TinyModel`] (the `tiny` artifact config, see python/compile/configs.py)
+//! implements it behind the `pjrt` feature. Batch slots are fixed at the
+//! artifact's lowered batch size; the scheduler's page pool is sized one
+//! page per slot (`page_size = max_len`), so paged-KV reservation admission
+//! degenerates to exactly slot admission and `page table[0]` *is* the
+//! slot index. The engine continuously refills free slots from the wait
+//! queue (prefill batch), splices the prefilled cache rows into the live
+//! decode cache, and runs one fused decode step per iteration — Python is
+//! never on this path.
 
-use std::collections::VecDeque;
-use std::sync::mpsc;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::{anyhow, bail, Result};
 
+use crate::kvcache::PagePool;
 use crate::metrics::ServiceMetrics;
+#[cfg(feature = "pjrt")]
 use crate::runtime::{lit_f32, lit_i32, Artifact, Runtime, TensorMeta};
+use crate::sched::{Phase, PolicyKind, Scheduler, WaitQueue};
 use crate::workload::Request;
+
+/// Errors from the engine path shared between the mock and PJRT backends
+/// (kept anyhow-free so the default build has zero dependencies).
+pub type EngineError = Box<dyn std::error::Error + Send + Sync + 'static>;
+pub type EngineResult<T> = std::result::Result<T, EngineError>;
 
 /// Host-resident tensor state (f32) with its logical shape.
 #[derive(Debug, Clone)]
@@ -26,6 +41,7 @@ pub struct HostTensor {
     pub data: Vec<f32>,
 }
 
+#[cfg(feature = "pjrt")]
 impl HostTensor {
     fn from_literal(meta: &TensorMeta, lit: &xla::Literal) -> Result<Self> {
         Ok(HostTensor {
@@ -39,7 +55,270 @@ impl HostTensor {
     }
 }
 
+/// What the continuous-batching engine needs from an executable model:
+/// fixed-shape batched prefill and one fused decode step over a pair of
+/// host-resident cache tensors. [`TinyModel`] implements this over PJRT;
+/// tests implement it with a deterministic mock.
+pub trait StepModel {
+    fn batch(&self) -> usize;
+    fn prefill_t(&self) -> usize;
+    fn max_len(&self) -> usize;
+    fn vocab(&self) -> usize;
+
+    /// Zero-filled cache pair matching the decode step's shapes.
+    fn empty_cache(&self) -> EngineResult<(HostTensor, HostTensor)>;
+
+    /// Prefill a full batch of token rows (padded to `prefill_t`).
+    /// Returns (logits `[B, prefill_t, vocab]`, cache_main, cache_aux).
+    fn run_prefill(&self, tokens: &[i32]) -> EngineResult<(HostTensor, HostTensor, HostTensor)>;
+
+    /// One decode step: tokens `(B,)` at per-sequence cache positions
+    /// `lens`. Returns (logits `[B, 1, vocab]`, new main, new aux).
+    fn run_decode(
+        &self,
+        main: &HostTensor,
+        aux: &HostTensor,
+        tokens: &[i32],
+        lens: &[i32],
+    ) -> EngineResult<(HostTensor, HostTensor, HostTensor)>;
+}
+
+/// Copy batch-row `src_b` of `src` into row `dst_b` of `dst` for a cache
+/// tensor laid out (n_layers, B, L, H, D).
+pub fn splice_cache_row(dst: &mut HostTensor, src: &HostTensor, dst_b: usize, src_b: usize) {
+    let (nl, b) = (dst.shape[0], dst.shape[1]);
+    let row: usize = dst.shape[2..].iter().product();
+    debug_assert_eq!(src.shape[0], nl);
+    let src_bs = src.shape[1];
+    for l in 0..nl {
+        let d0 = (l * b + dst_b) * row;
+        let s0 = (l * src_bs + src_b) * row;
+        dst.data[d0..d0 + row].copy_from_slice(&src.data[s0..s0 + row]);
+    }
+}
+
+fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in row.iter().enumerate() {
+        if x > row[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+// ---------------------------------------------------------------------------
+// continuous-batching engine over a real step model
+// ---------------------------------------------------------------------------
+
+/// Continuous-batching engine executing real decode steps. The lifecycle
+/// (admission, phases, retirement) is owned by the shared [`Scheduler`];
+/// this struct owns what the scheduler cannot know: the dense cache
+/// tensors, the per-slot next-token registers, and the wall clock.
+pub struct RealEngine<M: StepModel> {
+    pub model: M,
+    sched: Scheduler,
+    queue: WaitQueue,
+    cache_main: HostTensor,
+    cache_aux: HostTensor,
+    /// per-slot next input token (written by prefill epilogue / decode)
+    next_token: Vec<i32>,
+    t0: Instant,
+    pub metrics: ServiceMetrics,
+    pub steps: u64,
+}
+
+impl<M: StepModel> RealEngine<M> {
+    pub fn new(model: M) -> EngineResult<Self> {
+        let (cache_main, cache_aux) = model.empty_cache()?;
+        let batch = model.batch();
+        // one page per batch slot: page_size = max_len makes every request
+        // reserve exactly one page, so the shared reservation admission is
+        // precisely "is a slot free", and table[0] is the slot index
+        let sched = Scheduler::new(
+            PagePool::new(batch, model.max_len()),
+            PolicyKind::Fcfs.build(),
+            model.max_len(), // whole (clamped) prompt in one chunk
+            batch,
+        );
+        Ok(RealEngine {
+            next_token: vec![0; batch],
+            sched,
+            queue: WaitQueue::open(),
+            cache_main,
+            cache_aux,
+            model,
+            t0: Instant::now(),
+            metrics: ServiceMetrics::default(),
+            steps: 0,
+        })
+    }
+
+    fn now(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    /// Submit a request; its TTFT clock starts now. Lengths are clamped to
+    /// the artifact's lowered shapes (prompt to `prefill_t`, total to
+    /// `max_len`), matching what the fixed-shape kernels can execute.
+    pub fn submit(&mut self, req: Request) {
+        let mut req = req;
+        // the prompt must fit the prefill tile AND leave at least one
+        // decode position of cache room (the lowered shapes guarantee
+        // nothing about prefill_t vs max_len, so clamp against both)
+        let max_prompt = self
+            .model
+            .prefill_t()
+            .min(self.model.max_len().saturating_sub(2))
+            .max(1);
+        req.prompt_len = req.prompt_len.clamp(1, max_prompt);
+        let decode_cap = (self.model.max_len() - 1).saturating_sub(req.prompt_len).max(1);
+        req.decode_len = req.decode_len.clamp(1, decode_cap);
+        req.arrival_t = self.now();
+        self.queue.submit(&[req]);
+    }
+
+    pub fn idle(&self) -> bool {
+        self.queue.is_drained() && self.sched.is_idle()
+    }
+
+    /// Deterministic prompt for request ids (the serving benchmark follows
+    /// the paper in benchmarking performance, not content: §B.6 serves a
+    /// randomly-initialized restructured model).
+    pub fn prompt_tokens(&self, req: &Request) -> Vec<i32> {
+        let v = self.model.vocab() as u64;
+        (0..req.prompt_len)
+            .map(|i| (((req.id as u64).wrapping_mul(31) + i as u64 * 7) % v) as i32)
+            .collect()
+    }
+
+    /// Batch slot of a live sequence (its single pool page).
+    fn slot_of(&self, seq_id: u64) -> usize {
+        self.sched.pool().table(seq_id).expect("live seq has a page")[0] as usize
+    }
+
+    /// Refill free slots: admit waiting requests through the shared
+    /// scheduler, batch-prefill them, and splice their cache rows into the
+    /// live cache.
+    fn refill(&mut self) -> EngineResult<()> {
+        let now = self.now();
+        self.queue.release(now, self.sched.n_live());
+        loop {
+            let Some(&(req, send_t)) = self.queue.queued().first() else { break };
+            if !self.sched.can_admit(&req) {
+                break; // all slots occupied: head-of-line wait
+            }
+            self.queue.remove(0);
+            self.sched.admit(req, send_t, now, &mut self.metrics);
+        }
+        let pre: Vec<usize> = self
+            .sched
+            .seqs()
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| matches!(s.phase, Phase::Prefill { .. }))
+            .map(|(i, _)| i)
+            .collect();
+        if pre.is_empty() {
+            return Ok(());
+        }
+        let t = self.model.prefill_t();
+        let mut tokens = vec![0i32; self.model.batch() * t];
+        for (bi, &idx) in pre.iter().enumerate() {
+            let prompt = self.prompt_tokens(&self.sched.seqs()[idx].req);
+            tokens[bi * t..bi * t + prompt.len()].copy_from_slice(&prompt);
+        }
+        let (logits, pm, pa) = self.model.run_prefill(&tokens)?;
+        let now = self.now();
+        let vocab = self.model.vocab();
+        // complete in DESCENDING index order: a decode_len == 1 sequence
+        // retires at the epilogue (swap_remove inside the scheduler), which
+        // only disturbs indices at or above the one being completed
+        for (bi, &idx) in pre.iter().enumerate().rev() {
+            let (seq_id, plen) = {
+                let s = &self.sched.seqs()[idx];
+                (s.req.id as u64, s.req.prompt_len)
+            };
+            // full prompt in one chunk: allocates the slot page and emits
+            // the first token (greedy, from the last prompt position)
+            let retired = self.sched.complete_prefill(idx, plen, now, &mut self.metrics);
+            if retired.is_some() {
+                // single-token budget: the epilogue token was the whole
+                // response; the slot is already free, nothing to splice
+                continue;
+            }
+            let slot = self.slot_of(seq_id);
+            splice_cache_row(&mut self.cache_main, &pm, slot, bi);
+            splice_cache_row(&mut self.cache_aux, &pa, slot, bi);
+            let base = (bi * t + plen - 1) * vocab;
+            self.next_token[slot] = argmax(&logits.data[base..base + vocab]);
+        }
+        Ok(())
+    }
+
+    /// One engine iteration: refill slots, then one fused decode step.
+    pub fn step(&mut self) -> EngineResult<()> {
+        self.refill()?;
+        let dec: Vec<usize> = self
+            .sched
+            .seqs()
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_decoding())
+            .map(|(i, _)| i)
+            .collect();
+        if dec.is_empty() {
+            return Ok(());
+        }
+        let b = self.model.batch();
+        let mut tokens = vec![0i32; b];
+        let mut lens = vec![0i32; b];
+        let mut slot_of_idx = vec![0usize; self.sched.seqs().len()];
+        for &i in &dec {
+            let s = &self.sched.seqs()[i];
+            let slot = self.slot_of(s.req.id as u64);
+            slot_of_idx[i] = slot;
+            tokens[slot] = self.next_token[slot];
+            // cache write position: tokens already stored for this seq
+            lens[slot] = (s.ctx_len() - 1) as i32;
+        }
+        let (logits, nm, na) =
+            self.model
+                .run_decode(&self.cache_main, &self.cache_aux, &tokens, &lens)?;
+        self.cache_main = nm;
+        self.cache_aux = na;
+        self.steps += 1;
+        let now = self.now();
+        let touched: Vec<usize> = dec.iter().map(|&i| slot_of_idx[i]).collect();
+        let finished = self.sched.complete_decode(&dec, now, &mut self.metrics);
+        let freed: Vec<usize> = finished.iter().map(|f| f.pages[0] as usize).collect();
+        let vocab = self.model.vocab();
+        for slot in touched {
+            if !freed.contains(&slot) {
+                self.next_token[slot] = argmax(&logits.data[slot * vocab..(slot + 1) * vocab]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Drain everything; returns wall-clock seconds.
+    pub fn run_to_completion(&mut self) -> EngineResult<f64> {
+        let t0 = Instant::now();
+        while !self.idle() {
+            self.step()?;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        self.metrics.duration = dt;
+        Ok(dt)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the PJRT-backed tiny model (pjrt feature)
+// ---------------------------------------------------------------------------
+
 /// A loaded tiny model: init/absorb/prefill/decode artifacts + parameters.
+#[cfg(feature = "pjrt")]
 pub struct TinyModel {
     pub variant: String,
     prefill: Artifact,
@@ -56,6 +335,7 @@ pub struct TinyModel {
 
 /// Order `args` for an artifact by matching meta input names: `params.*`
 /// pulls from the named parameter list, everything else from `extras`.
+#[cfg(feature = "pjrt")]
 fn order_args(
     art: &Artifact,
     params: &[(String, xla::Literal)],
@@ -82,6 +362,7 @@ fn order_args(
     Ok(out)
 }
 
+#[cfg(feature = "pjrt")]
 impl TinyModel {
     /// Load all artifacts of `variant`, initialize parameters on device
     /// with `seed`, and absorb them for decoding.
@@ -261,201 +542,50 @@ impl TinyModel {
     }
 }
 
-/// Copy batch-row `src_b` of `src` into row `dst_b` of `dst` for a cache
-/// tensor laid out (n_layers, B, L, H, D).
-pub fn splice_cache_row(dst: &mut HostTensor, src: &HostTensor, dst_b: usize, src_b: usize) {
-    let (nl, b) = (dst.shape[0], dst.shape[1]);
-    let row: usize = dst.shape[2..].iter().product();
-    debug_assert_eq!(src.shape[0], nl);
-    let src_bs = src.shape[1];
-    for l in 0..nl {
-        let d0 = (l * b + dst_b) * row;
-        let s0 = (l * src_bs + src_b) * row;
-        dst.data[d0..d0 + row].copy_from_slice(&src.data[s0..s0 + row]);
+#[cfg(feature = "pjrt")]
+impl StepModel for TinyModel {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn prefill_t(&self) -> usize {
+        self.prefill_t
+    }
+    fn max_len(&self) -> usize {
+        self.max_len
+    }
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn empty_cache(&self) -> EngineResult<(HostTensor, HostTensor)> {
+        TinyModel::empty_cache(self).map_err(|e| EngineError::from(format!("{e:#}")))
+    }
+
+    fn run_prefill(&self, tokens: &[i32]) -> EngineResult<(HostTensor, HostTensor, HostTensor)> {
+        TinyModel::run_prefill(self, tokens).map_err(|e| EngineError::from(format!("{e:#}")))
+    }
+
+    fn run_decode(
+        &self,
+        main: &HostTensor,
+        aux: &HostTensor,
+        tokens: &[i32],
+        lens: &[i32],
+    ) -> EngineResult<(HostTensor, HostTensor, HostTensor)> {
+        TinyModel::run_decode(self, main, aux, tokens, lens)
+            .map_err(|e| EngineError::from(format!("{e:#}")))
     }
 }
 
 // ---------------------------------------------------------------------------
-// continuous-batching engine over the real model
-// ---------------------------------------------------------------------------
-
-#[derive(Debug, Clone)]
-struct Slot {
-    req: Request,
-    len: usize,
-    produced: usize,
-    next_token: i32,
-    sent_t: Instant,
-    first_token_t: Option<Instant>,
-    last_token_t: Instant,
-}
-
-/// Continuous-batching engine executing real decode steps on PJRT-CPU.
-pub struct RealEngine {
-    pub model: TinyModel,
-    slots: Vec<Option<Slot>>,
-    waiting: VecDeque<(Request, Instant)>,
-    cache_main: HostTensor,
-    cache_aux: HostTensor,
-    pub metrics: ServiceMetrics,
-    pub steps: u64,
-}
-
-impl RealEngine {
-    pub fn new(model: TinyModel) -> Result<Self> {
-        let (cache_main, cache_aux) = model.empty_cache()?;
-        let slots = vec![None; model.batch];
-        Ok(RealEngine {
-            model,
-            slots,
-            waiting: VecDeque::new(),
-            cache_main,
-            cache_aux,
-            metrics: ServiceMetrics::default(),
-            steps: 0,
-        })
-    }
-
-    pub fn submit(&mut self, req: Request) {
-        self.waiting.push_back((req, Instant::now()));
-    }
-
-    pub fn idle(&self) -> bool {
-        self.waiting.is_empty() && self.slots.iter().all(|s| s.is_none())
-    }
-
-    /// Deterministic prompt for request ids (the serving benchmark follows
-    /// the paper in benchmarking performance, not content: §B.6 serves a
-    /// randomly-initialized restructured model).
-    pub fn prompt_tokens(&self, req: &Request) -> Vec<i32> {
-        let v = self.model.vocab as u64;
-        (0..req.prompt_len)
-            .map(|i| (((req.id as u64).wrapping_mul(31) + i as u64 * 7) % v) as i32)
-            .collect()
-    }
-
-    /// Refill free slots: batch-prefill up to `batch` waiting prompts and
-    /// splice their cache rows into the live cache.
-    fn refill(&mut self) -> Result<()> {
-        let free: Vec<usize> = (0..self.slots.len())
-            .filter(|&i| self.slots[i].is_none())
-            .collect();
-        if free.is_empty() || self.waiting.is_empty() {
-            return Ok(());
-        }
-        let n = free.len().min(self.waiting.len());
-        let t = self.model.prefill_t;
-        let mut tokens = vec![0i32; self.model.batch * t];
-        let mut admitted = Vec::new();
-        for bi in 0..n {
-            let (req, sent) = self.waiting.pop_front().unwrap();
-            let prompt = self.prompt_tokens(&req);
-            let plen = prompt.len().min(t);
-            tokens[bi * t..bi * t + plen].copy_from_slice(&prompt[..plen]);
-            admitted.push((free[bi], bi, req, sent, plen));
-        }
-        let (logits, pm, pa) = self.model.run_prefill(&tokens)?;
-        let now = Instant::now();
-        let vocab = self.model.vocab;
-        for (slot, bi, req, sent, plen) in admitted {
-            splice_cache_row(&mut self.cache_main, &pm, slot, bi);
-            splice_cache_row(&mut self.cache_aux, &pa, slot, bi);
-            // greedy first token from the last prompt position
-            let base = (bi * t + plen - 1) * vocab;
-            let row = &logits.data[base..base + vocab];
-            let tok = argmax(row);
-            self.metrics.output_tokens += 1;
-            self.slots[slot] = Some(Slot {
-                req,
-                len: plen,
-                produced: 1,
-                next_token: tok,
-                sent_t: sent,
-                first_token_t: Some(now),
-                last_token_t: now,
-            });
-        }
-        Ok(())
-    }
-
-    /// One engine iteration: refill slots, then one fused decode step.
-    pub fn step(&mut self) -> Result<()> {
-        self.refill()?;
-        if self.slots.iter().all(|s| s.is_none()) {
-            return Ok(());
-        }
-        let b = self.model.batch;
-        let mut tokens = vec![0i32; b];
-        let mut lens = vec![0i32; b];
-        for (i, s) in self.slots.iter().enumerate() {
-            if let Some(s) = s {
-                tokens[i] = s.next_token;
-                lens[i] = s.len as i32;
-            }
-        }
-        let (logits, nm, na) =
-            self.model
-                .run_decode(&self.cache_main, &self.cache_aux, &tokens, &lens)?;
-        self.cache_main = nm;
-        self.cache_aux = na;
-        self.steps += 1;
-        let now = Instant::now();
-        let vocab = self.model.vocab;
-        for i in 0..b {
-            let Some(s) = &mut self.slots[i] else { continue };
-            s.len += 1;
-            s.produced += 1;
-            self.metrics.itl.record(now.duration_since(s.last_token_t).as_secs_f64());
-            s.last_token_t = now;
-            self.metrics.output_tokens += 1;
-            s.next_token = argmax(&logits.data[i * vocab..(i + 1) * vocab]);
-            let done = s.produced >= s.req.decode_len || s.len + 1 >= self.model.max_len;
-            if done {
-                self.metrics
-                    .e2e
-                    .record(now.duration_since(s.sent_t).as_secs_f64());
-                self.metrics.ttft.record(
-                    s.first_token_t
-                        .unwrap_or(now)
-                        .duration_since(s.sent_t)
-                        .as_secs_f64(),
-                );
-                self.slots[i] = None;
-            }
-        }
-        Ok(())
-    }
-
-    /// Drain everything; returns wall-clock seconds.
-    pub fn run_to_completion(&mut self) -> Result<f64> {
-        let t0 = Instant::now();
-        while !self.idle() {
-            self.step()?;
-        }
-        let dt = t0.elapsed().as_secs_f64();
-        self.metrics.duration = dt;
-        Ok(dt)
-    }
-}
-
-fn argmax(row: &[f32]) -> i32 {
-    let mut best = 0usize;
-    for (i, &x) in row.iter().enumerate() {
-        if x > row[best] {
-            best = i;
-        }
-    }
-    best as i32
-}
-
-// ---------------------------------------------------------------------------
-// threaded live server + closed-loop load generator
+// threaded live server + closed-loop load generator (pjrt feature)
 // ---------------------------------------------------------------------------
 
 /// Run a live threaded benchmark: a server thread constructs and owns the
 /// engine (PJRT handles are not `Send`, so the model must be born on the
 /// serving thread); the load generator keeps `concurrency` requests in
 /// flight. Returns the populated wall-clock metrics.
+#[cfg(feature = "pjrt")]
 pub fn serve_benchmark(
     artifact_dir: &str,
     variant: &str,
@@ -463,6 +593,9 @@ pub fn serve_benchmark(
     reqs: Vec<Request>,
     concurrency: usize,
 ) -> Result<ServiceMetrics> {
+    use std::collections::VecDeque;
+    use std::sync::mpsc;
+
     let (tx, rx) = mpsc::channel::<Request>();
     let (done_tx, done_rx) = mpsc::channel::<usize>();
     let n_total = reqs.len();
@@ -472,7 +605,7 @@ pub fn serve_benchmark(
     let server = std::thread::spawn(move || -> Result<ServiceMetrics> {
         let rt = Runtime::new(&dir)?;
         let model = TinyModel::load(&rt, &variant, seed)?;
-        let mut eng = RealEngine::new(model)?;
+        let mut eng = RealEngine::new(model).map_err(|e| anyhow!("engine: {e}"))?;
         let mut finished = 0usize;
         let t0 = Instant::now();
         while finished < n_total {
@@ -488,7 +621,7 @@ pub fn serve_benchmark(
                 }
             }
             let before: usize = eng.metrics.e2e.len();
-            eng.step()?;
+            eng.step().map_err(|e| anyhow!("step: {e}"))?;
             let after: usize = eng.metrics.e2e.len();
             for _ in before..after {
                 finished += 1;
@@ -503,15 +636,216 @@ pub fn serve_benchmark(
     let mut completed = 0usize;
     let mut queue: VecDeque<Request> = reqs.into();
     for _ in 0..concurrency.min(n_total) {
-        tx.send(queue.pop_front().unwrap()).context("send")?;
+        tx.send(queue.pop_front().unwrap())
+            .map_err(|e| anyhow!("send: {e}"))?;
     }
     while completed < n_total {
-        let _ = done_rx.recv().context("server died")?;
+        done_rx.recv().map_err(|_| anyhow!("server died"))?;
         completed += 1;
         if let Some(r) = queue.pop_front() {
-            tx.send(r).context("send")?;
+            tx.send(r).map_err(|e| anyhow!("send: {e}"))?;
         }
     }
     drop(tx);
     server.join().map_err(|_| anyhow!("server panicked"))?
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic CPU mock of the artifact interface: logits depend
+    /// only on the input token, caches get the written position stamped —
+    /// enough to drive the full continuous-batching path for real.
+    struct MockModel {
+        batch: usize,
+        prefill_t: usize,
+        max_len: usize,
+        vocab: usize,
+    }
+
+    impl MockModel {
+        fn new() -> Self {
+            MockModel { batch: 4, prefill_t: 32, max_len: 64, vocab: 16 }
+        }
+
+        fn logit_row(&self, token: i32) -> Vec<f32> {
+            (0..self.vocab)
+                .map(|v| (((token as usize + 3 * v) % 7) as f32))
+                .collect()
+        }
+    }
+
+    impl StepModel for MockModel {
+        fn batch(&self) -> usize {
+            self.batch
+        }
+        fn prefill_t(&self) -> usize {
+            self.prefill_t
+        }
+        fn max_len(&self) -> usize {
+            self.max_len
+        }
+        fn vocab(&self) -> usize {
+            self.vocab
+        }
+
+        fn empty_cache(&self) -> EngineResult<(HostTensor, HostTensor)> {
+            let shape = vec![1, self.batch, self.max_len, 1];
+            let n: usize = shape.iter().product();
+            Ok((
+                HostTensor { shape: shape.clone(), data: vec![0.0; n] },
+                HostTensor { shape, data: vec![0.0; n] },
+            ))
+        }
+
+        fn run_prefill(
+            &self,
+            tokens: &[i32],
+        ) -> EngineResult<(HostTensor, HostTensor, HostTensor)> {
+            if tokens.len() != self.batch * self.prefill_t {
+                return Err(EngineError::from(format!(
+                    "prefill wants {}x{} tokens",
+                    self.batch, self.prefill_t
+                )));
+            }
+            let mut logits = vec![0.0; self.batch * self.prefill_t * self.vocab];
+            for (i, &tok) in tokens.iter().enumerate() {
+                logits[i * self.vocab..(i + 1) * self.vocab]
+                    .copy_from_slice(&self.logit_row(tok));
+            }
+            let (mut main, aux) = self.empty_cache()?;
+            for bi in 0..self.batch {
+                for p in 0..self.prefill_t {
+                    main.data[bi * self.max_len + p] = tokens[bi * self.prefill_t + p] as f32;
+                }
+            }
+            Ok((
+                HostTensor {
+                    shape: vec![self.batch, self.prefill_t, self.vocab],
+                    data: logits,
+                },
+                main,
+                aux,
+            ))
+        }
+
+        fn run_decode(
+            &self,
+            main: &HostTensor,
+            aux: &HostTensor,
+            tokens: &[i32],
+            lens: &[i32],
+        ) -> EngineResult<(HostTensor, HostTensor, HostTensor)> {
+            let mut nm = main.clone();
+            let na = aux.clone();
+            let mut logits = vec![0.0; self.batch * self.vocab];
+            for b in 0..self.batch {
+                nm.data[b * self.max_len + lens[b] as usize] = tokens[b] as f32;
+                logits[b * self.vocab..(b + 1) * self.vocab]
+                    .copy_from_slice(&self.logit_row(tokens[b]));
+            }
+            Ok((
+                HostTensor { shape: vec![self.batch, 1, self.vocab], data: logits },
+                nm,
+                na,
+            ))
+        }
+    }
+
+    #[test]
+    fn mock_engine_serves_mixed_lengths_exactly() {
+        let mut eng = RealEngine::new(MockModel::new()).unwrap();
+        for (i, (p, d)) in [(16usize, 4usize), (30, 8), (3, 2), (20, 6)].iter().enumerate() {
+            eng.submit(Request::new(i, *p, *d));
+        }
+        eng.run_to_completion().unwrap();
+        assert_eq!(eng.metrics.e2e.len(), 4);
+        assert_eq!(eng.metrics.output_tokens, (4 + 8 + 2 + 6) as u64);
+        assert_eq!(eng.metrics.queue_wait.len(), 4);
+        assert!(eng.steps > 0);
+        // every slot page returned to the pool
+        let pool = eng.sched.pool();
+        pool.check_invariants().unwrap();
+        assert_eq!(pool.pages_free(), pool.pages_total());
+    }
+
+    #[test]
+    fn mock_engine_interleaves_more_requests_than_slots() {
+        let m = MockModel::new();
+        let nslots = m.batch;
+        let mut eng = RealEngine::new(m).unwrap();
+        for i in 0..nslots + 5 {
+            eng.submit(Request::new(i, 8, 6));
+        }
+        eng.run_to_completion().unwrap();
+        assert_eq!(eng.metrics.e2e.len(), nslots + 5);
+        assert_eq!(eng.metrics.output_tokens, ((nslots + 5) * 6) as u64);
+        assert!(eng.idle());
+    }
+
+    #[test]
+    fn mock_engine_single_token_request_never_decodes() {
+        let mut eng = RealEngine::new(MockModel::new()).unwrap();
+        eng.submit(Request::new(0, 5, 1));
+        // a second request keeps decoding so the batch path still runs
+        eng.submit(Request::new(1, 5, 3));
+        eng.run_to_completion().unwrap();
+        assert_eq!(eng.metrics.e2e.len(), 2);
+        assert_eq!(eng.metrics.output_tokens, 1 + 3); // exactly the budgets
+        let pool = eng.sched.pool();
+        pool.check_invariants().unwrap();
+        assert_eq!(pool.pages_free(), pool.pages_total());
+    }
+
+    #[test]
+    fn mock_engine_clamps_oversized_requests() {
+        let mut eng = RealEngine::new(MockModel::new()).unwrap();
+        // prompt beyond prefill_t and decode beyond max_len must clamp,
+        // not crash the fixed-shape kernels
+        eng.submit(Request::new(0, 1000, 1000));
+        eng.run_to_completion().unwrap();
+        assert_eq!(eng.metrics.e2e.len(), 1);
+        // clamped: prompt 32, decode 64-1-32 = 31 tokens
+        assert_eq!(eng.metrics.output_tokens, 31);
+    }
+
+    #[test]
+    fn mock_engine_writes_decode_tokens_at_cache_positions() {
+        // one request: prompt 4 tokens, 3 decode tokens; the mock stamps
+        // each written token at its cache position so we can check the
+        // scheduler handed the real lens to the kernel
+        let mut eng = RealEngine::new(MockModel::new()).unwrap();
+        eng.submit(Request::new(7, 4, 3));
+        eng.run_to_completion().unwrap();
+        let prompt = eng.prompt_tokens(&Request::new(7, 4, 3));
+        // slot 0 row of the main cache: prompt at [0..4], decode at [4..6]
+        let row = &eng.cache_main.data[0..eng.model.max_len];
+        for (p, &tok) in prompt.iter().enumerate() {
+            assert_eq!(row[p], tok as f32, "prompt token {p}");
+        }
+        // decode wrote produced-1 tokens into the cache (the final token
+        // is emitted but never fed back)
+        assert!(row[4] != 0.0 || row[5] != 0.0 || prompt[0] == 0);
+    }
+
+    #[test]
+    fn splice_copies_one_row_per_layer() {
+        let mut dst = HostTensor { shape: vec![2, 3, 2, 2], data: vec![0.0; 24] };
+        let src = HostTensor { shape: vec![2, 2, 2, 2], data: (0..16).map(|x| x as f32).collect() };
+        splice_cache_row(&mut dst, &src, 2, 1);
+        // layer 0: src row 1 = [4,5,6,7] -> dst row 2 occupies [8..12]
+        assert_eq!(&dst.data[8..12], &[4.0, 5.0, 6.0, 7.0]);
+        // layer 1: src row 1 = [12..16] -> dst offset (1*3+2)*4 = 20
+        assert_eq!(&dst.data[20..24], &[12.0, 13.0, 14.0, 15.0]);
+        // everything else untouched
+        assert!(dst.data[..8].iter().all(|&x| x == 0.0));
+        assert!(dst.data[12..20].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn argmax_prefers_first_max() {
+        assert_eq!(argmax(&[0.0, 3.0, 3.0, 1.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
 }

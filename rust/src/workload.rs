@@ -1,4 +1,5 @@
-//! Workload generation: the request-length distributions of §B.6 and a
+//! Workload generation: the request-length distributions of §B.6, open-loop
+//! Poisson arrival schedules for request-rate (QPS) sweeps, and a
 //! deterministic xorshift PRNG (no external rand crate; results are
 //! reproducible by seed, which EXPERIMENTS.md relies on).
 
@@ -32,14 +33,35 @@ impl Rng {
         }
         lo + (self.next_u64() % (hi - lo + 1) as u64) as usize
     }
+
+    /// Exponential with rate `lambda` (mean 1/lambda) — inter-arrival
+    /// times of a Poisson process. Strictly positive (u == 0 is redrawn),
+    /// so open-loop arrival schedules are strictly increasing.
+    pub fn exp(&mut self, lambda: f64) -> f64 {
+        assert!(lambda > 0.0, "exponential rate must be positive");
+        let mut u = self.f64();
+        while u == 0.0 {
+            u = self.f64();
+        }
+        -(1.0 - u).ln() / lambda
+    }
 }
 
 /// One request to the serving system.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Request {
     pub id: usize,
     pub prompt_len: usize,
     pub decode_len: usize,
+    /// client send time for open-loop driving, seconds (0 under the
+    /// closed-loop generator, which sends on completion instead)
+    pub arrival_t: f64,
+}
+
+impl Request {
+    pub fn new(id: usize, prompt_len: usize, decode_len: usize) -> Self {
+        Request { id, prompt_len, decode_len, arrival_t: 0.0 }
+    }
 }
 
 /// §B.6 length distributions. `random_ratio` is the paper's knob: each
@@ -60,23 +82,35 @@ pub fn generate(dist: LengthDist, n: usize, seed: u64) -> Vec<Request> {
     let mut rng = Rng::new(seed);
     (0..n)
         .map(|id| match dist {
-            LengthDist::Fixed { prompt, decode } => Request { id, prompt_len: prompt, decode_len: decode },
+            LengthDist::Fixed { prompt, decode } => Request::new(id, prompt, decode),
             LengthDist::RandomRatio { max_prompt, max_decode, ratio } => {
                 let plo = ((max_prompt as f64 * ratio) as usize).max(1);
                 let dlo = ((max_decode as f64 * ratio) as usize).max(1);
-                Request {
-                    id,
-                    prompt_len: rng.range(plo, max_prompt),
-                    decode_len: rng.range(dlo, max_decode),
-                }
+                Request::new(id, rng.range(plo, max_prompt), rng.range(dlo, max_decode))
             }
-            LengthDist::ImbalancedMix { short, long, decode, every } => Request {
+            LengthDist::ImbalancedMix { short, long, decode, every } => Request::new(
                 id,
-                prompt_len: if every > 0 && id % every == every - 1 { long } else { short },
-                decode_len: decode,
-            },
+                if every > 0 && id % every == every - 1 { long } else { short },
+                decode,
+            ),
         })
         .collect()
+}
+
+/// Open-loop workload: the same length distribution, plus a Poisson
+/// arrival schedule at `rate_qps` requests/second (exponential
+/// inter-arrival times from an independently-seeded stream, so lengths
+/// stay identical to the closed-loop `generate` of the same seed).
+/// Arrivals are monotone — `sched::WaitQueue::open` relies on that.
+pub fn generate_open(dist: LengthDist, n: usize, seed: u64, rate_qps: f64) -> Vec<Request> {
+    let mut reqs = generate(dist, n, seed);
+    let mut rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
+    let mut t = 0.0;
+    for r in &mut reqs {
+        t += rng.exp(rate_qps);
+        r.arrival_t = t;
+    }
+    reqs
 }
 
 #[cfg(test)]
@@ -117,5 +151,37 @@ mod tests {
         let mut rng = Rng::new(42);
         let mean: f64 = (0..10_000).map(|_| rng.f64()).sum::<f64>() / 10_000.0;
         assert!((mean - 0.5).abs() < 0.02, "{mean}");
+    }
+
+    #[test]
+    fn open_loop_arrivals_are_poisson_monotone_and_deterministic() {
+        let d = LengthDist::Fixed { prompt: 1024, decode: 128 };
+        let a = generate_open(d, 2000, 9, 4.0);
+        let b = generate_open(d, 2000, 9, 4.0);
+        assert_eq!(a, b, "same seed must reproduce the schedule");
+        // lengths match the closed-loop stream of the same seed
+        let closed = generate(d, 2000, 9);
+        assert!(a.iter().zip(&closed).all(|(x, y)| {
+            x.prompt_len == y.prompt_len && x.decode_len == y.decode_len
+        }));
+        // monotone, strictly positive arrivals with ~1/rate mean gaps
+        let mut prev = 0.0;
+        for r in &a {
+            assert!(r.arrival_t > prev, "arrivals must be strictly increasing");
+            prev = r.arrival_t;
+        }
+        let mean_gap = a.last().unwrap().arrival_t / a.len() as f64;
+        assert!((mean_gap - 0.25).abs() < 0.03, "mean gap {mean_gap} vs 1/4 s");
+        // closed-loop requests carry no arrival stamp
+        assert!(closed.iter().all(|r| r.arrival_t == 0.0));
+    }
+
+    #[test]
+    fn exp_is_positive_and_seeded() {
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            let x = rng.exp(2.0);
+            assert!(x.is_finite() && x > 0.0);
+        }
     }
 }

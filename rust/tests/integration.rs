@@ -1,9 +1,14 @@
 //! Integration tests over the PJRT runtime + real artifacts.
 //!
-//! These need `make artifacts` (skipped with a clear message otherwise)
-//! and exercise the exact path the serving binary uses: meta parsing,
-//! HLO-text compile, parameter init on device, absorption, prefill,
-//! batched decode with ragged per-sequence lengths, and failure paths.
+//! These need the `pjrt` feature (the xla/anyhow deps) and `make
+//! artifacts` (skipped with a clear message otherwise) and exercise the
+//! exact path the serving binary uses: meta parsing, HLO-text compile,
+//! parameter init on device, absorption, prefill, batched decode with
+//! ragged per-sequence lengths, and failure paths. The scheduling path of
+//! `RealEngine` itself is additionally covered in the default build by
+//! the MockModel tests in `src/server.rs`.
+
+#![cfg(feature = "pjrt")]
 
 use gla_serve::runtime::Runtime;
 use gla_serve::server::{RealEngine, TinyModel};
@@ -84,7 +89,7 @@ fn engine_serves_mixed_lengths() {
     let model = TinyModel::load(&rt, "gta4", 0).unwrap();
     let mut eng = RealEngine::new(model).unwrap();
     for (i, (p, d)) in [(16usize, 4usize), (96, 8), (3, 2), (200, 6)].iter().enumerate() {
-        eng.submit(Request { id: i, prompt_len: *p, decode_len: *d });
+        eng.submit(Request::new(i, *p, *d));
     }
     eng.run_to_completion().unwrap();
     assert_eq!(eng.metrics.e2e.len(), 4);
@@ -100,7 +105,7 @@ fn continuous_batching_interleaves() {
     let nslots = model.batch;
     let mut eng = RealEngine::new(model).unwrap();
     for i in 0..nslots + 4 {
-        eng.submit(Request { id: i, prompt_len: 8, decode_len: 6 });
+        eng.submit(Request::new(i, 8, 6));
     }
     eng.run_to_completion().unwrap();
     assert_eq!(eng.metrics.e2e.len(), nslots + 4);

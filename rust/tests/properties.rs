@@ -5,10 +5,12 @@
 
 use gla_serve::attention::Variant;
 use gla_serve::config::{ServingConfig, DSV2};
-use gla_serve::engine::run_benchmark;
+use gla_serve::engine::{run_benchmark, run_benchmark_with};
 use gla_serve::hardware::DeviceModel;
 use gla_serve::kvcache::{PagePool, PageStore, RadixIndex};
-use gla_serve::workload::{generate, LengthDist, Rng};
+use gla_serve::metrics::ServiceMetrics;
+use gla_serve::sched::{PolicyKind, Scheduler, Work};
+use gla_serve::workload::{generate, generate_open, LengthDist, Request, Rng};
 
 fn variants(rng: &mut Rng) -> Variant {
     let names = ["mha", "mqa", "gqa4", "gqa8", "gta4", "gta8", "mla", "gla2", "gla4", "gla8"];
@@ -126,6 +128,155 @@ fn prop_pool_never_leaks_pages() {
         }
         pool.check_invariants().unwrap();
         assert_eq!(pool.pages_free(), pool.pages_total(), "case {case} leaked");
+    }
+}
+
+#[test]
+fn prop_pool_preemption_conserves_pages_and_never_underflows() {
+    // random alloc/grow/fork/preempt interleavings — including preempts of
+    // dead and never-seen sequences — preserve invariants: free-page count
+    // is conserved and refcounts never underflow
+    let mut rng = Rng::new(0xBADC0DE);
+    for case in 0..60 {
+        let ps = [1usize, 4, 16, 64][rng.range(0, 3)];
+        let mut pool = PagePool::new(rng.range(8, 64), ps);
+        let mut live: Vec<u64> = Vec::new();
+        let mut dead: Vec<u64> = Vec::new();
+        for op in 0..300 {
+            match rng.range(0, 4) {
+                0 => {
+                    let id = (case * 1000 + op) as u64;
+                    if pool.allocate(id, rng.range(1, 100)) {
+                        live.push(id);
+                    }
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let id = live[rng.range(0, live.len() - 1)];
+                        let _ = pool.grow(id, rng.range(1, 20));
+                    }
+                }
+                2 => {
+                    if !live.is_empty() {
+                        let parent = live[rng.range(0, live.len() - 1)];
+                        let child = (case * 1000 + op) as u64 + 500_000;
+                        if pool.fork_prefix(parent, child, rng.range(0, 64)) {
+                            live.push(child);
+                        }
+                    }
+                }
+                3 => {
+                    // preempt a live sequence
+                    if !live.is_empty() {
+                        let i = rng.range(0, live.len() - 1);
+                        let id = live.swap_remove(i);
+                        assert!(pool.preempt(id), "live seq must preempt");
+                        dead.push(id);
+                    }
+                }
+                _ => {
+                    // preempt something already dead or never seen: no-op
+                    let id = if dead.is_empty() || rng.range(0, 1) == 0 {
+                        u64::MAX - op as u64
+                    } else {
+                        dead[rng.range(0, dead.len() - 1)]
+                    };
+                    assert!(!pool.preempt(id), "dead seq preempt must be a no-op");
+                }
+            }
+            pool.check_invariants()
+                .unwrap_or_else(|e| panic!("case {case} op {op}: {e}"));
+        }
+        for id in live {
+            assert!(pool.preempt(id));
+        }
+        pool.check_invariants().unwrap();
+        assert_eq!(pool.pages_free(), pool.pages_total(), "case {case} leaked");
+    }
+}
+
+#[test]
+fn prop_scheduler_survives_overcommit_via_preemption() {
+    // Admit random batches PAST the reservation check (Scheduler::admit is
+    // deliberately unchecked), then drive plan/complete/preempt to a
+    // fixpoint: the pool invariants must hold at every step, no sequence
+    // may livelock the planner, and whatever finishes must free its pages.
+    let mut rng = Rng::new(0x5EED);
+    for case in 0..40 {
+        let ps = [1usize, 2, 4, 8][rng.range(0, 3)];
+        let n_pages = rng.range(4, 24);
+        let kind = PolicyKind::all()[rng.range(0, 2)];
+        let mut sched = Scheduler::new(
+            PagePool::new(n_pages, ps),
+            kind.build(),
+            rng.range(1, 16),
+            rng.range(1, 8),
+        );
+        let mut metrics = ServiceMetrics::default();
+        let n_seqs = rng.range(2, 10);
+        for i in 0..n_seqs {
+            let req = Request::new(case * 100 + i, rng.range(1, 40), rng.range(1, 16));
+            sched.admit(req, 0.0, 0.0, &mut metrics); // no can_admit: over-commit
+        }
+        let mut t = 1.0;
+        let mut steps = 0usize;
+        loop {
+            let _evicted = sched.preempt_for_decode(&mut metrics);
+            sched
+                .pool()
+                .check_invariants()
+                .unwrap_or_else(|e| panic!("case {case} after preempt: {e}"));
+            match sched.plan() {
+                Work::Idle => break,
+                Work::PrefillChunk { idx, chunk } => {
+                    let _ = sched.complete_prefill(idx, chunk, t, &mut metrics);
+                }
+                Work::DecodeBatch { idxs } => {
+                    sched.complete_decode(&idxs, t, &mut metrics);
+                }
+            }
+            sched
+                .pool()
+                .check_invariants()
+                .unwrap_or_else(|e| panic!("case {case} step {steps}: {e}"));
+            t += 1.0;
+            steps += 1;
+            assert!(steps < 20_000, "case {case}: scheduler livelocked");
+        }
+        if sched.is_idle() {
+            assert_eq!(sched.pool().pages_free(), sched.pool().pages_total());
+        }
+        // everything that retired recorded its latency metrics
+        assert_eq!(metrics.e2e.len(), metrics.ttft.len());
+        assert!(metrics.e2e.len() + sched.n_live() + metrics.preemptions as usize >= 1);
+    }
+}
+
+#[test]
+fn prop_open_loop_sim_conserves_requests_and_tokens() {
+    // open-loop (Poisson) driving never loses or double-counts requests,
+    // across offered rates from far-under to far-over saturation
+    let mut rng = Rng::new(17);
+    for case in 0..10 {
+        let m = DSV2;
+        let dist = LengthDist::RandomRatio { max_prompt: 8192, max_decode: 256, ratio: 0.1 };
+        let n = rng.range(6, 24);
+        let rate = [0.2f64, 1.0, 5.0, 50.0][rng.range(0, 3)];
+        let reqs = generate_open(dist, n, case as u64 + 1, rate);
+        let expected_tokens: u64 = reqs.iter().map(|r| r.decode_len as u64).sum();
+        let met = run_benchmark_with(
+            m,
+            m.variant("gla8"),
+            ServingConfig::with_parallelism(8, 1).open_loop(),
+            DeviceModel::h100_serving(),
+            &reqs,
+        );
+        assert_eq!(met.e2e.len(), n, "case {case}");
+        assert_eq!(met.output_tokens, expected_tokens, "case {case}");
+        assert_eq!(met.queue_wait.len(), n, "case {case}");
+        assert!(met.throughput().is_finite() && met.throughput() > 0.0);
+        // the run cannot end before the last client send
+        assert!(met.duration >= reqs.last().unwrap().arrival_t);
     }
 }
 
