@@ -1,0 +1,147 @@
+//! Disaggregated prefill/decode cluster sweep — the Fig. 5 workload at
+//! cluster scale, over the `cluster` subsystem.
+//!
+//! Grid: {unified 4U, 1P+3D, 2P+2D} x {GQA-4, GLA-2}, TP2 per replica
+//! (8 GPUs per layout, like the paper's 8xH100 node), open-loop Poisson
+//! QPS sweep, caches migrating over the PCIe tier.
+//!
+//! What to look for:
+//! * **Migration bytes** — GLA-2's cache is ~half of GQA-4's per token
+//!   (1152 vs 2048 B/token/layer at DSV2 shapes), so for the same
+//!   workload its total migration traffic is ~0.56x: KV bytes per token
+//!   directly prices the disaggregation hop (part 2 asserts the ratio).
+//! * **ITL vs TTFT trade** — decode replicas never interleave an 8K
+//!   prefill chunk between decode steps, so disaggregation buys flat ITL;
+//!   the price is prefill capacity (1P saturates first) plus the
+//!   migration hop. The break-even QPS per variant is where the unified
+//!   layout's median E2E catches back up (part 3 reports it).
+//! * **Determinism** — same seed, bit-identical metrics (part 4).
+//!
+//!     cargo bench --bench disagg
+
+use gla_serve::cluster::{Cluster, RouterKind};
+use gla_serve::config::{ClusterSpec, ServingConfig, DSV2};
+use gla_serve::hardware::DeviceModel;
+use gla_serve::metrics::ServiceMetrics;
+use gla_serve::parallel::LinkTier;
+use gla_serve::sched::DriveMode;
+use gla_serve::workload::{generate_open, LengthDist};
+
+const N: usize = 96;
+const SEED: u64 = 42;
+const DIST: LengthDist = LengthDist::Fixed { prompt: 8192, decode: 512 };
+const QPS_SWEEP: [f64; 4] = [0.5, 1.0, 2.0, 4.0];
+
+fn run(variant: &str, spec: &ClusterSpec, qps: f64, link: LinkTier) -> ServiceMetrics {
+    let m = DSV2;
+    let mut c = Cluster::new(
+        m,
+        m.variant(variant),
+        ServingConfig::with_parallelism(2, 1),
+        DeviceModel::h100_serving(),
+        &spec.clone().with_link(link),
+        RouterKind::RoleAware,
+        DriveMode::Open,
+    );
+    c.submit(&generate_open(DIST, N, SEED, qps));
+    c.run();
+    c.metrics
+}
+
+fn layouts() -> Vec<ClusterSpec> {
+    vec![
+        ClusterSpec::unified(4),
+        ClusterSpec::disagg(1, 3),
+        ClusterSpec::disagg(2, 2),
+    ]
+}
+
+fn main() {
+    println!(
+        "disagg — DSV2 (236B/21B FP8), 4 replicas x TP2, 8K/512 fixed, \
+         n {N}, PCIe migration link"
+    );
+
+    println!("\n[1] QPS sweep per layout and variant");
+    println!(
+        "{:<6} {:<7} {:>6} {:>10} {:>10} {:>9} {:>10} {:>8} {:>10} {:>12}",
+        "var", "layout", "req/s", "E2E med(s)", "TTFT(s)", "ITL(ms)", "tok/s",
+        "migr", "migr GB", "wait med(s)"
+    );
+    // e2e medians for the break-even analysis of part 3:
+    // indexed [variant][layout][qps]
+    let mut e2e = vec![vec![vec![0.0f64; QPS_SWEEP.len()]; layouts().len()]; 2];
+    for (vi, variant) in ["gqa4", "gla2"].iter().enumerate() {
+        for (li, spec) in layouts().iter().enumerate() {
+            for (qi, &qps) in QPS_SWEEP.iter().enumerate() {
+                let mut met = run(variant, spec, qps, LinkTier::Pcie);
+                let (e, ttft, itl, tput) = met.paper_row();
+                e2e[vi][li][qi] = e;
+                println!(
+                    "{variant:<6} {:<7} {qps:>6.2} {e:>10.1} {ttft:>10.1} {itl:>9.1} \
+                     {tput:>10.0} {:>8} {:>10.2} {:>12.3}",
+                    spec.label(),
+                    met.migrations,
+                    met.migrated_bytes as f64 / 1e9,
+                    met.migration_wait.median(),
+                );
+            }
+            println!();
+        }
+    }
+
+    println!("[2] migration bytes: GLA-2 vs GQA-4 (1P+3D, 1 req/s)");
+    let spec = ClusterSpec::disagg(1, 3);
+    let gqa = run("gqa4", &spec, 1.0, LinkTier::Pcie);
+    let gla = run("gla2", &spec, 1.0, LinkTier::Pcie);
+    assert_eq!(gqa.migrations, gla.migrations, "same workload, same migrations");
+    let ratio = gla.migrated_bytes as f64 / gqa.migrated_bytes as f64;
+    println!(
+        "GQA-4 {:.2} GB, GLA-2 {:.2} GB -> ratio {ratio:.4} (~1/2: 1152 vs \
+         2048 B/token/layer)",
+        gqa.migrated_bytes as f64 / 1e9,
+        gla.migrated_bytes as f64 / 1e9,
+    );
+    assert!(
+        (ratio - 0.5625).abs() < 0.01,
+        "GLA-2 must ship ~half of GQA-4's migration bytes, got {ratio:.4}"
+    );
+
+    println!("\n[3] break-even: highest swept QPS where 1P+3D median E2E beats 4U");
+    for (vi, variant) in ["gqa4", "gla2"].iter().enumerate() {
+        let cross = QPS_SWEEP
+            .iter()
+            .enumerate()
+            .filter(|&(qi, _)| e2e[vi][1][qi] < e2e[vi][0][qi])
+            .map(|(_, &q)| q)
+            .fold(None::<f64>, |acc, q| Some(acc.map_or(q, |a: f64| a.max(q))));
+        match cross {
+            Some(q) => println!("{variant}: disaggregation pays up to {q:.2} req/s"),
+            None => println!("{variant}: unified wins across the whole sweep"),
+        }
+    }
+
+    println!("\n[4] link tiers and determinism (gla2, 1P+3D, 1 req/s)");
+    let mut nv = run("gla2", &spec, 1.0, LinkTier::NvLink);
+    let mut pcie = run("gla2", &spec, 1.0, LinkTier::Pcie);
+    println!(
+        "migration-wait med: nvlink {:.4}s vs pcie {:.4}s",
+        nv.migration_wait.median(),
+        pcie.migration_wait.median()
+    );
+    assert!(
+        nv.migration_wait.median() <= pcie.migration_wait.median(),
+        "NVLink migrations cannot wait longer than PCIe"
+    );
+    let mut again = run("gla2", &spec, 1.0, LinkTier::Pcie);
+    assert_eq!(pcie.duration, again.duration, "duration drifted");
+    assert_eq!(pcie.ttft.median(), again.ttft.median(), "ttft drifted");
+    assert_eq!(pcie.migrated_bytes, again.migrated_bytes, "bytes drifted");
+    assert_eq!(
+        pcie.migration_wait.median(),
+        again.migration_wait.median(),
+        "migration wait drifted"
+    );
+    assert_eq!(pcie.output_tokens, again.output_tokens);
+    println!("same seed reproduced bit-identically ✓");
+}

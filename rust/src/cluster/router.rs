@@ -1,0 +1,204 @@
+//! Request routing across heterogeneous cluster replicas.
+//!
+//! A [`Router`] decides which replica receives the next *new* request,
+//! restricted to replicas whose [`Role`] admits new work (the admission
+//! role filter — pure-decode replicas only ever receive work through
+//! cache import, which is routed least-loaded in `cluster::Cluster`).
+//! Like scheduling policies, routers are deterministic: identical
+//! workload + seed reproduces identical placement.
+
+use super::ClusterReplica;
+use crate::sched::Phase;
+
+/// Router selection (config/CLI-friendly, `Copy` like `PolicyKind`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RouterKind {
+    /// Cycle over the admission-eligible replicas in index order.
+    RoundRobin,
+    /// Fewest live sequences first (ties to the lowest index) — exactly
+    /// the placement the pre-cluster `SimEngine` used, so unified
+    /// clusters reproduce its benchmarks bit-for-bit.
+    #[default]
+    LeastLoaded,
+    /// Fewest pending prefill tokens first (ties by live count, then
+    /// index): routes by the work a prefill replica actually owes rather
+    /// than how many sequences it happens to hold.
+    RoleAware,
+}
+
+impl RouterKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            RouterKind::RoundRobin => "round-robin",
+            RouterKind::LeastLoaded => "least-loaded",
+            RouterKind::RoleAware => "role-aware",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RouterKind> {
+        match s {
+            "round-robin" | "rr" => Some(RouterKind::RoundRobin),
+            "least-loaded" | "ll" => Some(RouterKind::LeastLoaded),
+            "role-aware" | "ra" => Some(RouterKind::RoleAware),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [RouterKind; 3] {
+        [
+            RouterKind::RoundRobin,
+            RouterKind::LeastLoaded,
+            RouterKind::RoleAware,
+        ]
+    }
+}
+
+/// Prefill tokens a replica still owes (the role-aware load signal).
+fn prefill_backlog(r: &ClusterReplica) -> usize {
+    r.sched
+        .seqs()
+        .iter()
+        .map(|s| match s.phase {
+            Phase::Prefill { done } => s.req.prompt_len.saturating_sub(done),
+            _ => 0,
+        })
+        .sum()
+}
+
+#[derive(Debug)]
+pub struct Router {
+    kind: RouterKind,
+    /// next replica index the round-robin pointer will try
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(kind: RouterKind) -> Self {
+        Router { kind, rr_next: 0 }
+    }
+
+    pub fn kind(&self) -> RouterKind {
+        self.kind
+    }
+
+    /// Replica for the next new request, among those whose role admits
+    /// new work. Non-mutating so a failed (pool-full, head-of-line)
+    /// admission retries the same replica; call
+    /// [`Router::note_admitted`] after a successful admission.
+    pub fn route_new(&self, replicas: &[ClusterReplica]) -> Option<usize> {
+        let eligible = || {
+            replicas
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.role.admits_new())
+        };
+        match self.kind {
+            RouterKind::RoundRobin => {
+                let n = replicas.len();
+                (0..n)
+                    .map(|k| (self.rr_next + k) % n)
+                    .find(|&i| replicas[i].role.admits_new())
+            }
+            RouterKind::LeastLoaded => eligible()
+                .min_by_key(|(i, r)| (r.sched.n_live(), *i))
+                .map(|(i, _)| i),
+            RouterKind::RoleAware => eligible()
+                .min_by_key(|(i, r)| (prefill_backlog(r), r.sched.n_live(), *i))
+                .map(|(i, _)| i),
+        }
+    }
+
+    /// Advance routing state after `ri` actually admitted a request.
+    pub fn note_admitted(&mut self, ri: usize, n_replicas: usize) {
+        if self.kind == RouterKind::RoundRobin {
+            self.rr_next = (ri + 1) % n_replicas.max(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::PagePool;
+    use crate::metrics::ServiceMetrics;
+    use crate::sched::{PolicyKind, Role, Scheduler};
+    use crate::workload::Request;
+
+    fn replica(role: Role) -> ClusterReplica {
+        ClusterReplica::new(
+            role,
+            Scheduler::new(PagePool::new(64, 16), PolicyKind::Fcfs.build(), 8192, 256),
+        )
+    }
+
+    fn with_live(role: Role, n: usize) -> ClusterReplica {
+        let mut r = replica(role);
+        let mut m = ServiceMetrics::default();
+        for i in 0..n {
+            r.sched.admit(Request::new(1000 + i, 32, 4), 0.0, 0.0, &mut m);
+        }
+        r
+    }
+
+    #[test]
+    fn kind_roundtrip() {
+        for k in RouterKind::all() {
+            assert_eq!(RouterKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(RouterKind::parse("rr"), Some(RouterKind::RoundRobin));
+        assert_eq!(RouterKind::parse("nope"), None);
+        assert_eq!(RouterKind::default(), RouterKind::LeastLoaded);
+    }
+
+    #[test]
+    fn role_filter_excludes_decode_replicas() {
+        let reps = vec![
+            with_live(Role::Decode, 0),
+            with_live(Role::Prefill, 3),
+            with_live(Role::Prefill, 1),
+        ];
+        for kind in RouterKind::all() {
+            let ri = Router::new(kind).route_new(&reps).unwrap();
+            assert_ne!(ri, 0, "{}: routed new work to a decode replica", kind.name());
+        }
+        // least-loaded picks the emptier prefill replica
+        assert_eq!(Router::new(RouterKind::LeastLoaded).route_new(&reps), Some(2));
+        // nothing eligible -> None
+        let only_decode = vec![with_live(Role::Decode, 0)];
+        assert_eq!(Router::new(RouterKind::LeastLoaded).route_new(&only_decode), None);
+    }
+
+    #[test]
+    fn round_robin_cycles_over_eligible() {
+        let reps = vec![
+            replica(Role::Prefill),
+            replica(Role::Decode),
+            replica(Role::Prefill),
+        ];
+        let mut r = Router::new(RouterKind::RoundRobin);
+        let a = r.route_new(&reps).unwrap();
+        assert_eq!(a, 0);
+        // without note_admitted the pick is sticky (head-of-line retry)
+        assert_eq!(r.route_new(&reps), Some(0));
+        r.note_admitted(a, reps.len());
+        let b = r.route_new(&reps).unwrap();
+        assert_eq!(b, 2, "skips the decode replica");
+        r.note_admitted(b, reps.len());
+        assert_eq!(r.route_new(&reps), Some(0), "wraps around");
+    }
+
+    #[test]
+    fn role_aware_routes_by_prefill_backlog() {
+        // replica 0: one live seq with a huge remaining prompt;
+        // replica 1: three live seqs, all tiny prompts.
+        let mut m = ServiceMetrics::default();
+        let mut r0 = replica(Role::Prefill);
+        r0.sched.admit(Request::new(1, 900, 4), 0.0, 0.0, &mut m);
+        let r1 = with_live(Role::Prefill, 3); // 3 x 32 prompt tokens
+        let reps = vec![r0, r1];
+        // least-loaded prefers replica 0 (1 live < 3 live)...
+        assert_eq!(Router::new(RouterKind::LeastLoaded).route_new(&reps), Some(0));
+        // ...role-aware sees 900 owed tokens vs 96 and prefers replica 1
+        assert_eq!(Router::new(RouterKind::RoleAware).route_new(&reps), Some(1));
+    }
+}

@@ -1,0 +1,176 @@
+//! The KV-cache migration path of disaggregated serving: a bandwidth-
+//! contended point-to-point link carrying finished prefill caches from
+//! prefill replicas to decode replicas.
+//!
+//! Cost model: each of the `tp` rank pairs ships its own cache shard
+//! concurrently, so one migration occupies the link for
+//! `alpha + per_device_bytes / bw` seconds ([`CollectiveModel::p2p_time`]
+//! with the NVLink or PCIe tier from [`crate::parallel::LinkTier`]).
+//! Migrations are serialized FIFO over the link — that serialization *is*
+//! the bandwidth contention, and it is what makes KV bytes per token
+//! (the paper's per-variant headline number) directly price the
+//! disaggregation hop: GLA's ~2x smaller cache halves both the bytes and
+//! the queueing the next migration sees.
+
+use std::collections::VecDeque;
+
+use crate::parallel::CollectiveModel;
+use crate::sched::SeqState;
+
+/// One cache in flight from a prefill replica to a decode replica. The
+/// sequence (phase [`crate::sched::Phase::Migrating`]) is owned here —
+/// by the link, not by any scheduler — until import.
+#[derive(Debug, Clone)]
+pub struct Migration {
+    pub state: SeqState,
+    /// KV tokens stored at export (== the prompt length at the epilogue)
+    pub kv_tokens: usize,
+    /// distinct cache bytes shipped, all layers (metric accounting)
+    pub bytes: u64,
+    /// virtual time the cache left the prefill replica's pool
+    pub export_t: f64,
+    /// virtual time the last byte lands on the decode side
+    pub ready_t: f64,
+}
+
+/// FIFO transfer queue over one interconnect link.
+#[derive(Debug)]
+pub struct TransferLink {
+    coll: CollectiveModel,
+    /// when the link finishes its current backlog
+    busy_until: f64,
+    /// sent, last byte not yet landed (ready_t non-decreasing)
+    in_flight: VecDeque<Migration>,
+    /// landed, waiting for pool space on a decode replica
+    arrived: VecDeque<Migration>,
+}
+
+impl TransferLink {
+    pub fn new(coll: CollectiveModel) -> Self {
+        TransferLink {
+            coll,
+            busy_until: 0.0,
+            in_flight: VecDeque::new(),
+            arrived: VecDeque::new(),
+        }
+    }
+
+    /// Enqueue a migration at time `now`. `per_link_bytes` is the largest
+    /// per-rank shard (governs transfer time); `wire_bytes` is the
+    /// distinct cache content (recorded as `Migration::bytes`). The link
+    /// serves one migration at a time, so a busy link queues the transfer
+    /// behind `busy_until`.
+    pub fn send(
+        &mut self,
+        state: SeqState,
+        kv_tokens: usize,
+        wire_bytes: u64,
+        per_link_bytes: f64,
+        now: f64,
+    ) {
+        let start = if self.busy_until > now { self.busy_until } else { now };
+        let ready_t = start + self.coll.p2p_time(per_link_bytes);
+        self.busy_until = ready_t;
+        self.in_flight.push_back(Migration {
+            state,
+            kv_tokens,
+            bytes: wire_bytes,
+            export_t: now,
+            ready_t,
+        });
+    }
+
+    /// Move every migration whose last byte has landed (`ready_t <= now`)
+    /// to the arrived queue (FIFO order preserved).
+    pub fn deliver(&mut self, now: f64) {
+        while self
+            .in_flight
+            .front()
+            .is_some_and(|m| m.ready_t <= now)
+        {
+            let m = self.in_flight.pop_front().expect("front checked");
+            self.arrived.push_back(m);
+        }
+    }
+
+    /// Earliest pending landing — the event an idle cluster must not jump
+    /// its virtual clock past.
+    pub fn next_ready(&self) -> Option<f64> {
+        self.in_flight.front().map(|m| m.ready_t)
+    }
+
+    /// Head of the arrived queue (import is head-of-line FIFO, like
+    /// pool-blocked admission).
+    pub fn peek_arrived(&self) -> Option<&Migration> {
+        self.arrived.front()
+    }
+
+    pub fn pop_arrived(&mut self) -> Option<Migration> {
+        self.arrived.pop_front()
+    }
+
+    /// Requests currently owned by the link (in flight or awaiting
+    /// import) — counted as live by the closed-loop generator.
+    pub fn n_in_system(&self) -> usize {
+        self.in_flight.len() + self.arrived.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.in_flight.is_empty() && self.arrived.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{Phase, SeqState};
+    use crate::workload::Request;
+
+    fn link() -> TransferLink {
+        // 1 GB/s, 0.25 s alpha: exact binary fractions, so the expected
+        // landing times below are exact and assert_eq! on f64 is safe
+        TransferLink::new(CollectiveModel { bus_bw: 1e9, alpha: 0.25 })
+    }
+
+    fn seq(id: usize) -> SeqState {
+        SeqState {
+            req: Request::new(id, 64, 8),
+            phase: Phase::Migrating { produced: 1 },
+            start_t: 0.0,
+            first_token_t: Some(1.0),
+            last_token_t: 1.0,
+        }
+    }
+
+    #[test]
+    fn fifo_serialization_is_bandwidth_contention() {
+        let mut l = link();
+        // two 0.5 GB transfers sent back-to-back at t=1: each occupies
+        // the link for 0.25 + 0.5 = 0.75 s, so the second queues
+        l.send(seq(1), 64, 500_000_000, 5e8, 1.0);
+        l.send(seq(2), 64, 500_000_000, 5e8, 1.0);
+        assert_eq!(l.n_in_system(), 2);
+        assert_eq!(l.next_ready(), Some(1.75));
+        l.deliver(1.5);
+        assert!(l.peek_arrived().is_none(), "nothing lands before ready_t");
+        l.deliver(1.75);
+        assert_eq!(l.peek_arrived().unwrap().state.req.id, 1);
+        // second transfer queued behind the first: 1.75 + 0.75
+        assert_eq!(l.next_ready(), Some(2.5));
+        l.deliver(3.0);
+        assert_eq!(l.pop_arrived().unwrap().state.req.id, 1);
+        assert_eq!(l.pop_arrived().unwrap().state.req.id, 2);
+        assert!(l.is_empty());
+    }
+
+    #[test]
+    fn idle_link_restarts_at_now() {
+        let mut l = link();
+        l.send(seq(1), 64, 1_000, 0.0, 1.0);
+        l.deliver(10.0);
+        let _ = l.pop_arrived();
+        // link idle since 1.25; a send at t=5 starts at 5, not busy_until
+        l.send(seq(2), 64, 1_000_000_000, 1e9, 5.0);
+        assert_eq!(l.next_ready(), Some(6.25)); // 5 + 0.25 + 1.0
+    }
+}

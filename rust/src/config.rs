@@ -7,7 +7,8 @@
 //! §B.6).
 
 use crate::attention::Variant;
-use crate::sched::{DriveMode, PolicyKind};
+use crate::parallel::LinkTier;
+use crate::sched::{DriveMode, PolicyKind, Role};
 
 /// Transformer shapes relevant to the performance models.
 #[derive(Debug, Clone, Copy)]
@@ -173,6 +174,55 @@ impl ServingConfig {
     }
 }
 
+/// Cluster topology for `cluster::Cluster`: the role of each replica
+/// (every replica is a `ServingConfig::tp`-way TP group) and the
+/// interconnect tier migrated KV caches cross between them.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub roles: Vec<Role>,
+    pub link: LinkTier,
+}
+
+impl ClusterSpec {
+    /// `dp` identical unified replicas — the classic data-parallel layout.
+    pub fn unified(dp: usize) -> Self {
+        ClusterSpec { roles: vec![Role::Unified; dp.max(1)], link: LinkTier::default() }
+    }
+
+    /// Disaggregated layout: `n_prefill` prefill-only replicas shipping
+    /// finished caches to `n_decode` decode-only replicas.
+    pub fn disagg(n_prefill: usize, n_decode: usize) -> Self {
+        let mut roles = vec![Role::Prefill; n_prefill];
+        roles.extend(vec![Role::Decode; n_decode]);
+        ClusterSpec { roles, link: LinkTier::default() }
+    }
+
+    pub fn with_link(mut self, link: LinkTier) -> Self {
+        self.link = link;
+        self
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.roles.len()
+    }
+
+    /// Compact layout label, e.g. "4U", "1P+3D", "2P+2D+1U".
+    pub fn label(&self) -> String {
+        let count = |role: Role| self.roles.iter().filter(|&&r| r == role).count();
+        let mut parts = Vec::new();
+        for (n, tag) in [
+            (count(Role::Prefill), "P"),
+            (count(Role::Decode), "D"),
+            (count(Role::Unified), "U"),
+        ] {
+            if n > 0 {
+                parts.push(format!("{n}{tag}"));
+            }
+        }
+        parts.join("+")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,6 +250,21 @@ mod tests {
         assert!(!ServingConfig::with_parallelism(8, 1).hybrid_barrier);
         assert!(ServingConfig::with_parallelism(2, 4).hybrid_barrier);
         assert_eq!(ServingConfig::with_parallelism(2, 4).total_gpus(), 8);
+    }
+
+    #[test]
+    fn cluster_spec_labels_and_counts() {
+        assert_eq!(ClusterSpec::unified(4).label(), "4U");
+        assert_eq!(ClusterSpec::unified(4).n_replicas(), 4);
+        let d = ClusterSpec::disagg(1, 3);
+        assert_eq!(d.label(), "1P+3D");
+        assert_eq!(d.roles[0], Role::Prefill);
+        assert_eq!(d.roles[3], Role::Decode);
+        assert_eq!(d.link, LinkTier::NvLink);
+        assert_eq!(
+            ClusterSpec::disagg(2, 2).with_link(LinkTier::Pcie).link,
+            LinkTier::Pcie
+        );
     }
 
     #[test]

@@ -1,54 +1,39 @@
 //! The serving engine: continuous batching over replicas of a TP group,
 //! chunked prefill, paged-KV admission control, and the hybrid-DP barrier.
 //!
-//! This is the system half of the paper's §5.2/§B.6 benchmarks. The
-//! request-lifecycle state machine — wait queue, token-budget admission,
-//! phase tracking, prefill/decode arbitration, preemption — lives in
-//! [`crate::sched`] and is the *same code* the live PJRT server executes;
-//! this module contributes only virtual time: the per-step durations come
-//! from the calibrated model in `hardware::DeviceModel`. Consequences the
-//! paper reports — MLA's KV duplication exhausting pool capacity and
-//! exploding TTFT at high concurrency, DP stragglers collapsing hybrid
-//! throughput under imbalanced lengths, GLA's smaller per-device cache
-//! admitting more concurrent work — all *emerge* from the shared state
-//! machine rather than being encoded in a formula.
+//! This is the system half of the paper's §5.2/§B.6 benchmarks. Since the
+//! cluster layer landed, [`SimEngine`] is a thin wrapper over
+//! [`crate::cluster::Cluster`] with `dp` identical `Role::Unified`
+//! replicas: the request-lifecycle state machine lives in [`crate::sched`]
+//! (shared with the live PJRT server), and the replica orchestration —
+//! routing, the hybrid lockstep barrier, the asynchronous discrete-event
+//! loop, KV-cache migration for disaggregated roles — lives in
+//! [`crate::cluster`]. This module contributes only the classic benchmark
+//! entry points. Consequences the paper reports — MLA's KV duplication
+//! exhausting pool capacity and exploding TTFT at high concurrency, DP
+//! stragglers collapsing hybrid throughput under imbalanced lengths,
+//! GLA's smaller per-device cache admitting more concurrent work — all
+//! *emerge* from the shared state machine rather than being encoded in a
+//! formula.
 //!
 //! Time is virtual (discrete-event), so a full 1280-request benchmark that
 //! takes hours of H100 time replays in milliseconds, deterministically.
 //! Both drive modes of [`crate::sched::DriveMode`] are supported: the
 //! closed loop of the paper's benchmarks and an open-loop Poisson arrival
 //! schedule for request-rate (QPS) sweeps, where an idle engine jumps its
-//! clock to the next arrival.
+//! clock to the next arrival (but never past a pending cache migration —
+//! see `cluster::Cluster::run_async`).
 
 use crate::attention::Variant;
+use crate::cluster::Cluster;
 use crate::config::{ModelConfig, ServingConfig};
 use crate::hardware::DeviceModel;
-use crate::kvcache::PagePool;
 use crate::metrics::ServiceMetrics;
-use crate::parallel::CollectiveModel;
-use crate::sched::{DriveMode, SchedPolicy, Scheduler, WaitQueue, Work};
+use crate::sched::DriveMode;
 use crate::workload::Request;
 
-/// One DP replica: its own scheduler and KV pool (per-device pool — all TP
-/// ranks of the replica hold the same number of tokens).
-struct Replica {
-    sched: Scheduler,
-}
-
 pub struct SimEngine {
-    pub model: ModelConfig,
-    pub variant: Variant,
-    pub serving: ServingConfig,
-    pub device: DeviceModel,
-    coll: CollectiveModel,
-    replicas: Vec<Replica>,
-    /// the load generator + server queue in front of every replica
-    queue: WaitQueue,
-    /// admission-order policy (each replica's scheduler holds its own copy
-    /// of the same policy for prefill/decode arbitration)
-    policy: Box<dyn SchedPolicy>,
-    clock: f64,
-    pub metrics: ServiceMetrics,
+    pub cluster: Cluster,
 }
 
 impl SimEngine {
@@ -84,248 +69,25 @@ impl SimEngine {
         device: DeviceModel,
         drive: DriveMode,
     ) -> Self {
-        let kv_per_token =
-            variant.kv_bytes_per_token_per_device(serving.tp, model.dtype_bytes) as u64
-                * model.n_layers as u64;
-        let n_pages = (serving.kv_hbm_budget / (kv_per_token * serving.page_size as u64))
-            .max(1) as usize;
-        let replicas = (0..serving.dp)
-            .map(|_| Replica {
-                sched: Scheduler::new(
-                    PagePool::new(n_pages, serving.page_size),
-                    serving.policy.build(),
-                    serving.prefill_chunk,
-                    serving.max_batch,
-                ),
-            })
-            .collect();
-        SimEngine {
-            coll: CollectiveModel::nvlink(&device.gpu),
-            policy: serving.policy.build(),
-            queue: WaitQueue::new(drive),
-            model,
-            variant,
-            serving,
-            device,
-            replicas,
-            clock: 0.0,
-            metrics: ServiceMetrics::default(),
-        }
+        SimEngine { cluster: Cluster::unified(model, variant, serving, device, drive) }
     }
 
     /// Tokens of KV capacity per replica (how many cached tokens fit).
     pub fn pool_capacity_tokens(&self) -> usize {
-        self.replicas[0].sched.pool_capacity_tokens()
+        self.cluster.pool_capacity_tokens()
     }
 
     pub fn submit(&mut self, reqs: &[Request]) {
-        self.queue.submit(reqs);
+        self.cluster.submit(reqs);
     }
 
-    fn live(&self) -> usize {
-        self.replicas.iter().map(|r| r.sched.n_live()).sum()
-    }
-
-    /// Two-stage admission, as in the paper's live-server setup:
-    /// 1. the load generator puts requests on the wire (closed loop: up to
-    ///    the concurrency cap; open loop: at their arrival times) — a
-    ///    request's TTFT clock starts when the client *sends* it;
-    /// 2. the server moves the policy-picked queued request onto the
-    ///    replica with the fewest live sequences only while that replica's
-    ///    KV pool can hold its full footprint (token-budget admission, as
-    ///    in vLLM/SGLang). A full pool leaves requests queued with their
-    ///    clocks running — exactly how MLA's duplicated cache becomes
-    ///    head-of-line TTFT blowup (§B.6.1).
-    fn admit(&mut self) {
-        let live = self.live();
-        self.queue.release(self.clock, live);
-        loop {
-            let Some(pick) = self.policy.pick_waiting(self.queue.queued()) else {
-                break;
-            };
-            let ri = self
-                .replicas
-                .iter()
-                .enumerate()
-                .min_by_key(|(_, r)| r.sched.n_live())
-                .map(|(i, _)| i)
-                .expect("at least one replica");
-            let (req, _) = self.queue.queued()[pick];
-            if !self.replicas[ri].sched.can_admit(&req) {
-                // a request even an EMPTY replica cannot hold would wait
-                // (and spin the virtual clock) forever — fail loudly
-                // instead of hanging the simulation
-                assert!(
-                    self.replicas[ri].sched.n_live() > 0,
-                    "request {} ({} prompt + {} decode tokens) exceeds a replica's \
-                     KV pool capacity of {} tokens",
-                    req.id,
-                    req.prompt_len,
-                    req.decode_len,
-                    self.replicas[ri].sched.pool_capacity_tokens()
-                );
-                break; // head-of-line wait for pool space (policy's order)
-            }
-            let (req, send_t) = self.queue.remove(pick);
-            self.replicas[ri].sched.admit(req, send_t, self.clock, &mut self.metrics);
-        }
-    }
-
-    /// Pick one engine step of work for a replica (without running it).
-    fn plan(&self, ri: usize) -> Work {
-        self.replicas[ri].sched.plan()
-    }
-
-    /// Per-replica (attention + TP-comm) time of one unit of work, plus
-    /// its new-token count. The FFN side is expert-parallel over the whole
-    /// cluster, so the caller charges `ffn_step_time` once per step with
-    /// the summed token count (shared in hybrid, exclusive in pure TP).
-    fn attn_part(&self, ri: usize, work: &Work) -> (f64, usize) {
-        let tp = self.serving.tp;
-        let seqs = self.replicas[ri].sched.seqs();
-        match work {
-            Work::Idle => (0.0, 0),
-            Work::PrefillChunk { idx, chunk } => {
-                let ctx = seqs[*idx].ctx_len() + chunk;
-                let t = self
-                    .device
-                    .prefill_attn_time(&self.model, &self.variant, *chunk, ctx, tp)
-                    + self.coll.tp_step_time(self.model.n_layers, *chunk, self.model.d_model, 2, tp);
-                (t, *chunk)
-            }
-            Work::DecodeBatch { idxs } => {
-                let lens: Vec<usize> = idxs.iter().map(|&i| seqs[i].ctx_len()).collect();
-                let t = self
-                    .device
-                    .attn_decode_time(&self.model, &self.variant, &lens, 1, tp)
-                    + self.coll.tp_step_time(self.model.n_layers, idxs.len(), self.model.d_model, 2, tp);
-                (t, idxs.len())
-            }
-        }
-    }
-
-    /// Duration of one unit of work when the replica runs alone (pure TP).
-    fn duration(&self, ri: usize, work: &Work) -> f64 {
-        let (attn, tokens) = self.attn_part(ri, work);
-        if tokens == 0 {
-            return 0.0;
-        }
-        attn + self.device.ffn_step_time(&self.model, tokens, self.serving.total_gpus())
-            + self.device.step_overhead
-    }
-
-    /// Apply the outcome of one unit of work at virtual time `now` by
-    /// feeding it back to the replica's scheduler.
-    fn apply(&mut self, ri: usize, work: Work, now: f64) {
-        let sched = &mut self.replicas[ri].sched;
-        match work {
-            Work::Idle => {}
-            Work::PrefillChunk { idx, chunk } => {
-                // a decode_len <= 1 sequence retires at the epilogue; the
-                // sim has no slot table to update, so drop the record
-                let _ = sched.complete_prefill(idx, chunk, now, &mut self.metrics);
-            }
-            Work::DecodeBatch { idxs } => {
-                // finished sequences' pool pages are released inside;
-                // the sim has no slot table to update
-                let _ = sched.complete_decode(&idxs, now, &mut self.metrics);
-            }
-        }
-    }
-
-    /// Pool-pressure relief before planning: preempted requests go back to
-    /// the front of the server queue with their send times intact (they
-    /// will re-prefill from scratch, vLLM-style).
-    fn ensure_capacity(&mut self, ri: usize) {
-        let evicted = self.replicas[ri].sched.preempt_for_decode(&mut self.metrics);
-        for (req, send_t) in evicted {
-            self.queue.requeue_front(req, send_t);
-        }
-    }
-
-    /// Handle a step on which no replica can make progress: finish when
-    /// the workload is drained, or jump the virtual clock to the next
-    /// open-loop arrival. Returns false when the run is complete.
-    fn step_idle(&mut self) -> bool {
-        if self.queue.is_drained() && self.live() == 0 {
-            return false;
-        }
-        if self.live() == 0 && self.queue.n_queued() == 0 {
-            if let Some(t) = self.queue.next_arrival() {
-                if t > self.clock {
-                    self.clock = t;
-                }
-            }
-        }
-        true
+    pub fn metrics(&self) -> &ServiceMetrics {
+        &self.cluster.metrics
     }
 
     /// Run the benchmark to completion; returns total virtual duration.
     pub fn run(&mut self) -> f64 {
-        let t0 = self.clock;
-        let hybrid = self.serving.hybrid_barrier && self.serving.dp > 1;
-        loop {
-            self.admit();
-            for ri in 0..self.replicas.len() {
-                self.ensure_capacity(ri);
-            }
-            if hybrid {
-                // lockstep: every replica does one step; the MoE all-gather
-                // barrier makes everyone wait for the slowest (§B.6.3)
-                let works: Vec<Work> =
-                    (0..self.replicas.len()).map(|ri| self.plan(ri)).collect();
-                if works.iter().all(|w| matches!(w, Work::Idle)) {
-                    if self.step_idle() {
-                        continue;
-                    }
-                    break;
-                }
-                // per-replica attention runs concurrently (max = barrier);
-                // the expert-parallel FFN is charged once for all tokens
-                let parts: Vec<(f64, usize)> = works
-                    .iter()
-                    .enumerate()
-                    .map(|(ri, w)| self.attn_part(ri, w))
-                    .collect();
-                let attn_max = parts.iter().map(|p| p.0).fold(0.0, f64::max);
-                let barrier_tokens: usize = parts.iter().map(|p| p.1).sum();
-                let ffn = self.device.ffn_step_time(
-                    &self.model,
-                    barrier_tokens.max(1),
-                    self.serving.total_gpus(),
-                );
-                let gather = self.coll.dp_gather_time(
-                    self.model.n_layers,
-                    barrier_tokens.max(1),
-                    self.model.d_model,
-                    2,
-                    self.serving.dp,
-                );
-                let step = attn_max + ffn + gather + self.device.step_overhead;
-                self.clock += step;
-                let now = self.clock;
-                for (ri, w) in works.into_iter().enumerate() {
-                    self.apply(ri, w, now);
-                }
-            } else {
-                // independent replicas: advance the one with the earliest
-                // completion (single replica for pure TP)
-                let ri = 0; // dp == 1 in non-hybrid configurations
-                let work = self.plan(ri);
-                if matches!(work, Work::Idle) {
-                    if self.step_idle() {
-                        continue;
-                    }
-                    break;
-                }
-                let d = self.duration(ri, &work);
-                self.clock += d;
-                let now = self.clock;
-                self.apply(ri, work, now);
-            }
-        }
-        self.metrics.duration = self.clock - t0;
-        self.clock - t0
+        self.cluster.run()
     }
 }
 
@@ -342,7 +104,7 @@ pub fn run_benchmark(
     let mut eng = SimEngine::new(model, variant, serving, device, concurrency);
     eng.submit(reqs);
     eng.run();
-    eng.metrics
+    eng.cluster.metrics
 }
 
 /// Run a benchmark with policy *and* drive mode taken from the serving
@@ -358,7 +120,7 @@ pub fn run_benchmark_with(
     let mut eng = SimEngine::from_config(model, variant, serving, device);
     eng.submit(reqs);
     eng.run();
-    eng.metrics
+    eng.cluster.metrics
 }
 
 #[cfg(test)]
@@ -464,7 +226,7 @@ mod tests {
         );
         eng.submit(&generate(LengthDist::Fixed { prompt: 4096, decode: 128 }, 32, 3));
         eng.run();
-        for r in &eng.replicas {
+        for r in eng.cluster.replicas() {
             r.sched.pool().check_invariants().unwrap();
             assert_eq!(r.sched.pool().pages_free(), r.sched.pool().pages_total());
         }
@@ -504,6 +266,34 @@ mod tests {
             fcfs.ttft.median(),
             "SPF must reorder admissions on the imbalanced mix"
         );
+    }
+
+    #[test]
+    fn priority_zero_is_bit_identical_to_fcfs() {
+        // satellite guarantee: with every request at the default priority
+        // 0, the priority policy reproduces FCFS exactly (closed loop
+        // sends in queue order, so send-time/id tiebreaks match).
+        let m = DSV2;
+        let reqs = generate(
+            LengthDist::ImbalancedMix { short: 2048, long: 65_536, decode: 256, every: 3 },
+            24,
+            5,
+        );
+        let run = |k: PolicyKind| {
+            run_benchmark(
+                m,
+                m.variant("gla8"),
+                ServingConfig::with_parallelism(8, 1).with_policy(k),
+                DeviceModel::h100_optimized(),
+                &reqs,
+                12,
+            )
+        };
+        let mut f = run(PolicyKind::Fcfs);
+        let mut p = run(PolicyKind::Priority);
+        assert_eq!(f.duration, p.duration);
+        assert_eq!(f.ttft.median(), p.ttft.median());
+        assert_eq!(f.output_tokens, p.output_tokens);
     }
 
     #[test]

@@ -113,6 +113,31 @@ impl PagePool {
         live
     }
 
+    /// Migration export (disaggregated serving): serialize a sequence out
+    /// of this pool, returning its page table snapshot and stored token
+    /// count, and release the pages — they are leaving this device over
+    /// the interconnect. `None` if the sequence is not live here. The
+    /// receiving pool re-materializes the cache with
+    /// [`PagePool::import`]; page *ids* are pool-local, so only the
+    /// token count crosses the wire.
+    pub fn export(&mut self, seq: SeqId) -> Option<(Vec<PageId>, usize)> {
+        let pages = self.tables.get(&seq)?.to_vec();
+        let tokens = self.len_of(seq);
+        self.release(seq);
+        Some((pages, tokens))
+    }
+
+    /// Migration import: re-materialize `tokens` cache tokens for `seq`
+    /// in this pool (fresh pages — the exporter's page ids are
+    /// meaningless here). Returns false (no-op) if the pool cannot hold
+    /// them; callers gate on reservation admission first.
+    pub fn import(&mut self, seq: SeqId, tokens: usize) -> bool {
+        if self.tables.contains_key(&seq) {
+            return false; // already resident — double import is a bug
+        }
+        self.allocate(seq, tokens)
+    }
+
     /// Release a sequence; pages return to the free list when their
     /// refcount reaches zero (shared prefix pages survive).
     pub fn release(&mut self, seq: SeqId) {
@@ -385,6 +410,31 @@ mod tests {
         assert!(pool.preempt(2));
         assert_eq!(pool.pages_free(), 8);
         pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn export_import_moves_cache_between_pools() {
+        let mut src = PagePool::new(8, 4);
+        let mut dst = PagePool::new(8, 4);
+        assert!(src.allocate(1, 10)); // 3 pages
+        let (pages, tokens) = src.export(1).expect("live seq exports");
+        assert_eq!(pages.len(), 3);
+        assert_eq!(tokens, 10);
+        assert_eq!(src.pages_free(), 8, "export releases the source pages");
+        src.check_invariants().unwrap();
+        assert!(src.export(1).is_none(), "double export is a no-op");
+        // import re-materializes the same token count on fresh pages
+        assert!(dst.import(1, tokens));
+        assert_eq!(dst.len_of(1), 10);
+        assert_eq!(dst.table(1).unwrap().len(), pages.len());
+        assert!(!dst.import(1, tokens), "double import is rejected");
+        dst.check_invariants().unwrap();
+        // the imported cache grows like any live sequence
+        assert!(dst.grow(1, 3)); // 13 tokens -> 4th page
+        assert_eq!(dst.pages_free(), 4);
+        dst.release(1);
+        assert_eq!(dst.pages_free(), 8);
+        dst.check_invariants().unwrap();
     }
 
     #[test]

@@ -13,7 +13,11 @@
 //! * [`metrics`] — service-level summaries (E2E/TTFT/ITL/throughput)
 //! * [`sched`] — the shared scheduling core: request lifecycle, paged-KV
 //!   admission, pluggable policies, preemption — executed by BOTH engines
+//! * [`cluster`] — cluster orchestration: heterogeneous replica roles
+//!   (prefill/decode/unified), request routing, KV-cache migration over a
+//!   modeled interconnect (disaggregated serving)
 //! * [`engine`] — continuous-batching engine over simulated H100 ranks
+//!   (a thin wrapper over `cluster` with unified replicas)
 //! * [`runtime`] — PJRT CPU runtime executing the AOT HLO artifacts
 //!   (`pjrt` feature)
 //! * [`server`] — continuous-batching engine over a real step model, plus
@@ -22,6 +26,7 @@
 
 pub mod analytical;
 pub mod attention;
+pub mod cluster;
 pub mod config;
 pub mod engine;
 pub mod hardware;

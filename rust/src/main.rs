@@ -10,14 +10,20 @@
 //!                                simulated DSV2 closed-loop benchmark row
 //!   qps    [variant] [tp] [dp] [rate] [policy]
 //!                                simulated DSV2 open-loop (Poisson) row
+//!   disagg [variant] [tp] [nP] [nD] [rate] [link] [router]
+//!                                disaggregated prefill/decode cluster:
+//!                                nP prefill + nD decode replicas (tp each)
+//!                                under open-loop Poisson arrivals, caches
+//!                                migrating over `nvlink` or `pcie`
 //!
 //! Run `make artifacts` first for `serve`/`train`.
 
-use gla_serve::config::{ServingConfig, DSV2};
+use gla_serve::cluster::{Cluster, RouterKind};
+use gla_serve::config::{ClusterSpec, ServingConfig, DSV2};
 use gla_serve::engine::{run_benchmark, run_benchmark_with};
 use gla_serve::hardware::DeviceModel;
-use gla_serve::parallel::{paper_layouts, shard_plan};
-use gla_serve::sched::PolicyKind;
+use gla_serve::parallel::{paper_layouts, shard_plan, LinkTier};
+use gla_serve::sched::{DriveMode, PolicyKind};
 use gla_serve::workload::{generate, generate_open, LengthDist};
 
 #[cfg(feature = "pjrt")]
@@ -29,7 +35,7 @@ fn policy_arg(args: &[String], i: usize) -> PolicyKind {
     args.get(i)
         .map(|s| {
             PolicyKind::parse(s).unwrap_or_else(|| {
-                eprintln!("unknown policy `{s}` (try: fcfs spf decode-priority)");
+                eprintln!("unknown policy `{s}` (try: fcfs spf decode-priority priority)");
                 std::process::exit(2);
             })
         })
@@ -154,8 +160,79 @@ fn main() {
                 met.queue_wait.median(),
             );
         }
+        "disagg" => {
+            let variant = args.get(2).cloned().unwrap_or_else(|| "gla2".into());
+            let tp: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(2);
+            let n_p: usize = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(1);
+            let n_d: usize = args.get(5).and_then(|s| s.parse().ok()).unwrap_or(3);
+            if n_p == 0 || n_d == 0 {
+                eprintln!("need at least one prefill and one decode replica, got {n_p}P+{n_d}D");
+                std::process::exit(2);
+            }
+            let rate: f64 = args.get(6).and_then(|s| s.parse().ok()).unwrap_or(1.0);
+            if rate <= 0.0 || !rate.is_finite() {
+                eprintln!("rate must be a positive req/s value, got {rate}");
+                std::process::exit(2);
+            }
+            let link = args
+                .get(7)
+                .map(|s| {
+                    LinkTier::parse(s).unwrap_or_else(|| {
+                        eprintln!("unknown link `{s}` (try: nvlink pcie)");
+                        std::process::exit(2);
+                    })
+                })
+                .unwrap_or_default();
+            let router = args
+                .get(8)
+                .map(|s| {
+                    RouterKind::parse(s).unwrap_or_else(|| {
+                        eprintln!(
+                            "unknown router `{s}` (try: round-robin least-loaded role-aware)"
+                        );
+                        std::process::exit(2);
+                    })
+                })
+                .unwrap_or(RouterKind::RoleAware);
+            let m = DSV2;
+            let spec = ClusterSpec::disagg(n_p, n_d).with_link(link);
+            let mut cluster = Cluster::new(
+                m,
+                m.variant(&variant),
+                ServingConfig::with_parallelism(tp, 1),
+                DeviceModel::h100_serving(),
+                &spec,
+                router,
+                DriveMode::Open,
+            );
+            cluster.submit(&generate_open(
+                LengthDist::Fixed { prompt: 8192, decode: 1024 },
+                256,
+                42,
+                rate,
+            ));
+            cluster.run();
+            let met = &mut cluster.metrics;
+            let (e2e, ttft, itl, tput) = met.paper_row();
+            println!(
+                "{variant} {} TP{tp} {rate:.2} req/s over {} ({}): e2e {e2e:.1}s \
+                 ttft {ttft:.1}s itl {itl:.1}ms {tput:.0} tok/s",
+                spec.label(),
+                link.name(),
+                router.name(),
+            );
+            println!(
+                "  migrations {} | migrated {:.2} GB | migration-wait med \
+                 {:.3}s p99 {:.3}s | preemptions {}",
+                met.migrations,
+                met.migrated_bytes as f64 / 1e9,
+                met.migration_wait.median(),
+                met.migration_wait.p99(),
+                met.preemptions,
+            );
+        }
         other => {
-            eprintln!("unknown command `{other}` (try: info serve train sim qps)");
+            eprintln!("unknown command `{other}` (try: info serve train sim qps disagg)");
             std::process::exit(2);
         }
     }

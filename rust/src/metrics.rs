@@ -90,6 +90,18 @@ pub struct ServiceMetrics {
     pub output_tokens: u64,
     /// wall-clock duration of the run, seconds
     pub duration: f64,
+    /// disaggregated serving: export -> import latency per migrated cache
+    /// (transfer time + link queueing + decode-pool admission wait)
+    pub migration_wait: Summary,
+    /// KV-cache migrations completed (prefill replica -> decode replica)
+    pub migrations: u64,
+    /// total KV bytes shipped over the inter-replica link (distinct cache
+    /// content, all layers; duplicated heads are rebuilt receiver-side)
+    pub migrated_bytes: u64,
+    /// pool pages released by prefill replicas at cache export
+    pub pages_exported: u64,
+    /// pool pages allocated by decode replicas at cache import
+    pub pages_imported: u64,
 }
 
 impl ServiceMetrics {

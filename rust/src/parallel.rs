@@ -75,6 +75,21 @@ impl CollectiveModel {
         CollectiveModel { bus_bw: gpu.nvlink_gbps * 1e9 * 0.8, alpha: 4e-6 }
     }
 
+    /// PCIe Gen5 x16 host-interconnect tier: what a prefill->decode
+    /// KV-cache migration crosses when the replicas do not share an NVLink
+    /// domain (~64 GB/s raw, 80% achievable) with a host round-trip alpha.
+    pub fn pcie(_gpu: &GpuSpec) -> Self {
+        CollectiveModel { bus_bw: 64e9 * 0.8, alpha: 10e-6 }
+    }
+
+    /// Point-to-point transfer of `bytes` over one link of this tier:
+    /// the per-rank leg of a KV-cache migration (each of the `tp` rank
+    /// pairs ships its own shard concurrently, so migration time is the
+    /// per-device byte count over a single link).
+    pub fn p2p_time(&self, bytes: f64) -> f64 {
+        self.alpha + bytes / self.bus_bw
+    }
+
     /// Ring all-reduce of `bytes` across `n` ranks: 2(n-1)/n · bytes / bw.
     pub fn all_reduce(&self, bytes: f64, n: usize) -> f64 {
         if n <= 1 {
@@ -118,6 +133,40 @@ impl CollectiveModel {
     ) -> f64 {
         let bytes = (batch_tokens * d_model * dtype_bytes * dp) as f64;
         n_layers as f64 * self.all_gather(bytes, dp)
+    }
+}
+
+/// Interconnect tier between cluster replicas (disaggregated serving):
+/// prefill and decode replicas in the same NVLink domain migrate caches at
+/// NVLink speed; across hosts the migration crosses PCIe/host fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LinkTier {
+    #[default]
+    NvLink,
+    Pcie,
+}
+
+impl LinkTier {
+    pub fn model(self, gpu: &GpuSpec) -> CollectiveModel {
+        match self {
+            LinkTier::NvLink => CollectiveModel::nvlink(gpu),
+            LinkTier::Pcie => CollectiveModel::pcie(gpu),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LinkTier::NvLink => "nvlink",
+            LinkTier::Pcie => "pcie",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<LinkTier> {
+        match s {
+            "nvlink" => Some(LinkTier::NvLink),
+            "pcie" => Some(LinkTier::Pcie),
+            _ => None,
+        }
     }
 }
 
@@ -169,6 +218,23 @@ mod tests {
         let t = c.tp_step_time(60, 64, 5120, 2, 8);
         assert!(t < 2e-3, "TP comm {t}");
         assert!(t > 1e-5);
+    }
+
+    #[test]
+    fn p2p_and_link_tiers() {
+        let nv = LinkTier::NvLink.model(&H100);
+        let pcie = LinkTier::Pcie.model(&H100);
+        // a 1 GB cache migration: NVLink ~1.4 ms, PCIe ~20 ms
+        let t_nv = nv.p2p_time(1e9);
+        let t_pcie = pcie.p2p_time(1e9);
+        assert!(t_pcie > 10.0 * t_nv, "PCIe {t_pcie} vs NVLink {t_nv}");
+        assert!(t_nv > 1e-3 && t_nv < 3e-3, "NVLink 1 GB p2p {t_nv}");
+        // alpha floor for tiny transfers
+        assert!(pcie.p2p_time(0.0) >= 1e-5);
+        assert_eq!(LinkTier::parse("pcie"), Some(LinkTier::Pcie));
+        assert_eq!(LinkTier::parse("nvlink"), Some(LinkTier::NvLink));
+        assert_eq!(LinkTier::parse("infiniband"), None);
+        assert_eq!(LinkTier::default().name(), "nvlink");
     }
 
     #[test]

@@ -137,6 +137,27 @@ impl WaitQueue {
     }
 }
 
+/// How much of a request's lifetime a replica must reserve for. A unified
+/// or decode replica reserves the full prompt+decode footprint; a
+/// disaggregated prefill replica only ever stores the prompt (the cache is
+/// exported at the epilogue), so reserving the decode tail there would
+/// waste exactly the capacity disaggregation exists to reclaim.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmitScope {
+    #[default]
+    FullLifetime,
+    PrefillOnly,
+}
+
+impl AdmitScope {
+    pub fn footprint_tokens(self, req: &Request) -> usize {
+        match self {
+            AdmitScope::FullLifetime => req.prompt_len + req.decode_len,
+            AdmitScope::PrefillOnly => req.prompt_len,
+        }
+    }
+}
+
 impl Scheduler {
     /// Reservation-based admission (PagedAttention semantics): a request is
     /// admitted only when its *full* final footprint (prompt + decode) fits
@@ -145,12 +166,19 @@ impl Scheduler {
     /// eviction, and it is shared verbatim by the simulator and the live
     /// server.
     pub fn can_admit(&self, req: &Request) -> bool {
+        self.can_admit_scoped(req, AdmitScope::FullLifetime)
+    }
+
+    /// Role-scoped reservation admission: the same rule with the footprint
+    /// chosen by the replica's [`AdmitScope`] (the cluster passes
+    /// `PrefillOnly` for `Role::Prefill` replicas).
+    pub fn can_admit_scoped(&self, req: &Request, scope: AdmitScope) -> bool {
         let committed: usize = self
             .seqs
             .iter()
-            .map(|s| self.pool.pages_needed(s.req.prompt_len + s.req.decode_len))
+            .map(|s| self.pool.pages_needed(scope.footprint_tokens(&s.req)))
             .sum();
-        let need = self.pool.pages_needed(req.prompt_len + req.decode_len);
+        let need = self.pool.pages_needed(scope.footprint_tokens(req));
         committed + need <= self.pool.pages_total()
     }
 }

@@ -20,7 +20,7 @@ impl Scheduler {
         let s = &self.seqs[idx];
         match s.phase {
             Phase::Prefill { done } => (s.req.prompt_len - done).min(self.prefill_chunk),
-            Phase::Decode { .. } => 0,
+            _ => 0,
         }
     }
 

@@ -21,22 +21,63 @@ pub mod admission;
 pub mod batcher;
 pub mod policy;
 
-pub use admission::{DriveMode, WaitQueue};
+pub use admission::{AdmitScope, DriveMode, WaitQueue};
 pub use batcher::Work;
-pub use policy::{DecodePriority, Fcfs, PolicyKind, SchedPolicy, ShortestPromptFirst};
+pub use policy::{
+    DecodePriority, Fcfs, PolicyKind, PriorityFirst, SchedPolicy, ShortestPromptFirst,
+};
 
 use crate::kvcache::{PageId, PagePool};
 use crate::metrics::ServiceMetrics;
 use crate::workload::Request;
 
 /// Where a sequence is in its lifecycle. This is the single definition in
-/// the codebase — `engine` and `server` both consume it from here.
+/// the codebase — `engine`, `server` and `cluster` all consume it from here.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
     /// prompt tokens prefilled so far
     Prefill { done: usize },
     /// output tokens produced so far (first comes from the prefill epilogue)
     Decode { produced: usize },
+    /// disaggregated handoff: prefill finished (first token emitted at the
+    /// epilogue), cache exported and in flight to a decode replica. The
+    /// sequence is owned by the cluster's transfer link, not any
+    /// scheduler; it resumes as `Decode { produced }` at import.
+    Migrating { produced: usize },
+}
+
+/// Which work a cluster replica serves. `Unified` is today's SimEngine
+/// replica (prefill and decode on the same pool); `Prefill`/`Decode` are
+/// the disaggregated roles — a prefill replica exports each finished cache
+/// to a decode replica over the cluster interconnect.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Role {
+    Prefill,
+    Decode,
+    #[default]
+    Unified,
+}
+
+impl Role {
+    /// May new (prefill-phase) requests be admitted here? This is the
+    /// admission role filter: pure-decode replicas only receive work via
+    /// cache import.
+    pub fn admits_new(self) -> bool {
+        matches!(self, Role::Prefill | Role::Unified)
+    }
+
+    /// May migrated caches be imported here?
+    pub fn imports(self) -> bool {
+        matches!(self, Role::Decode | Role::Unified)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Role::Prefill => "prefill",
+            Role::Decode => "decode",
+            Role::Unified => "unified",
+        }
+    }
 }
 
 /// One admitted sequence: its request, phase and latency clocks.
@@ -56,7 +97,9 @@ impl SeqState {
     pub fn ctx_len(&self) -> usize {
         match self.phase {
             Phase::Prefill { done } => done,
-            Phase::Decode { produced } => self.req.prompt_len + produced,
+            Phase::Decode { produced } | Phase::Migrating { produced } => {
+                self.req.prompt_len + produced
+            }
         }
     }
 
@@ -162,7 +205,7 @@ impl Scheduler {
         let s = &mut self.seqs[idx];
         let done = match s.phase {
             Phase::Prefill { done } => done + chunk,
-            Phase::Decode { .. } => unreachable!("prefill chunk on decoding seq"),
+            _ => unreachable!("prefill chunk on non-prefilling seq"),
         };
         if done >= s.req.prompt_len {
             // prefill epilogue emits the first token
@@ -215,7 +258,7 @@ impl Scheduler {
             let s = &mut self.seqs[i];
             let produced = match s.phase {
                 Phase::Decode { produced } => produced + 1,
-                Phase::Prefill { .. } => unreachable!("decode step on prefilling seq"),
+                _ => unreachable!("decode step on non-decoding seq"),
             };
             metrics.itl.record(now - s.last_token_t);
             s.last_token_t = now;
@@ -272,6 +315,72 @@ impl Scheduler {
             metrics.preemptions += 1;
             evicted.push((s.req, s.start_t));
         }
+    }
+
+    /// Disaggregated handoff, export side: remove the sequence at `idx`
+    /// (which must have finished prefill, i.e. be in `Phase::Decode` with
+    /// its epilogue token already emitted and counted) and release its
+    /// pages — they are being serialized onto the cluster interconnect.
+    /// Returns the sequence (now `Phase::Migrating`) plus the KV tokens it
+    /// held; the page count is recorded in `metrics.pages_exported` so the
+    /// conservation property (exported == imported + in flight) is
+    /// checkable at any time.
+    pub fn export_seq(
+        &mut self,
+        idx: usize,
+        metrics: &mut ServiceMetrics,
+    ) -> (SeqState, usize) {
+        let mut state = self.seqs.swap_remove(idx);
+        let produced = match state.phase {
+            Phase::Decode { produced } => produced,
+            p => unreachable!("export of a sequence in {p:?}"),
+        };
+        state.phase = Phase::Migrating { produced };
+        let seq_id = state.req.id as u64;
+        let (pages, kv_tokens) = self
+            .pool
+            .export(seq_id)
+            .expect("exported sequence must hold cache");
+        metrics.pages_exported += pages.len() as u64;
+        (state, kv_tokens)
+    }
+
+    /// Disaggregated handoff, import side: can this replica hold a
+    /// migrated cache of `kv_tokens` stored tokens whose sequence will
+    /// still grow to the full `prompt + decode` footprint? Same
+    /// reservation rule as [`Scheduler::can_admit`], so a full decode pool
+    /// shows up as migration wait rather than mid-decode eviction.
+    pub fn can_import(&self, state: &SeqState) -> bool {
+        self.can_admit(&state.req)
+    }
+
+    /// Disaggregated handoff, import side: re-admit a migrated sequence
+    /// (`Phase::Migrating`) into this replica's pool with its `kv_tokens`
+    /// cache tokens materialized, resuming decode where the prefill
+    /// replica's epilogue left off. `export_t` is when the cache left the
+    /// prefill replica (for the migration-wait metric). The caller must
+    /// check [`Scheduler::can_import`] first.
+    pub fn import_seq(
+        &mut self,
+        mut state: SeqState,
+        kv_tokens: usize,
+        export_t: f64,
+        now: f64,
+        metrics: &mut ServiceMetrics,
+    ) {
+        let produced = match state.phase {
+            Phase::Migrating { produced } => produced,
+            p => unreachable!("import of a sequence in {p:?}"),
+        };
+        state.phase = Phase::Decode { produced };
+        let seq_id = state.req.id as u64;
+        let ok = self.pool.import(seq_id, kv_tokens);
+        assert!(ok, "reservation admission must guarantee import space");
+        let pages = self.pool.table(seq_id).map_or(0, |t| t.len());
+        metrics.pages_imported += pages as u64;
+        metrics.migrations += 1;
+        metrics.migration_wait.record(now - export_t);
+        self.seqs.push(state);
     }
 }
 
@@ -393,6 +502,61 @@ mod tests {
         assert_eq!(m.itl.len(), 0); // one token -> no inter-token latency
         assert_eq!(s.pool().pages_free(), s.pool().pages_total());
         s.pool().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn export_import_roundtrip_conserves_pages_and_resumes_decode() {
+        let mut m = ServiceMetrics::default();
+        // "prefill replica": admit with the prompt-only scope
+        let mut pre = sched(8, 16, 64);
+        let req = Request::new(7, 40, 3);
+        assert!(pre.can_admit_scoped(&req, crate::sched::AdmitScope::PrefillOnly));
+        pre.admit(req, 0.0, 0.0, &mut m);
+        let _ = pre.complete_prefill(0, 40, 1.0, &mut m); // epilogue token
+        assert_eq!(pre.seqs()[0].phase, Phase::Decode { produced: 1 });
+        assert_eq!(m.output_tokens, 1);
+
+        let (state, kv_tokens) = pre.export_seq(0, &mut m);
+        assert_eq!(state.phase, Phase::Migrating { produced: 1 });
+        assert_eq!(state.ctx_len(), 41); // prompt + epilogue token
+        assert_eq!(kv_tokens, 40); // the epilogue token's KV is not stored yet
+        assert_eq!(m.pages_exported, 3); // ceil(40/16)
+        assert!(pre.is_idle());
+        assert_eq!(pre.pool().pages_free(), pre.pool().pages_total());
+        pre.pool().check_invariants().unwrap();
+
+        // "decode replica": import, then decode to completion
+        let mut dec = sched(8, 16, 64);
+        assert!(dec.can_import(&state));
+        dec.import_seq(state, kv_tokens, 1.0, 1.5, &mut m);
+        assert_eq!(m.pages_imported, 3);
+        assert_eq!(m.pages_exported, m.pages_imported);
+        assert_eq!(m.migrations, 1);
+        assert_eq!(m.migration_wait.len(), 1);
+        assert!((m.migration_wait.median() - 0.5).abs() < 1e-12);
+        assert_eq!(dec.seqs()[0].phase, Phase::Decode { produced: 1 });
+        assert_eq!(dec.plan(), Work::DecodeBatch { idxs: vec![0] });
+        assert!(dec.complete_decode(&[0], 2.0, &mut m).is_empty());
+        let fin = dec.complete_decode(&[0], 3.0, &mut m);
+        assert_eq!(fin.len(), 1);
+        assert_eq!(m.output_tokens, 3); // exactly decode_len across replicas
+        assert_eq!(m.e2e.len(), 1);
+        assert_eq!(dec.pool().pages_free(), dec.pool().pages_total());
+        dec.pool().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefill_only_scope_reserves_less_than_full_lifetime() {
+        use crate::sched::AdmitScope;
+        let s = sched(4, 16, 8192); // 64-token capacity
+        // 48 prompt + 32 decode = 80 tokens: too big for the full
+        // lifetime, fine for a prefill-only replica (48 tokens, 3 pages)
+        let req = Request::new(1, 48, 32);
+        assert!(!s.can_admit(&req));
+        assert!(!s.can_admit_scoped(&req, AdmitScope::FullLifetime));
+        assert!(s.can_admit_scoped(&req, AdmitScope::PrefillOnly));
+        assert_eq!(AdmitScope::PrefillOnly.footprint_tokens(&req), 48);
+        assert_eq!(AdmitScope::FullLifetime.footprint_tokens(&req), 80);
     }
 
     #[test]

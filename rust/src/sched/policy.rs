@@ -93,10 +93,53 @@ impl SchedPolicy for ShortestPromptFirst {
                 let s = &seqs[i];
                 let done = match s.phase {
                     Phase::Prefill { done } => done,
-                    Phase::Decode { .. } => 0,
+                    _ => 0,
                 };
                 (s.req.prompt_len - done.min(s.req.prompt_len), s.req.id)
             })
+    }
+
+    fn decode_first(&self, alternate: bool) -> bool {
+        alternate
+    }
+}
+
+/// Priority-first: admit the queued request with the highest
+/// `Request::priority`; ties go to the earliest queue position, which is
+/// arrival order in both drive modes (the queue releases in send order
+/// and a preempted requeue returns to the front) — i.e. FCFS within a
+/// priority class. Prefill order is the same rule over the candidate
+/// list. With every request at the default priority 0 every decision
+/// reduces to "take the first", which is exactly [`Fcfs`] — so existing
+/// benches stay bit-identical. The ROADMAP's SLO-aware admission builds
+/// deadline shedding on top of this data model.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PriorityFirst;
+
+/// First index (queue/candidate order) with the strictly highest priority.
+fn first_max_by_priority(prios: impl Iterator<Item = u8>) -> Option<usize> {
+    let mut best: Option<(usize, u8)> = None;
+    for (i, p) in prios.enumerate() {
+        match best {
+            Some((_, bp)) if bp >= p => {}
+            _ => best = Some((i, p)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+impl SchedPolicy for PriorityFirst {
+    fn name(&self) -> &'static str {
+        "priority"
+    }
+
+    fn pick_waiting(&self, queued: &[QueuedReq]) -> Option<usize> {
+        first_max_by_priority(queued.iter().map(|(r, _)| r.priority))
+    }
+
+    fn pick_prefill(&self, seqs: &[SeqState], candidates: &[usize]) -> Option<usize> {
+        first_max_by_priority(candidates.iter().map(|&i| seqs[i].req.priority))
+            .map(|k| candidates[k])
     }
 
     fn decode_first(&self, alternate: bool) -> bool {
@@ -140,6 +183,7 @@ pub enum PolicyKind {
     Fcfs,
     ShortestPromptFirst,
     DecodePriority,
+    Priority,
 }
 
 impl PolicyKind {
@@ -148,6 +192,7 @@ impl PolicyKind {
             PolicyKind::Fcfs => Box::new(Fcfs),
             PolicyKind::ShortestPromptFirst => Box::new(ShortestPromptFirst),
             PolicyKind::DecodePriority => Box::new(DecodePriority),
+            PolicyKind::Priority => Box::new(PriorityFirst),
         }
     }
 
@@ -156,6 +201,7 @@ impl PolicyKind {
             PolicyKind::Fcfs => "fcfs",
             PolicyKind::ShortestPromptFirst => "spf",
             PolicyKind::DecodePriority => "decode-priority",
+            PolicyKind::Priority => "priority",
         }
     }
 
@@ -166,15 +212,17 @@ impl PolicyKind {
                 Some(PolicyKind::ShortestPromptFirst)
             }
             "decode-priority" | "decode" => Some(PolicyKind::DecodePriority),
+            "priority" => Some(PolicyKind::Priority),
             _ => None,
         }
     }
 
-    pub fn all() -> [PolicyKind; 3] {
+    pub fn all() -> [PolicyKind; 4] {
         [
             PolicyKind::Fcfs,
             PolicyKind::ShortestPromptFirst,
             PolicyKind::DecodePriority,
+            PolicyKind::Priority,
         ]
     }
 }
@@ -225,6 +273,49 @@ mod tests {
         assert!(DecodePriority.decode_first(false));
         assert!(DecodePriority.decode_first(true));
         assert!(!ShortestPromptFirst.decode_first(false));
+    }
+
+    #[test]
+    fn priority_beats_arrival_ties_by_queue_position() {
+        let q = vec![
+            (Request::new(0, 100, 16), 0.0),
+            (Request::new(1, 100, 16).with_priority(1), 1.0),
+            (Request::new(2, 100, 16).with_priority(2), 2.0),
+            (Request::new(3, 100, 16).with_priority(2), 3.0),
+        ];
+        // highest class wins; within class 2 the earlier-queued (id 2)
+        assert_eq!(PriorityFirst.pick_waiting(&q), Some(2));
+        assert_eq!(PriorityFirst.pick_waiting(&[]), None);
+        // all default priority 0 -> identical decision to Fcfs
+        let flat = vec![
+            (Request::new(5, 10, 1), 0.5),
+            (Request::new(6, 10, 1), 1.5),
+        ];
+        assert_eq!(PriorityFirst.pick_waiting(&flat), Fcfs.pick_waiting(&flat));
+        assert_eq!(PriorityFirst.pick_waiting(&flat), Some(0));
+    }
+
+    #[test]
+    fn priority_prefill_order_follows_class() {
+        let mk = |id: usize, prio: u8| SeqState {
+            req: Request::new(id, 64, 8).with_priority(prio),
+            phase: Phase::Prefill { done: 0 },
+            start_t: 0.0,
+            first_token_t: None,
+            last_token_t: 0.0,
+        };
+        let seqs = vec![mk(0, 0), mk(1, 3), mk(2, 3)];
+        let cands = vec![0, 1, 2];
+        // first candidate of the highest class (seq 1), not seq 2
+        assert_eq!(PriorityFirst.pick_prefill(&seqs, &cands), Some(1));
+        // priority 0 everywhere reduces to Fcfs's "first candidate"
+        let flat = vec![mk(7, 0), mk(8, 0)];
+        assert_eq!(
+            PriorityFirst.pick_prefill(&flat, &[0, 1]),
+            Fcfs.pick_prefill(&flat, &[0, 1])
+        );
+        assert!(!PriorityFirst.decode_first(false));
+        assert!(PriorityFirst.decode_first(true));
     }
 
     #[test]

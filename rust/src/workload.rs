@@ -56,11 +56,21 @@ pub struct Request {
     /// client send time for open-loop driving, seconds (0 under the
     /// closed-loop generator, which sends on completion instead)
     pub arrival_t: f64,
+    /// scheduling class for the `priority` policy: higher admits first,
+    /// ties broken by send time then id. 0 (the default everywhere a
+    /// workload generator builds requests) keeps every existing bench
+    /// bit-identical; the SLO/deadline work on the ROADMAP builds on this.
+    pub priority: u8,
 }
 
 impl Request {
     pub fn new(id: usize, prompt_len: usize, decode_len: usize) -> Self {
-        Request { id, prompt_len, decode_len, arrival_t: 0.0 }
+        Request { id, prompt_len, decode_len, arrival_t: 0.0, priority: 0 }
+    }
+
+    pub fn with_priority(mut self, priority: u8) -> Self {
+        self.priority = priority;
+        self
     }
 }
 

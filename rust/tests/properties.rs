@@ -4,12 +4,13 @@
 //! failing seed, which is enough to reproduce deterministically.
 
 use gla_serve::attention::Variant;
-use gla_serve::config::{ServingConfig, DSV2};
+use gla_serve::cluster::{Cluster, RouterKind};
+use gla_serve::config::{ClusterSpec, ServingConfig, DSV2};
 use gla_serve::engine::{run_benchmark, run_benchmark_with};
 use gla_serve::hardware::DeviceModel;
 use gla_serve::kvcache::{PagePool, PageStore, RadixIndex};
 use gla_serve::metrics::ServiceMetrics;
-use gla_serve::sched::{PolicyKind, Scheduler, Work};
+use gla_serve::sched::{DriveMode, PolicyKind, Scheduler, Work};
 use gla_serve::workload::{generate, generate_open, LengthDist, Request, Rng};
 
 fn variants(rng: &mut Rng) -> Variant {
@@ -205,7 +206,7 @@ fn prop_scheduler_survives_overcommit_via_preemption() {
     for case in 0..40 {
         let ps = [1usize, 2, 4, 8][rng.range(0, 3)];
         let n_pages = rng.range(4, 24);
-        let kind = PolicyKind::all()[rng.range(0, 2)];
+        let kind = PolicyKind::all()[rng.range(0, PolicyKind::all().len() - 1)];
         let mut sched = Scheduler::new(
             PagePool::new(n_pages, ps),
             kind.build(),
@@ -320,6 +321,93 @@ fn prop_radix_prefix_is_page_aligned_and_correct() {
                 assert_eq!(m % ps, 0);
             }
             None => assert_eq!(full, 0, "case {case}"),
+        }
+    }
+}
+
+#[test]
+fn prop_disagg_migration_conserves_pages() {
+    // Migration conservation: pages exported by prefill replicas ==
+    // pages imported by decode replicas + pages of preempted-in-flight
+    // requests. Reservation admission makes the preempted term zero
+    // (asserted), so after a drained run the two counters must match
+    // exactly, every replica's pool must pass its invariant check and be
+    // fully free, and no request or token may be lost — across random
+    // role mixes, page sizes, pool capacities (down to one request's
+    // footprint, which forces imports to queue on the link) and drives.
+    let mut rng = Rng::new(0xD15A66);
+    for case in 0..10 {
+        let m = DSV2;
+        let variant_name = ["gla2", "gqa4"][rng.range(0, 1)];
+        let n_p = rng.range(1, 2);
+        let n_d = rng.range(1, 2);
+        let page_size = [16usize, 64][rng.range(0, 1)];
+        let max_prompt = 4096;
+        let max_decode = 128;
+        let dist = LengthDist::RandomRatio { max_prompt, max_decode, ratio: 0.1 };
+        // capacity: 1-3x the largest possible footprint, page-exact, so
+        // admission never dead-ends but pools regularly run out of room
+        let footprint_pages = (max_prompt + max_decode).div_ceil(page_size);
+        let n_pages = footprint_pages * rng.range(1, 3);
+        let variant = m.variant(variant_name);
+        let kv_per_token = variant.kv_bytes_per_token_per_device(2, m.dtype_bytes)
+            as u64
+            * m.n_layers as u64;
+        let mut serving = ServingConfig::with_parallelism(2, 1);
+        serving.page_size = page_size;
+        serving.kv_hbm_budget = kv_per_token * (page_size * n_pages) as u64;
+        let n = rng.range(6, 20);
+        let drive = if rng.range(0, 1) == 0 {
+            DriveMode::Closed { concurrency: rng.range(2, 8) }
+        } else {
+            DriveMode::Open
+        };
+        let reqs = if matches!(drive, DriveMode::Open) {
+            generate_open(dist, n, case as u64 + 1, 2.0)
+        } else {
+            generate(dist, n, case as u64 + 1)
+        };
+        let expected_tokens: u64 = reqs.iter().map(|r| r.decode_len as u64).sum();
+        let mut c = Cluster::new(
+            m,
+            variant,
+            serving,
+            DeviceModel::h100_serving(),
+            &ClusterSpec::disagg(n_p, n_d),
+            RouterKind::all()[rng.range(0, 2)],
+            drive,
+        );
+        assert!(
+            c.pool_capacity_tokens() >= max_prompt + max_decode,
+            "case {case}: capacity must fit one request"
+        );
+        c.submit(&reqs);
+        c.run();
+        assert_eq!(c.metrics.e2e.len(), n, "case {case}: lost requests");
+        assert_eq!(c.metrics.output_tokens, expected_tokens, "case {case}");
+        assert_eq!(c.metrics.preemptions, 0, "case {case}: reservation broken");
+        assert_eq!(
+            c.metrics.pages_exported, c.metrics.pages_imported,
+            "case {case}: migration pages not conserved"
+        );
+        assert_eq!(
+            c.metrics.migrations,
+            c.metrics.migration_wait.len() as u64,
+            "case {case}"
+        );
+        // every multi-token request migrated exactly once
+        let expect_migrations = reqs.iter().filter(|r| r.decode_len > 1).count() as u64;
+        assert_eq!(c.metrics.migrations, expect_migrations, "case {case}");
+        for (ri, r) in c.replicas().iter().enumerate() {
+            r.sched
+                .pool()
+                .check_invariants()
+                .unwrap_or_else(|e| panic!("case {case} replica {ri}: {e}"));
+            assert_eq!(
+                r.sched.pool().pages_free(),
+                r.sched.pool().pages_total(),
+                "case {case} replica {ri}: leaked pages"
+            );
         }
     }
 }
