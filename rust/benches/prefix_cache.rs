@@ -1,0 +1,190 @@
+//! Prefix-cache-aware admission sweep: hit rate x QPS x {GQA-4, GLA-2}
+//! on shared-prefix (multi-turn chat) workloads — the RadixAttention-style
+//! reuse that the paper's §4.2 distributed-offset result makes practical
+//! (page size 1 costs nothing, so page-aligned sharing is free to make
+//! fine-grained).
+//!
+//! What to look for:
+//! * **TTFT collapse at high share ratios** — a forked request skips its
+//!   shared pages entirely, so mean TTFT drops by roughly the share ratio
+//!   once the radix index is warm (part 1 asserts strictly lower TTFT and
+//!   prefill tokens skipped > 0 on every shared configuration).
+//! * **Zero-share neutrality** — on a workload with no shared prefixes
+//!   the radix-on engine is byte-identical to radix-off (part 2 asserts
+//!   it): the fast path costs nothing when it never fires.
+//! * **Cache-aware routing** — the `prefix-affinity` router sends
+//!   family-mates to the replica already holding their prefix; part 3
+//!   reports its hit rate against least-loaded scattering (usually
+//!   higher, though under saturation concentration can lose).
+//! * **Determinism** — same seed, bit-identical metrics (part 4).
+//!
+//!     cargo bench --bench prefix_cache
+
+use gla_serve::cluster::{Cluster, RouterKind};
+use gla_serve::config::{ClusterSpec, ServingConfig, DSV2};
+use gla_serve::engine::run_benchmark_with;
+use gla_serve::hardware::DeviceModel;
+use gla_serve::metrics::ServiceMetrics;
+use gla_serve::sched::DriveMode;
+use gla_serve::workload::{
+    generate_open, generate_shared_prefix_open, LengthDist, SharedPrefixSpec,
+};
+
+const N: usize = 96;
+const SEED: u64 = 42;
+const QPS_SWEEP: [f64; 3] = [1.0, 2.0, 4.0];
+
+/// (label, spec): share ratio = prefix / (prefix + mean suffix).
+fn share_specs() -> Vec<(&'static str, SharedPrefixSpec)> {
+    vec![
+        (
+            "share~0.4",
+            SharedPrefixSpec { n_families: 4, prefix_len: 2048, max_suffix: 6144, decode: 256 },
+        ),
+        (
+            "share~0.86",
+            SharedPrefixSpec { n_families: 4, prefix_len: 6144, max_suffix: 2048, decode: 256 },
+        ),
+    ]
+}
+
+fn serving(prefix_cache: bool) -> ServingConfig {
+    let mut s = ServingConfig::with_parallelism(2, 1).open_loop();
+    s.prefix_cache = prefix_cache;
+    s
+}
+
+fn run_single(variant: &str, spec: SharedPrefixSpec, qps: f64, radix: bool) -> ServiceMetrics {
+    let m = DSV2;
+    run_benchmark_with(
+        m,
+        m.variant(variant),
+        serving(radix),
+        DeviceModel::h100_serving(),
+        &generate_shared_prefix_open(spec, N, SEED, qps),
+    )
+}
+
+fn run_cluster(variant: &str, spec: SharedPrefixSpec, router: RouterKind) -> ServiceMetrics {
+    let m = DSV2;
+    let mut c = Cluster::new(
+        m,
+        m.variant(variant),
+        serving(true),
+        DeviceModel::h100_serving(),
+        &ClusterSpec::unified(4),
+        router,
+        DriveMode::Open,
+    );
+    c.submit(&generate_shared_prefix_open(spec, N, SEED, 4.0));
+    c.run();
+    c.metrics
+}
+
+fn main() {
+    println!(
+        "prefix_cache — DSV2 (236B/21B FP8), TP2, shared-prefix chat \
+         workloads, n {N}, page size 64"
+    );
+
+    println!("\n[1] hit rate x QPS x variant: radix on vs off");
+    println!(
+        "{:<6} {:<10} {:>6} {:>12} {:>12} {:>8} {:>12} {:>8}",
+        "var", "share", "req/s", "TTFT off(s)", "TTFT on(s)", "hit%", "skipped", "pages"
+    );
+    for variant in ["gqa4", "gla2"] {
+        for (label, spec) in share_specs() {
+            for &qps in &QPS_SWEEP {
+                let off = run_single(variant, spec, qps, false);
+                let on = run_single(variant, spec, qps, true);
+                println!(
+                    "{variant:<6} {label:<10} {qps:>6.2} {:>12.2} {:>12.2} {:>8.0} \
+                     {:>12} {:>8}",
+                    off.ttft.mean(),
+                    on.ttft.mean(),
+                    on.prefix_hit_rate() * 100.0,
+                    on.prefill_tokens_skipped,
+                    on.pages_shared,
+                );
+                assert_eq!(on.e2e.len(), N, "lost requests with radix on");
+                assert_eq!(off.e2e.len(), N, "lost requests with radix off");
+                assert_eq!(on.output_tokens, off.output_tokens);
+                assert!(
+                    on.prefill_tokens_skipped > 0,
+                    "{variant} {label} @{qps}: shared workload must skip prefill"
+                );
+                assert!(on.prefix_hits > 0);
+                assert!(
+                    on.ttft.mean() < off.ttft.mean(),
+                    "{variant} {label} @{qps}: radix TTFT {:.3}s must beat {:.3}s",
+                    on.ttft.mean(),
+                    off.ttft.mean()
+                );
+            }
+            println!();
+        }
+    }
+
+    println!("[2] zero-share neutrality: radix on == radix off, byte for byte");
+    let m = DSV2;
+    let dist = LengthDist::RandomRatio { max_prompt: 8192, max_decode: 256, ratio: 0.1 };
+    let zero = |radix: bool| {
+        run_benchmark_with(
+            m,
+            m.variant("gla2"),
+            serving(radix),
+            DeviceModel::h100_serving(),
+            &generate_open(dist, N, SEED, 2.0),
+        )
+    };
+    let (mut off, mut on) = (zero(false), zero(true));
+    assert_eq!(on.prefix_hits, 0, "unique prompts cannot hit");
+    assert_eq!(on.prefill_tokens_skipped, 0);
+    assert_eq!(on.pages_shared, 0);
+    assert_eq!(on.duration, off.duration, "duration drifted");
+    assert_eq!(on.paper_row(), off.paper_row(), "paper row drifted");
+    assert_eq!(on.output_tokens, off.output_tokens);
+    assert_eq!(on.queue_wait.median(), off.queue_wait.median());
+    assert_eq!(on.preemptions, off.preemptions);
+    println!("zero-share workload is byte-identical with the radix enabled ✓");
+
+    println!("\n[3] cache-aware routing: prefix-affinity vs least-loaded (4U, 4 req/s)");
+    let (_, spec) = share_specs()[1];
+    for variant in ["gqa4", "gla2"] {
+        let ll = run_cluster(variant, spec, RouterKind::LeastLoaded);
+        let aff = run_cluster(variant, spec, RouterKind::PrefixAffinity);
+        println!(
+            "{variant}: hit rate least-loaded {:.0}% -> prefix-affinity {:.0}% \
+             (skipped {} -> {} tok)",
+            ll.prefix_hit_rate() * 100.0,
+            aff.prefix_hit_rate() * 100.0,
+            ll.prefill_tokens_skipped,
+            aff.prefill_tokens_skipped,
+        );
+        assert_eq!(ll.e2e.len(), N);
+        assert_eq!(aff.e2e.len(), N);
+        // "affinity >= least-loaded" is a heuristic, not an invariant:
+        // under saturation, concentrating a family on one replica can
+        // cost more (preempted owners restart cold) than scattering.
+        // Report rather than assert; that affinity finds reuse at all is
+        // asserted by the cluster unit test.
+        if aff.prefix_hits < ll.prefix_hits {
+            println!(
+                "  NOTE: {variant}: affinity underperformed least-loaded \
+                 ({} vs {} hits) at this load point",
+                aff.prefix_hits, ll.prefix_hits
+            );
+        }
+    }
+
+    println!("\n[4] determinism (gla2, share~0.86, 2 req/s)");
+    let mut a = run_single("gla2", spec, 2.0, true);
+    let mut b = run_single("gla2", spec, 2.0, true);
+    assert_eq!(a.duration, b.duration, "duration drifted");
+    assert_eq!(a.ttft.median(), b.ttft.median(), "ttft drifted");
+    assert_eq!(a.prefix_hits, b.prefix_hits, "hits drifted");
+    assert_eq!(a.prefill_tokens_skipped, b.prefill_tokens_skipped);
+    assert_eq!(a.pages_shared, b.pages_shared);
+    assert_eq!(a.output_tokens, b.output_tokens);
+    println!("same seed reproduced bit-identically ✓");
+}

@@ -1,14 +1,16 @@
 //! Request routing across heterogeneous cluster replicas.
 //!
 //! A [`Router`] decides which replica receives the next *new* request,
-//! restricted to replicas whose [`Role`] admits new work (the admission
-//! role filter — pure-decode replicas only ever receive work through
-//! cache import, which is routed least-loaded in `cluster::Cluster`).
-//! Like scheduling policies, routers are deterministic: identical
-//! workload + seed reproduces identical placement.
+//! restricted to replicas whose [`crate::sched::Role`] admits new work
+//! (the admission role filter — pure-decode replicas only ever receive
+//! work through cache import, which is routed least-loaded in
+//! `cluster::Cluster`). Like scheduling policies, routers are
+//! deterministic: identical workload + seed reproduces identical
+//! placement.
 
 use super::ClusterReplica;
 use crate::sched::Phase;
+use crate::workload::Request;
 
 /// Router selection (config/CLI-friendly, `Copy` like `PolicyKind`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -24,6 +26,13 @@ pub enum RouterKind {
     /// index): routes by the work a prefill replica actually owes rather
     /// than how many sequences it happens to hold.
     RoleAware,
+    /// Cache-aware routing for prefix caching: send the request to the
+    /// replica whose radix index holds its longest resident prompt
+    /// prefix, so family-mates land where their system prompt is already
+    /// cached (SGLang-style cache-aware load balancing). Ties — and every
+    /// decision when prefix caching is off — fall back to least-loaded,
+    /// so without shared prefixes this IS `LeastLoaded`.
+    PrefixAffinity,
 }
 
 impl RouterKind {
@@ -32,6 +41,7 @@ impl RouterKind {
             RouterKind::RoundRobin => "round-robin",
             RouterKind::LeastLoaded => "least-loaded",
             RouterKind::RoleAware => "role-aware",
+            RouterKind::PrefixAffinity => "prefix-affinity",
         }
     }
 
@@ -40,15 +50,17 @@ impl RouterKind {
             "round-robin" | "rr" => Some(RouterKind::RoundRobin),
             "least-loaded" | "ll" => Some(RouterKind::LeastLoaded),
             "role-aware" | "ra" => Some(RouterKind::RoleAware),
+            "prefix-affinity" | "pa" | "affinity" => Some(RouterKind::PrefixAffinity),
             _ => None,
         }
     }
 
-    pub fn all() -> [RouterKind; 3] {
+    pub fn all() -> [RouterKind; 4] {
         [
             RouterKind::RoundRobin,
             RouterKind::LeastLoaded,
             RouterKind::RoleAware,
+            RouterKind::PrefixAffinity,
         ]
     }
 }
@@ -84,8 +96,9 @@ impl Router {
     /// Replica for the next new request, among those whose role admits
     /// new work. Non-mutating so a failed (pool-full, head-of-line)
     /// admission retries the same replica; call
-    /// [`Router::note_admitted`] after a successful admission.
-    pub fn route_new(&self, replicas: &[ClusterReplica]) -> Option<usize> {
+    /// [`Router::note_admitted`] after a successful admission. `req` is
+    /// the request being placed — only `PrefixAffinity` looks at it.
+    pub fn route_new(&self, replicas: &[ClusterReplica], req: &Request) -> Option<usize> {
         let eligible = || {
             replicas
                 .iter()
@@ -105,6 +118,36 @@ impl Router {
             RouterKind::RoleAware => eligible()
                 .min_by_key(|(i, r)| (prefill_backlog(r), r.sched.n_live(), *i))
                 .map(|(i, _)| i),
+            // longest resident prefix wins; ties (including "no replica
+            // holds anything", i.e. prefix caching off) break exactly
+            // like LeastLoaded via the reversed (live, index) key
+            RouterKind::PrefixAffinity => {
+                // with prefix caching off everywhere this IS least-loaded;
+                // don't even materialize the prompt
+                if !replicas
+                    .iter()
+                    .any(|r| r.role.admits_new() && r.sched.prefix_cache_enabled())
+                {
+                    return eligible()
+                        .min_by_key(|(i, r)| (r.sched.n_live(), *i))
+                        .map(|(i, _)| i);
+                }
+                // materialize the prompt once for all replicas; each
+                // per-replica probe then only hashes (and a cold index
+                // short-circuits before touching the tokens)
+                let toks = req.prompt_tokens();
+                eligible()
+                    .max_by_key(|(i, r)| {
+                        let matched =
+                            r.sched.probe_prefix_with(&toks).map_or(0, |(_, m)| m);
+                        (
+                            matched,
+                            std::cmp::Reverse(r.sched.n_live()),
+                            std::cmp::Reverse(*i),
+                        )
+                    })
+                    .map(|(i, _)| i)
+            }
         }
     }
 
@@ -140,12 +183,17 @@ mod tests {
         r
     }
 
+    fn probe(id: usize) -> Request {
+        Request::new(id, 32, 4)
+    }
+
     #[test]
     fn kind_roundtrip() {
         for k in RouterKind::all() {
             assert_eq!(RouterKind::parse(k.name()), Some(k));
         }
         assert_eq!(RouterKind::parse("rr"), Some(RouterKind::RoundRobin));
+        assert_eq!(RouterKind::parse("pa"), Some(RouterKind::PrefixAffinity));
         assert_eq!(RouterKind::parse("nope"), None);
         assert_eq!(RouterKind::default(), RouterKind::LeastLoaded);
     }
@@ -158,14 +206,20 @@ mod tests {
             with_live(Role::Prefill, 1),
         ];
         for kind in RouterKind::all() {
-            let ri = Router::new(kind).route_new(&reps).unwrap();
+            let ri = Router::new(kind).route_new(&reps, &probe(9)).unwrap();
             assert_ne!(ri, 0, "{}: routed new work to a decode replica", kind.name());
         }
         // least-loaded picks the emptier prefill replica
-        assert_eq!(Router::new(RouterKind::LeastLoaded).route_new(&reps), Some(2));
+        assert_eq!(
+            Router::new(RouterKind::LeastLoaded).route_new(&reps, &probe(9)),
+            Some(2)
+        );
         // nothing eligible -> None
         let only_decode = vec![with_live(Role::Decode, 0)];
-        assert_eq!(Router::new(RouterKind::LeastLoaded).route_new(&only_decode), None);
+        assert_eq!(
+            Router::new(RouterKind::LeastLoaded).route_new(&only_decode, &probe(9)),
+            None
+        );
     }
 
     #[test]
@@ -176,15 +230,15 @@ mod tests {
             replica(Role::Prefill),
         ];
         let mut r = Router::new(RouterKind::RoundRobin);
-        let a = r.route_new(&reps).unwrap();
+        let a = r.route_new(&reps, &probe(1)).unwrap();
         assert_eq!(a, 0);
         // without note_admitted the pick is sticky (head-of-line retry)
-        assert_eq!(r.route_new(&reps), Some(0));
+        assert_eq!(r.route_new(&reps, &probe(1)), Some(0));
         r.note_admitted(a, reps.len());
-        let b = r.route_new(&reps).unwrap();
+        let b = r.route_new(&reps, &probe(1)).unwrap();
         assert_eq!(b, 2, "skips the decode replica");
         r.note_admitted(b, reps.len());
-        assert_eq!(r.route_new(&reps), Some(0), "wraps around");
+        assert_eq!(r.route_new(&reps, &probe(1)), Some(0), "wraps around");
     }
 
     #[test]
@@ -197,8 +251,47 @@ mod tests {
         let r1 = with_live(Role::Prefill, 3); // 3 x 32 prompt tokens
         let reps = vec![r0, r1];
         // least-loaded prefers replica 0 (1 live < 3 live)...
-        assert_eq!(Router::new(RouterKind::LeastLoaded).route_new(&reps), Some(0));
+        assert_eq!(
+            Router::new(RouterKind::LeastLoaded).route_new(&reps, &probe(9)),
+            Some(0)
+        );
         // ...role-aware sees 900 owed tokens vs 96 and prefers replica 1
-        assert_eq!(Router::new(RouterKind::RoleAware).route_new(&reps), Some(1));
+        assert_eq!(
+            Router::new(RouterKind::RoleAware).route_new(&reps, &probe(9)),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn prefix_affinity_routes_to_the_cache_holder() {
+        let mut m = ServiceMetrics::default();
+        let cache_sched = || {
+            Scheduler::new(PagePool::new(64, 16), PolicyKind::Fcfs.build(), 8192, 256)
+                .with_prefix_cache()
+        };
+        // replica 1 prefilled a family-99 prompt and is decoding it — its
+        // radix index holds the family's 32-token (2-page) prefix
+        let r0 = ClusterReplica::new(Role::Unified, cache_sched());
+        let mut r1 = ClusterReplica::new(Role::Unified, cache_sched());
+        let owner = Request::new(1, 48, 4).with_shared_prefix(99, 32);
+        r1.sched.admit(owner, 0.0, 0.0, &mut m);
+        let _ = r1.sched.complete_prefill(0, 48, 1.0, &mut m);
+        let reps = vec![r0, r1];
+        let mate = Request::new(2, 48, 4).with_shared_prefix(99, 32);
+        // least-loaded prefers the empty replica 0; affinity follows the
+        // cached prefix to replica 1
+        assert_eq!(
+            Router::new(RouterKind::LeastLoaded).route_new(&reps, &mate),
+            Some(0)
+        );
+        assert_eq!(
+            Router::new(RouterKind::PrefixAffinity).route_new(&reps, &mate),
+            Some(1)
+        );
+        // an unrelated request ties at zero match -> least-loaded fallback
+        assert_eq!(
+            Router::new(RouterKind::PrefixAffinity).route_new(&reps, &probe(3)),
+            Some(0)
+        );
     }
 }

@@ -129,6 +129,12 @@ pub struct ServingConfig {
     /// concurrency argument; `SimEngine::from_config`/`run_benchmark_with`
     /// honor it.
     pub drive: DriveMode,
+    /// prefix-cache-aware admission: index resident prompts in a radix
+    /// tree and fork shared page-aligned prefixes instead of re-prefilling
+    /// them (RadixAttention-style; the §4.2 distributed-offset result is
+    /// what makes the small pages this wants free). Off by default —
+    /// workloads without shared prefixes are bit-identical either way.
+    pub prefix_cache: bool,
 }
 
 impl Default for ServingConfig {
@@ -144,6 +150,7 @@ impl Default for ServingConfig {
             kv_hbm_budget: 48 * (1 << 30),
             policy: PolicyKind::Fcfs,
             drive: DriveMode::Closed { concurrency: 64 },
+            prefix_cache: false,
         }
     }
 }
@@ -167,6 +174,12 @@ impl ServingConfig {
     /// (see `workload::generate_open`).
     pub fn open_loop(self) -> Self {
         self.with_drive(DriveMode::Open)
+    }
+
+    /// Enable prefix-cache-aware admission on every admitting replica.
+    pub fn with_prefix_cache(mut self) -> Self {
+        self.prefix_cache = true;
+        self
     }
 
     pub fn total_gpus(&self) -> usize {
@@ -276,5 +289,7 @@ mod tests {
         assert_eq!(c.policy, PolicyKind::ShortestPromptFirst);
         assert_eq!(c.drive, DriveMode::Open);
         assert_eq!(c.tp, 8);
+        assert!(!c.prefix_cache, "prefix cache must default off");
+        assert!(c.with_prefix_cache().prefix_cache);
     }
 }

@@ -22,7 +22,10 @@
 //! closed loop of the paper's benchmarks and an open-loop Poisson arrival
 //! schedule for request-rate (QPS) sweeps, where an idle engine jumps its
 //! clock to the next arrival (but never past a pending cache migration —
-//! see `cluster::Cluster::run_async`).
+//! see `cluster::Cluster::run_async`). Prefix-cache-aware admission
+//! (`ServingConfig::prefix_cache`) flows through unchanged: shared
+//! prompts fork resident pages instead of re-prefilling
+//! (`benches/prefix_cache.rs`).
 
 use crate::attention::Variant;
 use crate::cluster::Cluster;

@@ -295,10 +295,22 @@ impl PageStore {
 /// Page-granular radix index for prefix caching: maps chunks of prompt
 /// tokens to the sequence that already holds them, so the scheduler can
 /// `fork_prefix` instead of re-prefilling (Zheng et al. 2024).
+///
+/// Ownership contract (the stale-owner hazard): an entry is only valid
+/// while a holder sequence is *resident* in the page pool. Each node
+/// therefore keeps the full set of resident holders: the caller calls
+/// [`RadixIndex::remove_seq`] whenever a sequence leaves the pool
+/// (release, preemption, migration export) — the scheduler does this
+/// eagerly — and the node survives as long as *any* holder remains, so a
+/// forked child retiring before its owner (or vice versa) never deletes
+/// a prefix that is still resident. Admission additionally re-validates
+/// residency before forking, so a bug in eviction degrades to a cache
+/// miss, never to forking freed pages.
 #[derive(Debug, Default)]
 pub struct RadixIndex {
-    /// (depth, chunk-hash) -> (seq that materialized it, node id)
-    nodes: HashMap<(usize, u64), SeqId>,
+    /// (depth, chained chunk-hash) -> resident sequences holding the
+    /// prefix, in insertion order (probes prefer the newest)
+    nodes: HashMap<(usize, u64), Vec<SeqId>>,
 }
 
 impl RadixIndex {
@@ -316,7 +328,11 @@ impl RadixIndex {
         h
     }
 
-    /// Record that `seq` holds `tokens` (page-aligned chunks only).
+    /// Record that `seq` holds `tokens` (page-aligned chunks only),
+    /// registering it as one more resident holder of every full-page
+    /// prefix. Re-insertion (chunked prefill indexes the prefix again as
+    /// it grows — re-hashing the already-indexed head each time, an
+    /// accepted O(prompt²/chunk) at the default 8K chunk) is idempotent.
     pub fn insert(&mut self, seq: SeqId, tokens: &[u32], page_size: usize) {
         let mut h: u64 = 14695981039346656037;
         for (d, chunk) in tokens.chunks(page_size).enumerate() {
@@ -325,12 +341,26 @@ impl RadixIndex {
             }
             h ^= Self::chunk_hash(chunk);
             h = h.wrapping_mul(0x100000001b3);
-            self.nodes.entry((d, h)).or_insert(seq);
+            let holders = self.nodes.entry((d, h)).or_default();
+            if !holders.contains(&seq) {
+                holders.push(seq);
+            }
         }
     }
 
+    /// Number of indexed (depth, prefix) entries — test/debug visibility.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
     /// Longest shared page-aligned prefix of `tokens` already cached:
-    /// returns (owner sequence, matched token count).
+    /// returns (owner sequence, matched token count). Of a node's
+    /// holders the most recently registered wins — the newest prefill is
+    /// the one most likely to stay resident longest.
     pub fn longest_prefix(&self, tokens: &[u32], page_size: usize) -> Option<(SeqId, usize)> {
         let mut h: u64 = 14695981039346656037;
         let mut best = None;
@@ -340,16 +370,21 @@ impl RadixIndex {
             }
             h ^= Self::chunk_hash(chunk);
             h = h.wrapping_mul(0x100000001b3);
-            match self.nodes.get(&(d, h)) {
-                Some(&seq) => best = Some((seq, (d + 1) * page_size)),
+            match self.nodes.get(&(d, h)).and_then(|v| v.last().copied()) {
+                Some(seq) => best = Some((seq, (d + 1) * page_size)),
                 None => break,
             }
         }
         best
     }
 
+    /// Drop `seq` from every node it holds; a node vanishes only when its
+    /// last resident holder leaves.
     pub fn remove_seq(&mut self, seq: SeqId) {
-        self.nodes.retain(|_, s| *s != seq);
+        self.nodes.retain(|_, holders| {
+            holders.retain(|s| *s != seq);
+            !holders.is_empty()
+        });
     }
 }
 
@@ -492,6 +527,33 @@ mod tests {
         assert_eq!(idx.longest_prefix(&bad, 16), None);
         idx.remove_seq(7);
         assert_eq!(idx.longest_prefix(&toks, 16), None);
+    }
+
+    #[test]
+    fn radix_tracks_all_resident_holders_and_eviction_leaves_no_stale_owner() {
+        // two sequences hold the same prefix; probes prefer the newest
+        let mut idx = RadixIndex::new();
+        let toks: Vec<u32> = (0..32).collect();
+        idx.insert(1, &toks, 16);
+        idx.insert(2, &toks, 16);
+        idx.insert(2, &toks, 16); // chunked re-insert is idempotent
+        assert_eq!(idx.longest_prefix(&toks, 16), Some((2, 32)));
+        // the newer holder (e.g. a forked child) retiring first must not
+        // take the family's entries with it while seq 1 is still resident
+        idx.remove_seq(2);
+        assert_eq!(idx.longest_prefix(&toks, 16), Some((1, 32)));
+        // evicting the last holder leaves no entry at all — a miss,
+        // never a stale seq id
+        idx.remove_seq(1);
+        assert_eq!(idx.longest_prefix(&toks, 16), None);
+        assert!(idx.is_empty());
+        // and the opposite order works too (owner first, child survives)
+        idx.insert(3, &toks, 16);
+        idx.insert(4, &toks, 16);
+        idx.remove_seq(3);
+        assert_eq!(idx.longest_prefix(&toks, 16), Some((4, 32)));
+        idx.remove_seq(4);
+        assert!(idx.is_empty());
     }
 
     #[test]

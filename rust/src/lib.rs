@@ -18,11 +18,11 @@
 //!   modeled interconnect (disaggregated serving)
 //! * [`engine`] — continuous-batching engine over simulated H100 ranks
 //!   (a thin wrapper over `cluster` with unified replicas)
-//! * [`runtime`] — PJRT CPU runtime executing the AOT HLO artifacts
-//!   (`pjrt` feature)
+//! * `runtime` — PJRT CPU runtime executing the AOT HLO artifacts
+//!   (compiled only with the `pjrt` feature, hence not linkable here)
 //! * [`server`] — continuous-batching engine over a real step model, plus
 //!   the threaded live server + load generator (`pjrt` feature)
-//! * [`train`] — drives the AOT train-step artifact (`pjrt` feature)
+//! * `train` — drives the AOT train-step artifact (`pjrt` feature only)
 
 pub mod analytical;
 pub mod attention;

@@ -15,6 +15,11 @@
 //!                                nP prefill + nD decode replicas (tp each)
 //!                                under open-loop Poisson arrivals, caches
 //!                                migrating over `nvlink` or `pcie`
+//!   prefix [variant] [tp] [dp] [rate] [families] [prefix_len] [router]
+//!                                prefix-cache-aware admission on a
+//!                                shared-prefix (multi-turn chat) workload:
+//!                                radix-on vs radix-off comparison, hit
+//!                                rate, prefill tokens skipped
 //!
 //! Run `make artifacts` first for `serve`/`train`.
 
@@ -24,7 +29,9 @@ use gla_serve::engine::{run_benchmark, run_benchmark_with};
 use gla_serve::hardware::DeviceModel;
 use gla_serve::parallel::{paper_layouts, shard_plan, LinkTier};
 use gla_serve::sched::{DriveMode, PolicyKind};
-use gla_serve::workload::{generate, generate_open, LengthDist};
+use gla_serve::workload::{
+    generate, generate_open, generate_shared_prefix_open, LengthDist, SharedPrefixSpec,
+};
 
 #[cfg(feature = "pjrt")]
 fn artifacts_dir() -> String {
@@ -40,6 +47,20 @@ fn policy_arg(args: &[String], i: usize) -> PolicyKind {
             })
         })
         .unwrap_or_default()
+}
+
+fn router_arg(args: &[String], i: usize, default: RouterKind) -> RouterKind {
+    args.get(i)
+        .map(|s| {
+            RouterKind::parse(s).unwrap_or_else(|| {
+                eprintln!(
+                    "unknown router `{s}` (try: round-robin least-loaded \
+                     role-aware prefix-affinity)"
+                );
+                std::process::exit(2);
+            })
+        })
+        .unwrap_or(default)
 }
 
 fn main() {
@@ -183,17 +204,7 @@ fn main() {
                     })
                 })
                 .unwrap_or_default();
-            let router = args
-                .get(8)
-                .map(|s| {
-                    RouterKind::parse(s).unwrap_or_else(|| {
-                        eprintln!(
-                            "unknown router `{s}` (try: round-robin least-loaded role-aware)"
-                        );
-                        std::process::exit(2);
-                    })
-                })
-                .unwrap_or(RouterKind::RoleAware);
+            let router = router_arg(&args, 8, RouterKind::RoleAware);
             let m = DSV2;
             let spec = ClusterSpec::disagg(n_p, n_d).with_link(link);
             let mut cluster = Cluster::new(
@@ -231,8 +242,62 @@ fn main() {
                 met.preemptions,
             );
         }
+        "prefix" => {
+            let variant = args.get(2).cloned().unwrap_or_else(|| "gla2".into());
+            let tp: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(2);
+            let dp: usize = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(2);
+            let rate: f64 = args.get(5).and_then(|s| s.parse().ok()).unwrap_or(2.0);
+            if rate <= 0.0 || !rate.is_finite() {
+                eprintln!("rate must be a positive req/s value, got {rate}");
+                std::process::exit(2);
+            }
+            let families: usize = args.get(6).and_then(|s| s.parse().ok()).unwrap_or(4);
+            let prefix_len: usize = args.get(7).and_then(|s| s.parse().ok()).unwrap_or(4096);
+            let router = router_arg(&args, 8, RouterKind::PrefixAffinity);
+            let m = DSV2;
+            let spec = SharedPrefixSpec {
+                n_families: families.max(1),
+                prefix_len: prefix_len.max(1),
+                max_suffix: 1024,
+                decode: 256,
+            };
+            let reqs = generate_shared_prefix_open(spec, 256, 42, rate);
+            let run = |prefix_cache: bool| {
+                let mut serving = ServingConfig::with_parallelism(tp, 1);
+                serving.prefix_cache = prefix_cache;
+                let mut cluster = Cluster::new(
+                    m,
+                    m.variant(&variant),
+                    serving,
+                    DeviceModel::h100_serving(),
+                    &ClusterSpec::unified(dp),
+                    router,
+                    DriveMode::Open,
+                );
+                cluster.submit(&reqs);
+                cluster.run();
+                cluster.metrics
+            };
+            println!(
+                "{variant} TP{tp}xDP{dp} {rate:.2} req/s, {families} families x \
+                 {prefix_len}-token shared prefix ({}):",
+                router.name()
+            );
+            for (label, on) in [("radix off", false), ("radix on ", true)] {
+                let mut met = run(on);
+                let (e2e, ttft, itl, tput) = met.paper_row();
+                println!(
+                    "  {label}: e2e {e2e:.1}s ttft {ttft:.2}s itl {itl:.1}ms \
+                     {tput:.0} tok/s | hit rate {:.0}% | prefill skipped {} tok \
+                     | pages shared {}",
+                    met.prefix_hit_rate() * 100.0,
+                    met.prefill_tokens_skipped,
+                    met.pages_shared,
+                );
+            }
+        }
         other => {
-            eprintln!("unknown command `{other}` (try: info serve train sim qps disagg)");
+            eprintln!("unknown command `{other}` (try: info serve train sim qps disagg prefix)");
             std::process::exit(2);
         }
     }

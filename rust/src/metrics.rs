@@ -102,6 +102,17 @@ pub struct ServiceMetrics {
     pub pages_exported: u64,
     /// pool pages allocated by decode replicas at cache import
     pub pages_imported: u64,
+    /// admissions that probed the prefix-cache radix index (prefix
+    /// caching enabled; the hit-rate denominator)
+    pub prefix_lookups: u64,
+    /// admissions that forked a resident shared prefix instead of
+    /// re-prefilling it
+    pub prefix_hits: u64,
+    /// prompt tokens never prefilled because their pages were forked from
+    /// a resident owner — the work prefix caching saved
+    pub prefill_tokens_skipped: u64,
+    /// pool pages forked (refcount-shared) at admission
+    pub pages_shared: u64,
 }
 
 impl ServiceMetrics {
@@ -110,6 +121,16 @@ impl ServiceMetrics {
             0.0
         } else {
             self.output_tokens as f64 / self.duration
+        }
+    }
+
+    /// Fraction of probed admissions that reused a cached prefix
+    /// (0 when prefix caching is off or nothing was admitted).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / self.prefix_lookups as f64
         }
     }
 
@@ -162,5 +183,13 @@ mod tests {
     fn throughput() {
         let m = ServiceMetrics { output_tokens: 1000, duration: 4.0, ..Default::default() };
         assert_eq!(m.throughput(), 250.0);
+    }
+
+    #[test]
+    fn prefix_hit_rate_guards_zero_lookups() {
+        let m = ServiceMetrics::default();
+        assert_eq!(m.prefix_hit_rate(), 0.0);
+        let m = ServiceMetrics { prefix_lookups: 8, prefix_hits: 6, ..Default::default() };
+        assert_eq!(m.prefix_hit_rate(), 0.75);
     }
 }

@@ -172,14 +172,57 @@ impl Scheduler {
     /// Role-scoped reservation admission: the same rule with the footprint
     /// chosen by the replica's [`AdmitScope`] (the cluster passes
     /// `PrefillOnly` for `Role::Prefill` replicas).
+    ///
+    /// With prefix caching enabled this probes the radix index exactly as
+    /// [`Scheduler::admit`] will, and reserves only the request's
+    /// *residual* footprint — the pages a matched prefix would fork are
+    /// already resident (and accounted to their owner), so a request an
+    /// empty-queue pool could not hold in full may still be admitted when
+    /// most of its prompt is shared.
     pub fn can_admit_scoped(&self, req: &Request, scope: AdmitScope) -> bool {
-        let committed: usize = self
+        // fitting without sharing implies fitting with it (the residual
+        // need only shrinks), so the probe — which materializes and
+        // hashes the whole prompt — runs only when the full footprint is
+        // what blocks admission. A head-of-line request re-checked every
+        // engine pump therefore costs O(prompt) only while the pool is
+        // actually full.
+        if self.fits_residual(req, scope, 0) {
+            return true;
+        }
+        let shared_pages = self
+            .probe_prefix(req)
+            .map_or(0, |(_, m)| m / self.pool.page_size);
+        shared_pages > 0 && self.fits_residual(req, scope, shared_pages)
+    }
+
+    /// The reservation inequality, in free-list terms: the pages every
+    /// live sequence has *yet to take* plus the new request's residual
+    /// need must fit in the free list. With no prefix sharing this is
+    /// algebraically identical to the historic "sum of full footprints vs
+    /// pool total" rule (every resident page then belongs to exactly one
+    /// table); with sharing it stays exact, because refcounted shared
+    /// pages are physical pages counted once, wherever they are resident.
+    pub(crate) fn fits_residual(
+        &self,
+        req: &Request,
+        scope: AdmitScope,
+        shared_pages: usize,
+    ) -> bool {
+        let future: usize = self
             .seqs
             .iter()
-            .map(|s| self.pool.pages_needed(scope.footprint_tokens(&s.req)))
+            .map(|s| {
+                let have = self.pool.table(s.req.id as u64).map_or(0, |t| t.len());
+                self.pool
+                    .pages_needed(scope.footprint_tokens(&s.req))
+                    .saturating_sub(have)
+            })
             .sum();
-        let need = self.pool.pages_needed(scope.footprint_tokens(req));
-        committed + need <= self.pool.pages_total()
+        let need = self
+            .pool
+            .pages_needed(scope.footprint_tokens(req))
+            .saturating_sub(shared_pages);
+        future + need <= self.pool.pages_free()
     }
 }
 

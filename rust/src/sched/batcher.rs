@@ -1,8 +1,11 @@
 //! Batch formation: given the live sequences and the pool, pick what one
 //! engine step runs — a chunked-prefill tile or a decode batch. The
-//! arbitration between the two is delegated to the [`SchedPolicy`]; the
-//! pool-awareness (a prefill chunk is only planned when its pages fit) is
-//! not, because it is a correctness rule, not a preference.
+//! arbitration between the two is delegated to the
+//! [`super::SchedPolicy`]; the pool-awareness (a prefill chunk is only
+//! planned when its pages fit) is not, because it is a correctness rule,
+//! not a preference. A prefix-forked sequence needs no special casing
+//! here: it enters with its chunk cursor already past the shared pages,
+//! so `chunk_of` naturally plans only the residual prompt.
 
 use super::{Phase, Scheduler};
 

@@ -27,7 +27,7 @@ pub use policy::{
     DecodePriority, Fcfs, PolicyKind, PriorityFirst, SchedPolicy, ShortestPromptFirst,
 };
 
-use crate::kvcache::{PageId, PagePool};
+use crate::kvcache::{PageId, PagePool, RadixIndex, SeqId};
 use crate::metrics::ServiceMetrics;
 use crate::workload::Request;
 
@@ -128,6 +128,9 @@ pub struct Scheduler {
     pub(crate) max_batch: usize,
     /// alternate prefill/decode so chunked prefill cannot starve decode
     pub(crate) prefer_decode: bool,
+    /// prefix-cache index over resident sequences (None = prefix caching
+    /// off, the bit-identical legacy admission path)
+    pub(crate) radix: Option<RadixIndex>,
 }
 
 impl Scheduler {
@@ -138,7 +141,29 @@ impl Scheduler {
         max_batch: usize,
     ) -> Self {
         assert!(prefill_chunk >= 1 && max_batch >= 1);
-        Scheduler { seqs: Vec::new(), pool, policy, prefill_chunk, max_batch, prefer_decode: false }
+        Scheduler {
+            seqs: Vec::new(),
+            pool,
+            policy,
+            prefill_chunk,
+            max_batch,
+            prefer_decode: false,
+            radix: None,
+        }
+    }
+
+    /// Enable prefix-cache-aware admission: prompts are indexed in a
+    /// [`RadixIndex`] as their pages materialize, and [`Scheduler::admit`]
+    /// forks matching page-aligned prefixes instead of re-prefilling them.
+    /// A workload with no shared prefixes behaves bit-identically to a
+    /// scheduler without this flag.
+    pub fn with_prefix_cache(mut self) -> Self {
+        self.radix = Some(RadixIndex::new());
+        self
+    }
+
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.radix.is_some()
     }
 
     pub fn n_live(&self) -> usize {
@@ -166,16 +191,97 @@ impl Scheduler {
         self.pool.pages_total() * self.pool.page_size
     }
 
+    /// Prefix-cache probe: the longest page-aligned prefix of `req`'s
+    /// prompt already held by a *resident* sequence, as `(owner, tokens)`.
+    /// `None` when prefix caching is off or nothing reusable matches. The
+    /// match is clamped to (a) leave at least one prompt token to prefill
+    /// (the epilogue must run to emit the first output token) and (b) the
+    /// owner's currently-stored pages — the index may lag a chunked
+    /// prefill in progress, and this is also the residency re-validation
+    /// that makes a stale index entry degrade to a miss rather than a
+    /// fork of freed pages.
+    pub fn probe_prefix(&self, req: &Request) -> Option<(SeqId, usize)> {
+        let radix = self.radix.as_ref()?;
+        if radix.is_empty() {
+            return None; // don't materialize the prompt for a cold index
+        }
+        if req.prompt_len.saturating_sub(1) < self.pool.page_size {
+            return None;
+        }
+        self.probe_prefix_with(&req.prompt_tokens())
+    }
+
+    /// [`Scheduler::probe_prefix`] with pre-materialized prompt tokens —
+    /// for callers that probe several replicas for the same request (the
+    /// prefix-affinity router), so the token stream is generated once.
+    pub fn probe_prefix_with(&self, toks: &[u32]) -> Option<(SeqId, usize)> {
+        let radix = self.radix.as_ref()?;
+        if radix.is_empty() {
+            return None;
+        }
+        let ps = self.pool.page_size;
+        let max_reuse = (toks.len().saturating_sub(1) / ps) * ps;
+        if max_reuse == 0 {
+            return None;
+        }
+        let (owner, matched) = radix.longest_prefix(toks, ps)?;
+        self.pool.table(owner)?;
+        let resident = (self.pool.len_of(owner) / ps) * ps;
+        let m = matched.min(max_reuse).min(resident);
+        if m == 0 {
+            return None;
+        }
+        Some((owner, m))
+    }
+
     /// Admit a request sent at `start_t`, observed now at `now`. The
     /// caller is responsible for checking [`Scheduler::can_admit`] first
     /// (the engine checks the least-loaded replica, the server checks its
     /// only one); admission without the check deliberately over-commits,
     /// which the preemption path then repairs.
+    ///
+    /// Prefix-cache fast path (when enabled via
+    /// [`Scheduler::with_prefix_cache`]): probe the radix index for the
+    /// longest resident page-aligned prefix of the prompt, fork those
+    /// pages from the owner (refcounted sharing, no copy), and enter
+    /// prefill with the chunk cursor already advanced past them — the
+    /// shared tokens are never re-prefilled. [`Scheduler::can_admit`]
+    /// performs the same probe, so the reservation covers only the
+    /// *residual* footprint.
     pub fn admit(&mut self, req: Request, start_t: f64, now: f64, metrics: &mut ServiceMetrics) {
         metrics.queue_wait.record(now - start_t);
+        let mut done = 0;
+        if self.radix.is_some() {
+            metrics.prefix_lookups += 1;
+            // materialize the prompt at most once per admission: the
+            // probe and the fork-time holder registration share it (an
+            // empty slice probes to None for free on a cold index)
+            let toks = match &self.radix {
+                Some(radix) if !radix.is_empty() => req.prompt_tokens(),
+                _ => Vec::new(),
+            };
+            if let Some((owner, m)) = self.probe_prefix_with(&toks) {
+                let forked = self.pool.fork_prefix(owner, req.id as u64, m);
+                debug_assert!(forked, "probe_prefix validated owner residency");
+                if forked {
+                    done = m;
+                    metrics.prefix_hits += 1;
+                    metrics.prefill_tokens_skipped += m as u64;
+                    metrics.pages_shared += (m / self.pool.page_size) as u64;
+                    // register the child as a holder of the shared pages
+                    // RIGHT NOW, not at its first prefill chunk: if the
+                    // owner retires in between, the prefix must stay
+                    // findable through the child that pins it
+                    let ps = self.pool.page_size;
+                    if let Some(radix) = &mut self.radix {
+                        radix.insert(req.id as u64, &toks[..m], ps);
+                    }
+                }
+            }
+        }
         self.seqs.push(SeqState {
             req,
-            phase: Phase::Prefill { done: 0 },
+            phase: Phase::Prefill { done },
             start_t,
             first_token_t: None,
             last_token_t: now,
@@ -202,11 +308,21 @@ impl Scheduler {
         } else {
             self.pool.grow(seq_id, chunk);
         }
-        let s = &mut self.seqs[idx];
-        let done = match s.phase {
+        let done = match self.seqs[idx].phase {
             Phase::Prefill { done } => done + chunk,
             _ => unreachable!("prefill chunk on non-prefilling seq"),
         };
+        if let Some(radix) = &mut self.radix {
+            // index every full page stored so far, chunk by chunk, so a
+            // concurrent admission can fork from a prefill still in
+            // progress (the only sharing window a disaggregated prefill
+            // replica has — it exports, and is evicted from the index, at
+            // the epilogue)
+            let req = &self.seqs[idx].req;
+            let upto = done.min(req.prompt_len);
+            radix.insert(seq_id, &req.prompt_tokens_upto(upto), self.pool.page_size);
+        }
+        let s = &mut self.seqs[idx];
         if done >= s.req.prompt_len {
             // prefill epilogue emits the first token
             s.phase = Phase::Decode { produced: 1 };
@@ -222,13 +338,17 @@ impl Scheduler {
         None
     }
 
-    /// Remove a finished sequence: release its pages and record its
+    /// Remove a finished sequence: release its pages, evict its radix
+    /// entries (the index must never outlive residency) and record its
     /// latency metrics. `idx` is invalidated (swap_remove).
     fn retire(&mut self, idx: usize, now: f64, metrics: &mut ServiceMetrics) -> FinishedSeq {
         let state = self.seqs.swap_remove(idx);
         let seq_id = state.req.id as u64;
         let pages = self.pool.table(seq_id).map(|p| p.to_vec()).unwrap_or_default();
         self.pool.release(seq_id);
+        if let Some(radix) = &mut self.radix {
+            radix.remove_seq(seq_id);
+        }
         metrics.e2e.record(now - state.start_t);
         metrics
             .ttft
@@ -312,6 +432,9 @@ impl Scheduler {
                 .expect("n_decoding > 1 checked");
             let s = self.seqs.swap_remove(youngest_idx);
             self.pool.preempt(s.req.id as u64);
+            if let Some(radix) = &mut self.radix {
+                radix.remove_seq(s.req.id as u64);
+            }
             metrics.preemptions += 1;
             evicted.push((s.req, s.start_t));
         }
@@ -341,6 +464,9 @@ impl Scheduler {
             .pool
             .export(seq_id)
             .expect("exported sequence must hold cache");
+        if let Some(radix) = &mut self.radix {
+            radix.remove_seq(seq_id);
+        }
         metrics.pages_exported += pages.len() as u64;
         (state, kv_tokens)
     }
@@ -350,8 +476,11 @@ impl Scheduler {
     /// still grow to the full `prompt + decode` footprint? Same
     /// reservation rule as [`Scheduler::can_admit`], so a full decode pool
     /// shows up as migration wait rather than mid-decode eviction.
+    /// Deliberately does NOT probe the prefix cache: import materializes
+    /// fresh pages (`PagePool::import`), never forks, so the reservation
+    /// must cover the full footprint.
     pub fn can_import(&self, state: &SeqState) -> bool {
-        self.can_admit(&state.req)
+        self.fits_residual(&state.req, AdmitScope::FullLifetime, 0)
     }
 
     /// Disaggregated handoff, import side: re-admit a migrated sequence
@@ -557,6 +686,141 @@ mod tests {
         assert!(s.can_admit_scoped(&req, AdmitScope::PrefillOnly));
         assert_eq!(AdmitScope::PrefillOnly.footprint_tokens(&req), 48);
         assert_eq!(AdmitScope::FullLifetime.footprint_tokens(&req), 80);
+    }
+
+    #[test]
+    fn prefix_fork_skips_shared_pages_and_counts_metrics() {
+        let mut m = ServiceMetrics::default();
+        let mut s = sched(16, 4, 4).with_prefix_cache();
+        // owner: 8 shared family tokens + 4 own, 3 chunks of 4
+        let a = Request::new(1, 12, 4).with_shared_prefix(77, 8);
+        s.admit(a, 0.0, 0.0, &mut m);
+        assert_eq!(m.prefix_lookups, 1);
+        assert_eq!(m.prefix_hits, 0, "empty index cannot hit");
+        for t in 0..3 {
+            assert!(s.complete_prefill(0, 4, 1.0 + t as f64, &mut m).is_none() || t == 2);
+        }
+        assert_eq!(s.seqs()[0].phase, Phase::Decode { produced: 1 });
+        // family-mate: the 2 shared pages fork, only the suffix prefills
+        let b = Request::new(2, 12, 4).with_shared_prefix(77, 8);
+        s.admit(b, 0.0, 4.0, &mut m);
+        assert_eq!(m.prefix_lookups, 2);
+        assert_eq!(m.prefix_hits, 1);
+        assert_eq!(m.prefill_tokens_skipped, 8);
+        assert_eq!(m.pages_shared, 2);
+        assert_eq!(s.seqs()[1].phase, Phase::Prefill { done: 8 });
+        assert_eq!(s.pool().table(2).unwrap(), &s.pool().table(1).unwrap()[..2]);
+        s.pool().check_invariants().unwrap();
+        // drive both to completion; shared pages must unwind cleanly
+        let mut t = 5.0;
+        loop {
+            match s.plan() {
+                Work::Idle => break,
+                Work::PrefillChunk { idx, chunk } => {
+                    let _ = s.complete_prefill(idx, chunk, t, &mut m);
+                }
+                Work::DecodeBatch { idxs } => {
+                    s.complete_decode(&idxs, t, &mut m);
+                }
+            }
+            t += 1.0;
+        }
+        assert!(s.is_idle());
+        assert_eq!(m.e2e.len(), 2);
+        assert_eq!(m.output_tokens, 8);
+        assert_eq!(s.pool().pages_free(), s.pool().pages_total());
+        s.pool().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn residual_reservation_admits_what_sharing_makes_fit() {
+        let mut m = ServiceMetrics::default();
+        // 6 pages of 4 tokens; owner reserves 3 (8 prompt + 2 decode)
+        let mut s = sched(6, 4, 8192).with_prefix_cache();
+        let owner = Request::new(1, 8, 2).with_shared_prefix(5, 8);
+        s.admit(owner, 0.0, 0.0, &mut m);
+        let _ = s.complete_prefill(0, 8, 1.0, &mut m);
+        // family-mate needs 4 pages in full but only 2 residual: without
+        // sharing it cannot fit (1 future + 4 > 4 free), with it it can
+        let mate = Request::new(2, 12, 2).with_shared_prefix(5, 8);
+        assert!(s.can_admit(&mate), "residual footprint must fit");
+        let stranger = Request::new(3, 12, 2).with_shared_prefix(6, 8);
+        assert!(!s.can_admit(&stranger), "no share, full footprint, no room");
+        // the probe can_admit ran is the fork admit performs
+        s.admit(mate, 0.0, 2.0, &mut m);
+        assert_eq!(m.prefix_hits, 1);
+        // the fork itself takes no new pages — the 2 shared pages are
+        // refcounted against the owner's table
+        assert_eq!(s.pool().pages_free(), 4);
+        let _ = s.complete_prefill(1, 4, 3.0, &mut m); // suffix page
+        assert_eq!(s.pool().pages_free(), 3);
+        s.pool().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn released_owner_never_serves_a_stale_fork() {
+        let mut m = ServiceMetrics::default();
+        let mut s = sched(16, 4, 8192).with_prefix_cache();
+        // owner retires at the prefill epilogue (decode budget 1):
+        // release must evict its radix entries with it
+        let owner = Request::new(1, 8, 1).with_shared_prefix(9, 8);
+        s.admit(owner, 0.0, 0.0, &mut m);
+        assert!(s.complete_prefill(0, 8, 1.0, &mut m).is_some());
+        assert!(s.is_idle());
+        assert_eq!(s.pool().pages_free(), s.pool().pages_total());
+        // a matching prompt admitted after the release: full prefill, no
+        // fork, nothing resident to fork from
+        let mate = Request::new(2, 12, 2).with_shared_prefix(9, 8);
+        assert!(s.probe_prefix(&mate).is_none(), "stale owner must not match");
+        s.admit(mate, 0.0, 2.0, &mut m);
+        assert_eq!(m.prefix_hits, 0);
+        assert_eq!(m.prefill_tokens_skipped, 0);
+        assert_eq!(s.seqs()[0].phase, Phase::Prefill { done: 0 });
+        s.pool().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn forked_child_keeps_the_prefix_findable_after_owner_retires() {
+        // the fork-window regression: B forks A's prefix but has not
+        // prefilled a single chunk yet; A then retires. The shared pages
+        // are still resident (pinned by B), so a third family-mate must
+        // still find them — B was registered as a holder at fork time.
+        let mut m = ServiceMetrics::default();
+        let mut s = sched(16, 4, 8192).with_prefix_cache();
+        let a = Request::new(1, 8, 2).with_shared_prefix(11, 8);
+        s.admit(a, 0.0, 0.0, &mut m);
+        let _ = s.complete_prefill(0, 8, 1.0, &mut m); // epilogue, produced 1
+        let b = Request::new(2, 12, 2).with_shared_prefix(11, 8);
+        s.admit(b, 0.0, 2.0, &mut m);
+        assert_eq!(m.prefix_hits, 1);
+        assert_eq!(s.seqs()[1].phase, Phase::Prefill { done: 8 });
+        // one decode step spends A's budget; A retires and leaves the
+        // radix — but the shared pages survive via B's refcounts
+        let fin = s.complete_decode(&[0], 3.0, &mut m);
+        assert_eq!(fin.len(), 1);
+        assert_eq!(fin[0].state.req.id, 1);
+        s.pool().check_invariants().unwrap();
+        let c = Request::new(3, 12, 2).with_shared_prefix(11, 8);
+        assert_eq!(
+            s.probe_prefix(&c),
+            Some((2, 8)),
+            "the fork window must not orphan a resident prefix"
+        );
+    }
+
+    #[test]
+    fn exported_owner_is_evicted_from_the_radix() {
+        let mut m = ServiceMetrics::default();
+        let mut s = sched(16, 4, 8192).with_prefix_cache();
+        let owner = Request::new(1, 8, 4).with_shared_prefix(4, 8);
+        s.admit(owner, 0.0, 0.0, &mut m);
+        let _ = s.complete_prefill(0, 8, 1.0, &mut m);
+        let mate = Request::new(2, 12, 4).with_shared_prefix(4, 8);
+        assert!(s.probe_prefix(&mate).is_some(), "resident owner matches");
+        // the cache leaves this replica over the interconnect -> evict
+        let _ = s.export_seq(0, &mut m);
+        assert!(s.probe_prefix(&mate).is_none(), "exported owner must not match");
+        s.pool().check_invariants().unwrap();
     }
 
     #[test]

@@ -4,9 +4,13 @@
 //! [`super::Scheduler`] leaves open: which queued request to admit next,
 //! which admissible sequence to prefill next, and whether a ready decode
 //! batch runs before a pending prefill chunk. Everything else — paged-KV
-//! admission control, chunking, phase transitions, preemption — is policy-
-//! independent and lives in the scheduler itself, so a policy validated in
-//! the virtual-time simulator runs unchanged against real tokens.
+//! admission control, prefix-cache forking, chunking, phase transitions,
+//! preemption — is policy-independent and lives in the scheduler itself,
+//! so a policy validated in the virtual-time simulator runs unchanged
+//! against real tokens. (Prefix reuse composes transparently: a policy
+//! orders requests, and whatever is admitted probes the radix index the
+//! same way — a forked sequence simply enters prefill with fewer tokens
+//! owed, which `spf`'s remaining-work ordering accounts for naturally.)
 //!
 //! All policies are deterministic: identical policy + workload seed must
 //! reproduce identical virtual-time metrics (the benches assert this).

@@ -7,8 +7,9 @@
 //!
 //! The engine is generic over [`StepModel`] so the scheduling path is
 //! compiled and tested without any accelerator runtime; the PJRT-backed
-//! [`TinyModel`] (the `tiny` artifact config, see python/compile/configs.py)
-//! implements it behind the `pjrt` feature. Batch slots are fixed at the
+//! `TinyModel` (the `tiny` artifact config, see python/compile/configs.py;
+//! only compiled — and hence only linkable in docs — with the `pjrt`
+//! feature) implements it behind that feature. Batch slots are fixed at the
 //! artifact's lowered batch size; the scheduler's page pool is sized one
 //! page per slot (`page_size = max_len`), so paged-KV reservation admission
 //! degenerates to exactly slot admission and `page table[0]` *is* the
@@ -57,8 +58,8 @@ impl HostTensor {
 
 /// What the continuous-batching engine needs from an executable model:
 /// fixed-shape batched prefill and one fused decode step over a pair of
-/// host-resident cache tensors. [`TinyModel`] implements this over PJRT;
-/// tests implement it with a deterministic mock.
+/// host-resident cache tensors. The `pjrt`-gated `TinyModel` implements
+/// this over PJRT; tests implement it with a deterministic mock.
 pub trait StepModel {
     fn batch(&self) -> usize;
     fn prefill_t(&self) -> usize;

@@ -61,16 +61,74 @@ pub struct Request {
     /// workload generator builds requests) keeps every existing bench
     /// bit-identical; the SLO/deadline work on the ROADMAP builds on this.
     pub priority: u8,
+    /// prompt-content identity for prefix caching: the first
+    /// [`Request::shared_len`] prompt tokens are drawn from the `family`
+    /// stream (requests of the same family share them verbatim), the rest
+    /// from the request's own id-seeded stream. With `shared_len == 0`
+    /// (the default) every prompt is unique and the radix index can never
+    /// match, which keeps every pre-existing workload bit-identical.
+    pub family: u64,
+    /// tokens of the prompt drawn from the family stream (see `family`)
+    pub shared_len: usize,
 }
+
+/// Domain-separation salts so the family stream and a request's own
+/// stream can never collide positionally even when `family == id`.
+const FAMILY_SALT: u64 = 0xA5A5_5A5A_0F0F_F0F0;
+const SUFFIX_SALT: u64 = 0x3C3C_C3C3_9696_6969;
 
 impl Request {
     pub fn new(id: usize, prompt_len: usize, decode_len: usize) -> Self {
-        Request { id, prompt_len, decode_len, arrival_t: 0.0, priority: 0 }
+        Request {
+            id,
+            prompt_len,
+            decode_len,
+            arrival_t: 0.0,
+            priority: 0,
+            family: id as u64,
+            shared_len: 0,
+        }
     }
 
     pub fn with_priority(mut self, priority: u8) -> Self {
         self.priority = priority;
         self
+    }
+
+    /// Mark the first `shared_len` prompt tokens as drawn from `family`'s
+    /// stream — requests of the same family share exactly that prefix.
+    pub fn with_shared_prefix(mut self, family: u64, shared_len: usize) -> Self {
+        self.family = family;
+        self.shared_len = shared_len.min(self.prompt_len);
+        self
+    }
+
+    /// Materialize the prompt's token ids (deterministic by `family`/`id`;
+    /// 16-bit vocab). This is what the radix prefix index hashes: two
+    /// requests of the same family agree on their first
+    /// `min(shared_len_a, shared_len_b)` tokens and then diverge into
+    /// their own id-seeded streams.
+    pub fn prompt_tokens(&self) -> Vec<u32> {
+        self.prompt_tokens_upto(self.prompt_len)
+    }
+
+    /// The first `n` prompt tokens only. The streams are prefix-stable,
+    /// so this equals `prompt_tokens()[..n]` without generating the tail
+    /// — chunked prefill indexes a growing prefix without re-paying the
+    /// whole prompt each chunk.
+    pub fn prompt_tokens_upto(&self, n: usize) -> Vec<u32> {
+        let n = n.min(self.prompt_len);
+        let shared = self.shared_len.min(n);
+        let mut out = Vec::with_capacity(n);
+        let mut fam = Rng::new(self.family ^ FAMILY_SALT);
+        for _ in 0..shared {
+            out.push((fam.next_u64() & 0xFFFF) as u32);
+        }
+        let mut own = Rng::new(self.id as u64 ^ SUFFIX_SALT);
+        for _ in shared..n {
+            out.push((own.next_u64() & 0xFFFF) as u32);
+        }
+        out
     }
 }
 
@@ -107,19 +165,72 @@ pub fn generate(dist: LengthDist, n: usize, seed: u64) -> Vec<Request> {
         .collect()
 }
 
-/// Open-loop workload: the same length distribution, plus a Poisson
-/// arrival schedule at `rate_qps` requests/second (exponential
-/// inter-arrival times from an independently-seeded stream, so lengths
-/// stay identical to the closed-loop `generate` of the same seed).
-/// Arrivals are monotone — `sched::WaitQueue::open` relies on that.
-pub fn generate_open(dist: LengthDist, n: usize, seed: u64, rate_qps: f64) -> Vec<Request> {
-    let mut reqs = generate(dist, n, seed);
+/// Stamp a Poisson arrival schedule at `rate_qps` requests/second onto
+/// `reqs` (exponential inter-arrival times from an independently-seeded
+/// stream, so lengths stay identical to the un-stamped workload of the
+/// same seed). Arrivals are strictly increasing — `sched::WaitQueue::open`
+/// relies on that.
+pub fn stamp_poisson_arrivals(reqs: &mut [Request], seed: u64, rate_qps: f64) {
     let mut rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
     let mut t = 0.0;
-    for r in &mut reqs {
+    for r in reqs {
         t += rng.exp(rate_qps);
         r.arrival_t = t;
     }
+}
+
+/// Open-loop workload: the same length distribution, plus a Poisson
+/// arrival schedule at `rate_qps` requests/second.
+pub fn generate_open(dist: LengthDist, n: usize, seed: u64, rate_qps: f64) -> Vec<Request> {
+    let mut reqs = generate(dist, n, seed);
+    stamp_poisson_arrivals(&mut reqs, seed, rate_qps);
+    reqs
+}
+
+/// Shared-prefix (RadixAttention-style) workload shape: `n_families`
+/// prompt families, each opening with the same `prefix_len`-token system
+/// prompt / conversation head, followed by a per-request unique suffix —
+/// the multi-turn-chat pattern prefix caching exists for (Zheng et al.
+/// 2024). `prefix_len / (prefix_len + mean suffix)` is the share ratio
+/// the prefix-cache bench sweeps.
+#[derive(Debug, Clone, Copy)]
+pub struct SharedPrefixSpec {
+    /// distinct prompt families (system prompts) in the mix
+    pub n_families: usize,
+    /// shared tokens at the head of every prompt in a family
+    pub prefix_len: usize,
+    /// per-request unique suffix, uniform in `[1, max_suffix]`
+    pub max_suffix: usize,
+    /// decode budget per request
+    pub decode: usize,
+}
+
+/// Deterministic shared-prefix workload: `n` requests, each assigned a
+/// uniform-random family and a unique suffix. The family token streams
+/// are derived from `seed`, so different seeds share nothing across runs
+/// while requests within one run share exactly their family prefix.
+pub fn generate_shared_prefix(spec: SharedPrefixSpec, n: usize, seed: u64) -> Vec<Request> {
+    assert!(spec.n_families >= 1 && spec.prefix_len >= 1 && spec.max_suffix >= 1);
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|id| {
+            let fam = rng.range(0, spec.n_families - 1) as u64;
+            let suffix = rng.range(1, spec.max_suffix);
+            Request::new(id, spec.prefix_len + suffix, spec.decode)
+                .with_shared_prefix(seed.rotate_left(17) ^ (fam + 1), spec.prefix_len)
+        })
+        .collect()
+}
+
+/// Shared-prefix workload with open-loop Poisson arrivals at `rate_qps`.
+pub fn generate_shared_prefix_open(
+    spec: SharedPrefixSpec,
+    n: usize,
+    seed: u64,
+    rate_qps: f64,
+) -> Vec<Request> {
+    let mut reqs = generate_shared_prefix(spec, n, seed);
+    stamp_poisson_arrivals(&mut reqs, seed, rate_qps);
     reqs
 }
 
@@ -184,6 +295,58 @@ mod tests {
         assert!((mean_gap - 0.25).abs() < 0.03, "mean gap {mean_gap} vs 1/4 s");
         // closed-loop requests carry no arrival stamp
         assert!(closed.iter().all(|r| r.arrival_t == 0.0));
+    }
+
+    #[test]
+    fn prompt_tokens_share_exactly_the_family_prefix() {
+        let a = Request::new(1, 100, 8).with_shared_prefix(7, 64);
+        let b = Request::new(2, 80, 8).with_shared_prefix(7, 64);
+        let (ta, tb) = (a.prompt_tokens(), b.prompt_tokens());
+        assert_eq!(ta.len(), 100);
+        assert_eq!(tb.len(), 80);
+        assert_eq!(ta[..64], tb[..64], "family prefix must match verbatim");
+        assert_ne!(ta[64..80], tb[64..80], "suffixes must diverge immediately");
+        // a different family shares nothing
+        let c = Request::new(3, 100, 8).with_shared_prefix(8, 64);
+        assert_ne!(c.prompt_tokens()[..64], ta[..64]);
+        // default requests have unique prompts and are reproducible
+        let d = Request::new(1, 100, 8);
+        assert_eq!(d.prompt_tokens(), Request::new(1, 100, 8).prompt_tokens());
+        assert_ne!(d.prompt_tokens()[..64], ta[..64]);
+        // shared_len clamps to the prompt
+        let e = Request::new(4, 10, 1).with_shared_prefix(7, 64);
+        assert_eq!(e.shared_len, 10);
+        assert_eq!(e.prompt_tokens()[..10], ta[..10]);
+    }
+
+    #[test]
+    fn shared_prefix_workload_is_deterministic_and_well_formed() {
+        let spec = SharedPrefixSpec {
+            n_families: 4,
+            prefix_len: 512,
+            max_suffix: 128,
+            decode: 64,
+        };
+        let reqs = generate_shared_prefix(spec, 200, 9);
+        assert_eq!(reqs, generate_shared_prefix(spec, 200, 9));
+        assert_ne!(reqs, generate_shared_prefix(spec, 200, 10));
+        let mut families = std::collections::HashSet::new();
+        for r in &reqs {
+            assert_eq!(r.shared_len, 512);
+            assert!(r.prompt_len > 512 && r.prompt_len <= 512 + 128);
+            assert_eq!(r.decode_len, 64);
+            families.insert(r.family);
+        }
+        assert_eq!(families.len(), 4, "all families should appear in 200 draws");
+        // open-loop variant stamps strictly increasing arrivals
+        let open = generate_shared_prefix_open(spec, 200, 9, 4.0);
+        let mut prev = 0.0;
+        for (o, r) in open.iter().zip(&reqs) {
+            assert!(o.arrival_t > prev);
+            prev = o.arrival_t;
+            assert_eq!(o.prompt_len, r.prompt_len);
+            assert_eq!(o.family, r.family);
+        }
     }
 
     #[test]

@@ -11,7 +11,9 @@ use gla_serve::hardware::DeviceModel;
 use gla_serve::kvcache::{PagePool, PageStore, RadixIndex};
 use gla_serve::metrics::ServiceMetrics;
 use gla_serve::sched::{DriveMode, PolicyKind, Scheduler, Work};
-use gla_serve::workload::{generate, generate_open, LengthDist, Request, Rng};
+use gla_serve::workload::{
+    generate, generate_open, generate_shared_prefix, LengthDist, Request, Rng, SharedPrefixSpec,
+};
 
 fn variants(rng: &mut Rng) -> Variant {
     let names = ["mha", "mqa", "gqa4", "gqa8", "gta4", "gta8", "mla", "gla2", "gla4", "gla8"];
@@ -326,6 +328,144 @@ fn prop_radix_prefix_is_page_aligned_and_correct() {
 }
 
 #[test]
+fn prop_radix_reuse_never_forks_from_a_released_owner() {
+    // Random admit/step/preempt interleavings over shared-prefix
+    // workloads, with prefix caching on: the pool invariants hold at
+    // every step, and every fork is backed by a *resident* owner — the
+    // child's shared pages appear verbatim at the head of some other
+    // live sequence's table at fork time. Admission stays reservation-
+    // gated (which guarantees the drain loop always makes progress);
+    // preempt_for_decode runs every non-admit step exactly as the engine
+    // does, and owners constantly retire mid-run, so stale-index reuse
+    // would be caught here.
+    let mut rng = Rng::new(0x4AD1);
+    let mut total_hits = 0u64;
+    for case in 0..25 {
+        let ps = [1usize, 4, 16][rng.range(0, 2)];
+        let n_pages = rng.range(24, 96);
+        let mut sched = Scheduler::new(
+            PagePool::new(n_pages, ps),
+            PolicyKind::Fcfs.build(),
+            rng.range(2, 16),
+            rng.range(1, 8),
+        )
+        .with_prefix_cache();
+        let mut metrics = ServiceMetrics::default();
+        let spec = SharedPrefixSpec {
+            n_families: rng.range(1, 3),
+            prefix_len: ps * rng.range(1, 4),
+            max_suffix: rng.range(1, 2 * ps + 4),
+            decode: rng.range(1, 6),
+        };
+        let reqs = generate_shared_prefix(spec, 40, case as u64 + 1);
+        let mut next = 0usize;
+        let mut t = 0.0f64;
+        let mut steps = 0usize;
+        while next < reqs.len() || !sched.is_idle() {
+            t += 1.0;
+            steps += 1;
+            assert!(steps < 30_000, "case {case}: livelocked");
+            let op = rng.range(0, 3);
+            let mut admitted = false;
+            if op <= 1 && next < reqs.len() {
+                let req = reqs[next];
+                if sched.can_admit(&req) {
+                    next += 1;
+                    admitted = true;
+                    let shared_before = metrics.pages_shared;
+                    sched.admit(req, t, t, &mut metrics);
+                    let forked = (metrics.pages_shared - shared_before) as usize;
+                    if forked > 0 {
+                        let child = req.id as u64;
+                        let ct = sched.pool().table(child).unwrap().to_vec();
+                        let backed = sched.seqs().iter().any(|s| {
+                            let sid = s.req.id as u64;
+                            sid != child
+                                && sched.pool().table(sid).is_some_and(|pt| {
+                                    pt.len() >= forked && pt[..forked] == ct[..forked]
+                                })
+                        });
+                        assert!(backed, "case {case}: fork without a resident owner");
+                    }
+                }
+            }
+            if !admitted {
+                // the engine contract: relieve pool pressure, then run one
+                // planned step (evicted requests are dropped — this
+                // property is about pages, not completion counts)
+                let _ = sched.preempt_for_decode(&mut metrics);
+                match sched.plan() {
+                    Work::Idle => {}
+                    Work::PrefillChunk { idx, chunk } => {
+                        let _ = sched.complete_prefill(idx, chunk, t, &mut metrics);
+                    }
+                    Work::DecodeBatch { idxs } => {
+                        sched.complete_decode(&idxs, t, &mut metrics);
+                    }
+                }
+            }
+            sched
+                .pool()
+                .check_invariants()
+                .unwrap_or_else(|e| panic!("case {case} step {steps}: {e}"));
+        }
+        assert_eq!(
+            sched.pool().pages_free(),
+            sched.pool().pages_total(),
+            "case {case}: leaked pages"
+        );
+        assert_eq!(metrics.prefix_lookups, metrics.queue_wait.len() as u64);
+        total_hits += metrics.prefix_hits;
+    }
+    // shared-prefix workloads with overlapping residency must actually
+    // exercise the fast path somewhere across the 25 cases
+    assert!(total_hits > 0, "the property never exercised a fork");
+}
+
+#[test]
+fn prop_prefix_cache_is_inert_on_zero_share_workloads() {
+    // With no shared prefixes the radix-enabled engine must reproduce
+    // the radix-off engine bit for bit, across drives, variants and
+    // offered rates — the zero-share path is the legacy path.
+    let mut rng = Rng::new(0x12E47);
+    for case in 0..6 {
+        let m = DSV2;
+        let dist = LengthDist::RandomRatio { max_prompt: 8192, max_decode: 256, ratio: 0.1 };
+        let n = rng.range(8, 24);
+        let rate = [0.5f64, 2.0, 10.0][rng.range(0, 2)];
+        let variant = ["gla2", "gqa4", "mla"][rng.range(0, 2)];
+        let reqs = generate_open(dist, n, case as u64 + 7, rate);
+        let run = |prefix_cache: bool| {
+            let mut serving = ServingConfig::with_parallelism(2, 1).open_loop();
+            serving.prefix_cache = prefix_cache;
+            run_benchmark_with(
+                m,
+                m.variant(variant),
+                serving,
+                DeviceModel::h100_serving(),
+                &reqs,
+            )
+        };
+        let mut off = run(false);
+        let mut on = run(true);
+        assert_eq!(on.prefix_hits, 0, "case {case}: unique prompts cannot hit");
+        assert_eq!(on.prefill_tokens_skipped, 0, "case {case}");
+        assert_eq!(on.pages_shared, 0, "case {case}");
+        assert_eq!(on.duration, off.duration, "case {case}: duration drifted");
+        assert_eq!(on.ttft.median(), off.ttft.median(), "case {case}");
+        assert_eq!(on.e2e.median(), off.e2e.median(), "case {case}");
+        assert_eq!(on.itl.median(), off.itl.median(), "case {case}");
+        assert_eq!(on.output_tokens, off.output_tokens, "case {case}");
+        assert_eq!(on.preemptions, off.preemptions, "case {case}");
+        assert_eq!(
+            on.queue_wait.median(),
+            off.queue_wait.median(),
+            "case {case}"
+        );
+    }
+}
+
+#[test]
 fn prop_disagg_migration_conserves_pages() {
     // Migration conservation: pages exported by prefill replicas ==
     // pages imported by decode replicas + pages of preempted-in-flight
@@ -374,7 +514,7 @@ fn prop_disagg_migration_conserves_pages() {
             serving,
             DeviceModel::h100_serving(),
             &ClusterSpec::disagg(n_p, n_d),
-            RouterKind::all()[rng.range(0, 2)],
+            RouterKind::all()[rng.range(0, RouterKind::all().len() - 1)],
             drive,
         );
         assert!(
