@@ -1,0 +1,169 @@
+//! Fused chunked-prefill + decode steps (token-budget batcher) vs the
+//! alternating baseline: the ITL/TTFT trade the ROADMAP asked to
+//! *measure* rather than assume.
+//!
+//! Why fusion should win on ITL (§3 roofline): a decode step is
+//! bandwidth-bound (KV reads) and a prefill tile compute-bound, so a
+//! fused step prices its attention as the **max** of the two parts
+//! instead of their sum, shares one FFN/weight-streaming pass across all
+//! new tokens, and — the scheduling half — streaming sequences emit a
+//! token on *every* step instead of waiting out each interleaved prefill
+//! step. GQA-4 and GLA-2 diverge exactly through the decode-bytes term:
+//! GQA-4 loads ~1.8x the KV bytes per context token, so its decode part
+//! pokes out from under the prefill tile sooner.
+//!
+//! What the bench asserts on every run (the recorded contract):
+//! * part 1 — at the highest pre-knee QPS point (per variant), fusion
+//!   strictly lowers mean ITL; any TTFT regression is printed, never
+//!   asserted away; requests/tokens are conserved at every swept point;
+//! * part 2 — fusion OFF is byte-identical (full metrics struct, `==`)
+//!   to the alternating path on both `sched_policies` seeds (closed
+//!   imbalanced-mix seed 11, open-loop seed 42) — the inertness half;
+//! * part 3 — fused runs reproduce bit-identically from the same seed.
+//!
+//!     cargo bench --bench prefill_fusion
+
+use gla_serve::config::{ServingConfig, DSV2};
+use gla_serve::engine::{run_benchmark, run_benchmark_with};
+use gla_serve::hardware::DeviceModel;
+use gla_serve::metrics::ServiceMetrics;
+use gla_serve::workload::{generate, generate_open, LengthDist};
+
+const N: usize = 160;
+const SEED: u64 = 42;
+/// the sched_policies QPS sweep grid, minus the arrival-dominated tail
+const QPS_SWEEP: [f64; 4] = [0.5, 1.0, 2.0, 4.0];
+/// queue-wait median above this marks the knee (saturation onset)
+const KNEE_WAIT_S: f64 = 2.0;
+/// the §5.2-style mixed load of benches/sched_policies.rs part 1
+const IMBALANCED: LengthDist =
+    LengthDist::ImbalancedMix { short: 2048, long: 131_072, decode: 1024, every: 4 };
+
+fn serving(fusion: bool) -> ServingConfig {
+    let mut s = ServingConfig::with_parallelism(8, 1).open_loop();
+    s.fusion = fusion;
+    s
+}
+
+fn open(variant: &str, qps: f64, fusion: bool) -> ServiceMetrics {
+    let m = DSV2;
+    run_benchmark_with(
+        m,
+        m.variant(variant),
+        serving(fusion),
+        DeviceModel::h100_serving(),
+        &generate_open(LengthDist::Fixed { prompt: 8192, decode: 1024 }, N, SEED, qps),
+    )
+}
+
+fn main() {
+    println!(
+        "prefill_fusion — DSV2 (236B/21B FP8), 8xH100, 8K/1K open loop, \
+         n {N}, step budget 8192 tokens"
+    );
+
+    println!("\n[1] fused vs alternating x QPS x variant");
+    println!(
+        "{:<6} {:>6} {:>6} {:>13} {:>13} {:>12} {:>12} {:>10}",
+        "var", "req/s", "mode", "ITL p50(ms)", "ITL p99(ms)", "ITL mean(ms)", "TTFT p50(s)", "tok/s"
+    );
+    for variant in ["gqa4", "gla2"] {
+        // highest pre-knee point: the top swept rate whose *alternating*
+        // queue-wait median stays under the knee threshold (fall back to
+        // the lowest rate if the whole sweep saturates)
+        let mut knee_qps = QPS_SWEEP[0];
+        let mut knee: Option<(ServiceMetrics, ServiceMetrics)> = None;
+        for &qps in &QPS_SWEEP {
+            let mut off = open(variant, qps, false);
+            let on = open(variant, qps, true);
+            assert_eq!(off.e2e.len(), N, "{variant}@{qps}: lost requests (off)");
+            assert_eq!(on.e2e.len(), N, "{variant}@{qps}: lost requests (on)");
+            assert_eq!(
+                on.output_tokens, off.output_tokens,
+                "{variant}@{qps}: fusion changed the token count"
+            );
+            let pre_knee = off.queue_wait.median() < KNEE_WAIT_S;
+            for (mode, met) in [("off", &off), ("on", &on)] {
+                let mut m = met.clone();
+                println!(
+                    "{variant:<6} {qps:>6.2} {mode:>6} {:>13.1} {:>13.1} {:>12.1} {:>12.2} {:>10.0}",
+                    m.itl.median() * 1e3,
+                    m.itl.p99() * 1e3,
+                    m.itl.mean() * 1e3,
+                    m.ttft.median(),
+                    m.throughput(),
+                );
+            }
+            if pre_knee {
+                knee_qps = qps;
+                knee = Some((off, on));
+            }
+        }
+        let (mut off, mut on) = knee.unwrap_or_else(|| {
+            (open(variant, QPS_SWEEP[0], false), open(variant, QPS_SWEEP[0], true))
+        });
+        assert!(
+            on.itl.mean() < off.itl.mean(),
+            "{variant}: fusion must strictly lower mean ITL at the highest \
+             pre-knee point ({knee_qps} req/s): {:.2}ms vs {:.2}ms",
+            on.itl.mean() * 1e3,
+            off.itl.mean() * 1e3
+        );
+        let d_ttft = on.ttft.median() - off.ttft.median();
+        if d_ttft > 0.0 {
+            println!(
+                "{variant}: TTFT regression at {knee_qps} req/s: +{d_ttft:.3}s \
+                 (median {:.2}s -> {:.2}s) — the measured cost of the ITL win",
+                off.ttft.median(),
+                on.ttft.median()
+            );
+        } else {
+            println!(
+                "{variant}: no TTFT regression at {knee_qps} req/s \
+                 ({:.2}s -> {:.2}s)",
+                off.ttft.median(),
+                on.ttft.median()
+            );
+        }
+        println!();
+    }
+
+    println!("[2] inertness: fusion off == the alternating path, byte for byte");
+    let m = DSV2;
+    // seed 11, closed-loop imbalanced mix — sched_policies part 1
+    let closed_reqs = generate(IMBALANCED, 96, 11);
+    let closed = |serving: ServingConfig| {
+        run_benchmark(
+            m,
+            m.variant("gla2"),
+            serving,
+            DeviceModel::h100_serving(),
+            &closed_reqs,
+            32,
+        )
+    };
+    let legacy = closed(ServingConfig::with_parallelism(8, 1));
+    let mut explicit_off = ServingConfig::with_parallelism(8, 1);
+    explicit_off.fusion = false;
+    explicit_off.max_step_tokens = 4096; // must be dead config when off
+    let off = closed(explicit_off);
+    assert_eq!(off, legacy, "fusion=off drifted from the alternating batcher (closed, seed 11)");
+    // seed 42, open loop — sched_policies part 2: the budget knob must be
+    // completely dead while fusion is off
+    let a = open("gqa4", 1.0, false);
+    let b = run_benchmark_with(
+        m,
+        m.variant("gqa4"),
+        serving(false).with_step_budget(1),
+        DeviceModel::h100_serving(),
+        &generate_open(LengthDist::Fixed { prompt: 8192, decode: 1024 }, N, SEED, 1.0),
+    );
+    assert_eq!(a, b, "max_step_tokens leaked into the fusion-off path (open, seed 42)");
+    println!("fusion-off metrics are byte-identical to the alternating path ✓");
+
+    println!("\n[3] determinism: fused run twice (gla2, 1 req/s, seed {SEED})");
+    let x = open("gla2", 1.0, true);
+    let y = open("gla2", 1.0, true);
+    assert_eq!(x, y, "fused schedule drifted between identical runs");
+    println!("same seed reproduced bit-identically ✓");
+}

@@ -138,6 +138,9 @@ impl Cluster {
                 if serving.prefix_cache && role.admits_new() {
                     sched = sched.with_prefix_cache();
                 }
+                if serving.fusion {
+                    sched = sched.with_fusion(serving.max_step_tokens);
+                }
                 ClusterReplica::new(role, sched)
             })
             .collect();
@@ -283,6 +286,39 @@ impl Cluster {
                         .tp_step_time(self.model.n_layers, idxs.len(), self.model.d_model, 2, tp);
                 (t, idxs.len())
             }
+            Work::Mixed { decode, prefill } => {
+                // fused-step pricing: the prefill tile is compute-bound
+                // and the decode KV reads are bandwidth-bound (§3), so
+                // on one device they overlap — the attention side is the
+                // max of the two parts, not their sum. This is exactly
+                // where the variants diverge: GQA-4 loads ~2x the decode
+                // bytes of GLA-2 per context token, so its decode part
+                // pokes out from under the prefill tile first. The TP
+                // collective and (in `duration`) the FFN pass carry all
+                // new tokens once — the other half of the fusion win.
+                let prefill_t: f64 = prefill
+                    .iter()
+                    .map(|&(idx, chunk)| {
+                        let ctx = seqs[idx].ctx_len() + chunk;
+                        self.device
+                            .prefill_attn_time(&self.model, &self.variant, chunk, ctx, tp)
+                    })
+                    .sum();
+                let decode_t = if decode.is_empty() {
+                    0.0
+                } else {
+                    let lens: Vec<usize> =
+                        decode.iter().map(|&i| seqs[i].ctx_len()).collect();
+                    self.device
+                        .attn_decode_time(&self.model, &self.variant, &lens, 1, tp)
+                };
+                let tokens = work.new_tokens();
+                let t = prefill_t.max(decode_t)
+                    + self
+                        .coll
+                        .tp_step_time(self.model.n_layers, tokens, self.model.d_model, 2, tp);
+                (t, tokens)
+            }
         }
     }
 
@@ -312,6 +348,9 @@ impl Cluster {
             Work::DecodeBatch { idxs } => {
                 let _ = sched.complete_decode(&idxs, now, &mut self.metrics);
             }
+            Work::Mixed { decode, prefill } => {
+                let _ = sched.complete_mixed(&decode, &prefill, now, &mut self.metrics);
+            }
         }
         if self.replicas[ri].role == Role::Prefill {
             self.export_finished(ri, now);
@@ -336,12 +375,18 @@ impl Cluster {
     }
 
     /// Land due transfers and re-admit them (reservation admission) into
-    /// the least-loaded import-eligible replica, head-of-line FIFO.
+    /// the least-loaded import-eligible replica. The *order* of re-
+    /// admission is the policy's ([`SchedPolicy::pick_import`]): FIFO for
+    /// every legacy policy, priority-class-first for `priority` — and
+    /// head-of-line on that order, exactly like pool-blocked admission.
     fn deliver_and_import(&mut self) {
         self.link.deliver(self.clock);
         loop {
-            let target = {
-                let Some(m) = self.link.peek_arrived() else { break };
+            let (pick, target) = {
+                let arrived: Vec<&crate::sched::SeqState> =
+                    self.link.arrived().iter().map(|m| &m.state).collect();
+                let Some(pick) = self.policy.pick_import(&arrived) else { break };
+                let m = &self.link.arrived()[pick];
                 let best = self
                     .replicas
                     .iter()
@@ -366,10 +411,10 @@ impl Cluster {
                         m.kv_tokens
                     );
                 }
-                best
+                (pick, best)
             };
             let Some(ri) = target else { break };
-            let m = self.link.pop_arrived().expect("peeked above");
+            let m = self.link.remove_arrived(pick).expect("picked above");
             self.metrics.migrated_bytes += m.bytes;
             self.replicas[ri].sched.import_seq(
                 m.state,
@@ -473,6 +518,8 @@ impl Cluster {
                 }
             }
         }
+        self.metrics.admission_probes =
+            self.replicas.iter().map(|r| r.sched.probe_count()).sum();
         self.metrics.duration = self.clock - t0;
         self.clock - t0
     }
@@ -537,6 +584,8 @@ impl Cluster {
                 self.apply(ri, w, now);
             }
         }
+        self.metrics.admission_probes =
+            self.replicas.iter().map(|r| r.sched.probe_count()).sum();
         self.metrics.duration = self.clock - t0;
         self.clock - t0
     }
@@ -711,6 +760,63 @@ mod tests {
         // it for the same reason); what IS guaranteed here is that
         // cache-aware routing finds reuse on its own merits
         assert!(aff.prefix_hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn priority_import_jumps_the_link_queue_without_touching_admission() {
+        // Isolates the import-order policy hook: A, B, C (priority 0,
+        // 2048-token decodes) are admitted and prefilled before D even
+        // enters the system (closed loop, concurrency 3 — D releases only
+        // when A retires), and D is then the *only* request in the wait
+        // queue and the only prefilling sequence, so its priority cannot
+        // influence admission or prefill order. The decode pool holds
+        // exactly one full-lifetime footprint, so migrated caches queue
+        // on the link: when B retires, the arrived backlog is [C, D] —
+        // FIFO imports C; the priority policy jumps D (priority 1, tiny
+        // decode) ahead, which collapses D's end-to-end latency without
+        // changing a single produced token.
+        let m = DSV2;
+        let variant = m.variant("gla2");
+        let (prompt, decode) = (2048usize, 2048usize);
+        let kv_per_token = variant.kv_bytes_per_token_per_device(2, m.dtype_bytes)
+            as u64
+            * m.n_layers as u64;
+        let mk = |prio_d: u8| {
+            let mut serving = ServingConfig::with_parallelism(2, 1)
+                .with_policy(PolicyKind::Priority);
+            serving.page_size = 64;
+            serving.kv_hbm_budget = kv_per_token * (prompt + decode) as u64;
+            let mut c = Cluster::new(
+                m,
+                variant,
+                serving,
+                DeviceModel::h100_serving(),
+                &ClusterSpec::disagg(1, 1),
+                RouterKind::RoleAware,
+                DriveMode::Closed { concurrency: 3 },
+            );
+            let mut reqs = generate(LengthDist::Fixed { prompt, decode }, 4, 2);
+            reqs[3].decode_len = 8; // D: latency-sensitive straggler
+            reqs[3].priority = prio_d;
+            c.submit(&reqs);
+            c.run();
+            c.metrics
+        };
+        let flat = mk(0);
+        let boosted = mk(1);
+        for met in [&flat, &boosted] {
+            assert_eq!(met.e2e.len(), 4);
+            assert_eq!(met.migrations, 4);
+            assert_eq!(met.preemptions, 0);
+        }
+        assert_eq!(flat.output_tokens, boosted.output_tokens);
+        assert!(
+            boosted.e2e.mean() < flat.e2e.mean(),
+            "importing the priority-1 cache ahead of the queued priority-0 \
+             entry must cut mean E2E: {:.1}s vs {:.1}s",
+            boosted.e2e.mean(),
+            flat.e2e.mean()
+        );
     }
 
     #[test]

@@ -8,6 +8,8 @@
 //! deterministic: identical workload + seed reproduces identical
 //! placement.
 
+use std::cell::Cell;
+
 use super::ClusterReplica;
 use crate::sched::Phase;
 use crate::workload::Request;
@@ -82,11 +84,19 @@ pub struct Router {
     kind: RouterKind,
     /// next replica index the round-robin pointer will try
     rr_next: usize,
+    /// single-entry memo of the last prefix-affinity decision, keyed
+    /// `(request id, Σ replica epochs)`: a pool-blocked head-of-line
+    /// request is re-routed every engine pump, and without the memo each
+    /// re-route re-materializes the prompt and probes every replica's
+    /// radix index, O(prompt) per pump. Replica epochs strictly increase
+    /// on any pool/sequence change, so a hit is exactly "nothing that
+    /// could move the decision has happened".
+    affinity_cache: Cell<Option<(usize, u64, Option<usize>)>>,
 }
 
 impl Router {
     pub fn new(kind: RouterKind) -> Self {
-        Router { kind, rr_next: 0 }
+        Router { kind, rr_next: 0, affinity_cache: Cell::new(None) }
     }
 
     pub fn kind(&self) -> RouterKind {
@@ -132,11 +142,21 @@ impl Router {
                         .min_by_key(|(i, r)| (r.sched.n_live(), *i))
                         .map(|(i, _)| i);
                 }
+                // sticky head-of-line memo: same request, same replica
+                // states -> same decision, probe-free
+                let epoch_sum = replicas
+                    .iter()
+                    .fold(0u64, |a, r| a.wrapping_add(r.sched.epoch()));
+                if let Some((id, ep, pick)) = self.affinity_cache.get() {
+                    if id == req.id && ep == epoch_sum {
+                        return pick;
+                    }
+                }
                 // materialize the prompt once for all replicas; each
                 // per-replica probe then only hashes (and a cold index
                 // short-circuits before touching the tokens)
                 let toks = req.prompt_tokens();
-                eligible()
+                let pick = eligible()
                     .max_by_key(|(i, r)| {
                         let matched =
                             r.sched.probe_prefix_with(&toks).map_or(0, |(_, m)| m);
@@ -146,7 +166,9 @@ impl Router {
                             std::cmp::Reverse(*i),
                         )
                     })
-                    .map(|(i, _)| i)
+                    .map(|(i, _)| i);
+                self.affinity_cache.set(Some((req.id, epoch_sum, pick)));
+                pick
             }
         }
     }

@@ -99,14 +99,17 @@ impl TransferLink {
         self.in_flight.front().map(|m| m.ready_t)
     }
 
-    /// Head of the arrived queue (import is head-of-line FIFO, like
-    /// pool-blocked admission).
-    pub fn peek_arrived(&self) -> Option<&Migration> {
-        self.arrived.front()
+    /// Landed migrations awaiting a decode-pool slot, in landing (FIFO)
+    /// order — the list the import-order policy hook
+    /// (`SchedPolicy::pick_import`) chooses from.
+    pub fn arrived(&self) -> &VecDeque<Migration> {
+        &self.arrived
     }
 
-    pub fn pop_arrived(&mut self) -> Option<Migration> {
-        self.arrived.pop_front()
+    /// Remove the i-th arrived migration (policy-picked import; index 0
+    /// reproduces the historic FIFO pop bit for bit).
+    pub fn remove_arrived(&mut self, i: usize) -> Option<Migration> {
+        self.arrived.remove(i)
     }
 
     /// Requests currently owned by the link (in flight or awaiting
@@ -152,14 +155,14 @@ mod tests {
         assert_eq!(l.n_in_system(), 2);
         assert_eq!(l.next_ready(), Some(1.75));
         l.deliver(1.5);
-        assert!(l.peek_arrived().is_none(), "nothing lands before ready_t");
+        assert!(l.arrived().front().is_none(), "nothing lands before ready_t");
         l.deliver(1.75);
-        assert_eq!(l.peek_arrived().unwrap().state.req.id, 1);
+        assert_eq!(l.arrived().front().unwrap().state.req.id, 1);
         // second transfer queued behind the first: 1.75 + 0.75
         assert_eq!(l.next_ready(), Some(2.5));
         l.deliver(3.0);
-        assert_eq!(l.pop_arrived().unwrap().state.req.id, 1);
-        assert_eq!(l.pop_arrived().unwrap().state.req.id, 2);
+        assert_eq!(l.remove_arrived(0).unwrap().state.req.id, 1);
+        assert_eq!(l.remove_arrived(0).unwrap().state.req.id, 2);
         assert!(l.is_empty());
     }
 
@@ -168,7 +171,7 @@ mod tests {
         let mut l = link();
         l.send(seq(1), 64, 1_000, 0.0, 1.0);
         l.deliver(10.0);
-        let _ = l.pop_arrived();
+        let _ = l.remove_arrived(0);
         // link idle since 1.25; a send at t=5 starts at 5, not busy_until
         l.send(seq(2), 64, 1_000_000_000, 1e9, 5.0);
         assert_eq!(l.next_ready(), Some(6.25)); // 5 + 0.25 + 1.0

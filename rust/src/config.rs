@@ -135,6 +135,19 @@ pub struct ServingConfig {
     /// what makes the small pages this wants free). Off by default —
     /// workloads without shared prefixes are bit-identical either way.
     pub prefix_cache: bool,
+    /// fused chunked-prefill + decode steps (SGLang-style mixed steps):
+    /// each step packs the ready decode batch first, then fills the
+    /// remaining [`ServingConfig::max_step_tokens`] budget with prefill
+    /// chunks. Decode is bandwidth-bound and prefill compute-bound (§3),
+    /// so fusing raises arithmetic intensity and removes the alternation
+    /// stall from ITL. Off by default — the alternating batcher is the
+    /// bit-identical legacy path (`benches/prefill_fusion.rs` pins it).
+    pub fusion: bool,
+    /// per-step token budget of the fused planner (decode tokens +
+    /// prefill chunk tokens). The default matches the 8192-token prefill
+    /// tile, so a fused step never computes more than an unfused prefill
+    /// step did. Only read when `fusion` is on.
+    pub max_step_tokens: usize,
 }
 
 impl Default for ServingConfig {
@@ -151,6 +164,8 @@ impl Default for ServingConfig {
             policy: PolicyKind::Fcfs,
             drive: DriveMode::Closed { concurrency: 64 },
             prefix_cache: false,
+            fusion: false,
+            max_step_tokens: 8192,
         }
     }
 }
@@ -179,6 +194,20 @@ impl ServingConfig {
     /// Enable prefix-cache-aware admission on every admitting replica.
     pub fn with_prefix_cache(mut self) -> Self {
         self.prefix_cache = true;
+        self
+    }
+
+    /// Enable fused chunked-prefill + decode steps on every replica
+    /// (token budget stays at the configured `max_step_tokens`).
+    pub fn with_fusion(mut self) -> Self {
+        self.fusion = true;
+        self
+    }
+
+    /// Set the fused planner's per-step token budget.
+    pub fn with_step_budget(mut self, max_step_tokens: usize) -> Self {
+        assert!(max_step_tokens >= 1);
+        self.max_step_tokens = max_step_tokens;
         self
     }
 
@@ -290,6 +319,11 @@ mod tests {
         assert_eq!(c.drive, DriveMode::Open);
         assert_eq!(c.tp, 8);
         assert!(!c.prefix_cache, "prefix cache must default off");
-        assert!(c.with_prefix_cache().prefix_cache);
+        assert!(!c.fusion, "fusion must default off (alternating legacy)");
+        assert_eq!(c.max_step_tokens, 8192, "budget matches the prefill tile");
+        assert!(c.clone().with_prefix_cache().prefix_cache);
+        let fused = c.with_fusion().with_step_budget(4096);
+        assert!(fused.fusion);
+        assert_eq!(fused.max_step_tokens, 4096);
     }
 }

@@ -29,6 +29,10 @@ pub struct PagePool {
     tables: HashMap<SeqId, Vec<PageId>>,
     /// tokens currently stored per sequence (for partial last pages)
     lens: HashMap<SeqId, usize>,
+    /// bumped on every occupancy change (alloc/grow/fork/release/import);
+    /// a cheap validity token for memoized admission probes — any cached
+    /// decision keyed on an epoch is stale iff the epoch moved
+    epoch: u64,
 }
 
 impl PagePool {
@@ -41,7 +45,14 @@ impl PagePool {
             ref_count: vec![0; n_pages],
             tables: HashMap::new(),
             lens: HashMap::new(),
+            epoch: 0,
         }
+    }
+
+    /// Occupancy-change counter (see field docs). Monotonically
+    /// non-decreasing; equal epochs imply identical occupancy state.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     pub fn pages_free(&self) -> usize {
@@ -56,12 +67,20 @@ impl PagePool {
         tokens.div_ceil(self.page_size)
     }
 
-    /// Can `tokens` more tokens be appended to `seq` (or a new seq)?
-    pub fn can_grow(&self, seq: SeqId, tokens: usize) -> bool {
+    /// Fresh pages that appending `tokens` more tokens to `seq` would
+    /// take right now (0 when they land inside already-held pages; an
+    /// unknown sequence prices as a fresh allocation). The single source
+    /// of truth for grow-cost arithmetic — `can_grow`, `grow`, the step
+    /// planners and the property suite all price against this.
+    pub fn pages_to_grow(&self, seq: SeqId, tokens: usize) -> usize {
         let cur = self.lens.get(&seq).copied().unwrap_or(0);
         let have = self.tables.get(&seq).map_or(0, |t| t.len());
-        let need = (cur + tokens).div_ceil(self.page_size).saturating_sub(have);
-        need <= self.free.len()
+        (cur + tokens).div_ceil(self.page_size).saturating_sub(have)
+    }
+
+    /// Can `tokens` more tokens be appended to `seq` (or a new seq)?
+    pub fn can_grow(&self, seq: SeqId, tokens: usize) -> bool {
+        self.pages_to_grow(seq, tokens) <= self.free.len()
     }
 
     /// Register a sequence and reserve pages for `tokens` tokens.
@@ -77,14 +96,14 @@ impl PagePool {
         let pages: Vec<PageId> = (0..need).map(|_| self.take_page()).collect();
         self.tables.insert(seq, pages);
         self.lens.insert(seq, tokens);
+        self.epoch += 1;
         true
     }
 
     /// Extend a live sequence by `tokens` tokens.
     pub fn grow(&mut self, seq: SeqId, tokens: usize) -> bool {
-        let cur = *self.lens.get(&seq).expect("grow of unknown seq");
-        let table_len = self.tables[&seq].len();
-        let need = (cur + tokens).div_ceil(self.page_size).saturating_sub(table_len);
+        assert!(self.lens.contains_key(&seq), "grow of unknown seq");
+        let need = self.pages_to_grow(seq, tokens);
         if need > self.free.len() {
             return false;
         }
@@ -93,6 +112,7 @@ impl PagePool {
             self.tables.get_mut(&seq).unwrap().push(p);
         }
         *self.lens.get_mut(&seq).unwrap() += tokens;
+        self.epoch += 1;
         true
     }
 
@@ -149,6 +169,7 @@ impl PagePool {
                     self.free.push(p);
                 }
             }
+            self.epoch += 1;
         }
         self.lens.remove(&seq);
     }
@@ -165,6 +186,7 @@ impl PagePool {
         }
         self.tables.insert(child, shared);
         self.lens.insert(child, full_pages * self.page_size);
+        self.epoch += 1;
         true
     }
 

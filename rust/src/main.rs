@@ -20,6 +20,11 @@
 //!                                shared-prefix (multi-turn chat) workload:
 //!                                radix-on vs radix-off comparison, hit
 //!                                rate, prefill tokens skipped
+//!   fusion [variant] [tp] [dp] [rate] [budget]
+//!                                fused chunked-prefill + decode steps
+//!                                (token-budget batcher) vs the alternating
+//!                                baseline under open-loop Poisson arrivals:
+//!                                ITL p50/p99, TTFT, throughput
 //!
 //! Run `make artifacts` first for `serve`/`train`.
 
@@ -296,8 +301,57 @@ fn main() {
                 );
             }
         }
+        "fusion" => {
+            let variant = args.get(2).cloned().unwrap_or_else(|| "gla2".into());
+            let tp: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(8);
+            let dp: usize = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(1);
+            let rate: f64 = args.get(5).and_then(|s| s.parse().ok()).unwrap_or(1.0);
+            if rate <= 0.0 || !rate.is_finite() {
+                eprintln!("rate must be a positive req/s value, got {rate}");
+                std::process::exit(2);
+            }
+            let budget: usize = args.get(6).and_then(|s| s.parse().ok()).unwrap_or(8192);
+            if budget == 0 {
+                eprintln!("budget must be at least 1 token");
+                std::process::exit(2);
+            }
+            let m = DSV2;
+            let reqs =
+                generate_open(LengthDist::Fixed { prompt: 8192, decode: 1024 }, 256, 42, rate);
+            let run = |fused: bool| {
+                let mut serving = ServingConfig::with_parallelism(tp, dp)
+                    .open_loop()
+                    .with_step_budget(budget);
+                serving.fusion = fused;
+                run_benchmark_with(
+                    m,
+                    m.variant(&variant),
+                    serving,
+                    DeviceModel::h100_serving(),
+                    &reqs,
+                )
+            };
+            println!(
+                "{variant} TP{tp}xDP{dp} {rate:.2} req/s, 8K/1K open loop, \
+                 step budget {budget} tokens:"
+            );
+            for (label, fused) in [("alternating", false), ("fused      ", true)] {
+                let mut met = run(fused);
+                println!(
+                    "  {label}: ttft {:.2}s itl p50 {:.1}ms p99 {:.1}ms \
+                     queue-wait {:.1}s {:.0} tok/s",
+                    met.ttft.median(),
+                    met.itl.median() * 1e3,
+                    met.itl.p99() * 1e3,
+                    met.queue_wait.median(),
+                    met.throughput(),
+                );
+            }
+        }
         other => {
-            eprintln!("unknown command `{other}` (try: info serve train sim qps disagg prefix)");
+            eprintln!(
+                "unknown command `{other}` (try: info serve train sim qps disagg prefix fusion)"
+            );
             std::process::exit(2);
         }
     }

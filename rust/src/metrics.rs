@@ -10,6 +10,25 @@ pub struct Summary {
     sorted: bool,
 }
 
+/// Sample-multiset equality: two summaries are equal iff they hold the
+/// same samples. Comparison is order-insensitive because quantile reads
+/// sort lazily in place — a summary that has answered a median holds the
+/// same data, permuted. This is what the inertness suite uses to assert
+/// "bit-identical metrics" across whole [`ServiceMetrics`] structs.
+impl PartialEq for Summary {
+    fn eq(&self, other: &Self) -> bool {
+        if self.samples.len() != other.samples.len() {
+            return false;
+        }
+        let sort = |v: &Vec<f64>| {
+            let mut s = v.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).expect("NaN metric sample"));
+            s
+        };
+        sort(&self.samples) == sort(&other.samples)
+    }
+}
+
 impl Summary {
     pub fn new() -> Self {
         Self::default()
@@ -75,7 +94,10 @@ impl Summary {
 }
 
 /// Full service-level report for one benchmark run (one table row).
-#[derive(Debug, Clone, Default)]
+/// `PartialEq` compares every field (summaries as sample multisets) —
+/// the regression suites use `==` on whole structs to pin "this change
+/// is inert on that workload".
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct ServiceMetrics {
     pub e2e: Summary,
     pub ttft: Summary,
@@ -113,6 +135,12 @@ pub struct ServiceMetrics {
     pub prefill_tokens_skipped: u64,
     /// pool pages forked (refcount-shared) at admission
     pub pages_shared: u64,
+    /// radix longest-prefix probes actually executed across all replicas
+    /// (admission + routing). The head-of-line probe memo exists to keep
+    /// this flat while a pool-blocked request is re-checked every pump;
+    /// distinct from `prefix_lookups`, which counts admissions that
+    /// *consulted* the cache (memoized or not).
+    pub admission_probes: u64,
 }
 
 impl ServiceMetrics {
@@ -183,6 +211,23 @@ mod tests {
     fn throughput() {
         let m = ServiceMetrics { output_tokens: 1000, duration: 4.0, ..Default::default() };
         assert_eq!(m.throughput(), 250.0);
+    }
+
+    #[test]
+    fn metrics_equality_is_sample_multiset_equality() {
+        let mut a = ServiceMetrics::default();
+        let mut b = ServiceMetrics::default();
+        for x in [3.0, 1.0, 2.0] {
+            a.ttft.record(x);
+            b.ttft.record(x);
+        }
+        assert_eq!(a, b);
+        let _ = a.ttft.median(); // sorts lazily in place
+        assert_eq!(a, b, "a quantile read must not break equality");
+        b.ttft.record(9.0);
+        assert_ne!(a, b);
+        let c = ServiceMetrics { output_tokens: 1, ..Default::default() };
+        assert_ne!(c, ServiceMetrics::default());
     }
 
     #[test]

@@ -183,16 +183,37 @@ impl Scheduler {
         // fitting without sharing implies fitting with it (the residual
         // need only shrinks), so the probe — which materializes and
         // hashes the whole prompt — runs only when the full footprint is
-        // what blocks admission. A head-of-line request re-checked every
-        // engine pump therefore costs O(prompt) only while the pool is
-        // actually full.
+        // what blocks admission; and even then the result is memoized
+        // (see `cached_probe_pages`), so the head-of-line request
+        // re-checked every engine pump pays O(prompt) exactly once per
+        // scheduler-state change, not once per pump.
         if self.fits_residual(req, scope, 0) {
             return true;
         }
-        let shared_pages = self
+        let shared_pages = self.cached_probe_pages(req);
+        shared_pages > 0 && self.fits_residual(req, scope, shared_pages)
+    }
+
+    /// Memoized [`Scheduler::probe_prefix`], in shared-page units. The
+    /// single-entry cache is keyed `(request id, scheduler epoch)`: the
+    /// sticky head-of-line request hits it every pump, and any pool or
+    /// sequence-set change (which is the only way the probe's answer can
+    /// change — the radix index mutates only alongside one of those)
+    /// moves the epoch and forces a fresh probe. A different request
+    /// simply takes the entry over; only the blocked *head* repeats.
+    fn cached_probe_pages(&self, req: &Request) -> usize {
+        if self.radix.is_none() {
+            return 0;
+        }
+        let key = (req.id as u64, self.epoch());
+        if let Some(pages) = self.probe_cache_get(key) {
+            return pages;
+        }
+        let pages = self
             .probe_prefix(req)
             .map_or(0, |(_, m)| m / self.pool.page_size);
-        shared_pages > 0 && self.fits_residual(req, scope, shared_pages)
+        self.probe_cache_put(key, pages);
+        pages
     }
 
     /// The reservation inequality, in free-list terms: the pages every
@@ -269,6 +290,38 @@ mod tests {
         q.release(10.0, 123); // live count is ignored in open loop
         assert_eq!(q.n_queued(), 3);
         assert_eq!(q.next_arrival(), None);
+    }
+
+    #[test]
+    fn blocked_head_probe_is_memoized_until_the_epoch_moves() {
+        use crate::kvcache::PagePool;
+        use crate::metrics::ServiceMetrics;
+        use crate::sched::{PolicyKind, Scheduler};
+
+        let mut m = ServiceMetrics::default();
+        // 6 pages of 4 tokens; owner: 8 prompt + 8 decode = 4-page footprint
+        let mut s = Scheduler::new(PagePool::new(6, 4), PolicyKind::Fcfs.build(), 8192, 256)
+            .with_prefix_cache();
+        let owner = Request::new(1, 8, 8).with_shared_prefix(3, 8);
+        s.admit(owner, 0.0, 0.0, &mut m);
+        let _ = s.complete_prefill(0, 8, 1.0, &mut m); // 2 pages resident, decoding
+        assert_eq!(s.probe_count(), 0, "a cold index never probes");
+        // head request: 5 pages in full, 3 residual behind the 2 shared
+        // pages — blocked either way (the owner still owes 2 pages of its
+        // reservation), so every can_admit re-check wants the probe
+        let head = Request::new(2, 12, 8).with_shared_prefix(3, 8);
+        assert!(!s.can_admit(&head));
+        assert_eq!(s.probe_count(), 1);
+        for _ in 0..8 {
+            assert!(!s.can_admit(&head)); // the engine pump's re-check
+        }
+        assert_eq!(s.probe_count(), 1, "a blocked head must hit the memo");
+        // one decode step grows the owner's cache -> epoch moves -> re-probe
+        s.complete_decode(&[0], 2.0, &mut m);
+        assert!(!s.can_admit(&head));
+        assert_eq!(s.probe_count(), 2, "a state change must invalidate the memo");
+        assert!(!s.can_admit(&head));
+        assert_eq!(s.probe_count(), 2);
     }
 
     #[test]

@@ -1,11 +1,24 @@
 //! Batch formation: given the live sequences and the pool, pick what one
-//! engine step runs — a chunked-prefill tile or a decode batch. The
-//! arbitration between the two is delegated to the
-//! [`super::SchedPolicy`]; the pool-awareness (a prefill chunk is only
-//! planned when its pages fit) is not, because it is a correctness rule,
-//! not a preference. A prefix-forked sequence needs no special casing
-//! here: it enters with its chunk cursor already past the shared pages,
-//! so `chunk_of` naturally plans only the residual prompt.
+//! engine step runs. Two planners live here:
+//!
+//! * **Alternating** (legacy, the default): one chunked-prefill tile *or*
+//!   one decode batch per step, arbitration delegated to the
+//!   [`super::SchedPolicy`]. This is the seed engine's behavior bit for
+//!   bit, and the inertness tests pin it.
+//! * **Fused** ([`super::Scheduler::with_fusion`], SGLang-style mixed
+//!   steps): pack the ready decode batch first, then fill the remaining
+//!   `max_step_tokens` budget with one or more prefill chunks. Decode is
+//!   bandwidth-bound and prefill compute-bound (§3 roofline), so a fused
+//!   step raises arithmetic intensity per byte of KV loaded — the engine
+//!   prices it as the max of the two attention parts plus one FFN pass
+//!   over all new tokens.
+//!
+//! Pool-awareness (a prefill chunk is only planned when its pages fit —
+//! cumulatively, in the fused case) is not delegated to the policy,
+//! because it is a correctness rule, not a preference. A prefix-forked
+//! sequence needs no special casing here: it enters with its chunk cursor
+//! already past the shared pages, so `chunk_of` naturally plans only the
+//! residual prompt.
 
 use super::{Phase, Scheduler};
 
@@ -14,7 +27,35 @@ use super::{Phase, Scheduler};
 pub enum Work {
     PrefillChunk { idx: usize, chunk: usize },
     DecodeBatch { idxs: Vec<usize> },
+    /// One fused step (token-budget batcher): the decode batch plus the
+    /// prefill chunks that fit the remaining `max_step_tokens` budget.
+    /// Only the fused planner emits this — the alternating batcher never
+    /// does, which is what the inertness suite locks in.
+    Mixed {
+        decode: Vec<usize>,
+        prefill: Vec<(usize, usize)>,
+    },
     Idle,
+}
+
+/// The step-plan vocabulary of the batcher. `Mixed` is the fused
+/// chunked-prefill + decode step of PR 4; the other arms predate it.
+pub type StepPlan = Work;
+
+impl Work {
+    /// New tokens this step computes: one per decode sequence plus every
+    /// planned prefill chunk's tokens. This is what the fused planner's
+    /// `max_step_tokens` budget bounds (the property suite asserts it).
+    pub fn new_tokens(&self) -> usize {
+        match self {
+            Work::Idle => 0,
+            Work::PrefillChunk { chunk, .. } => *chunk,
+            Work::DecodeBatch { idxs } => idxs.len(),
+            Work::Mixed { decode, prefill } => {
+                decode.len() + prefill.iter().map(|(_, c)| c).sum::<usize>()
+            }
+        }
+    }
 }
 
 impl Scheduler {
@@ -27,9 +68,20 @@ impl Scheduler {
         }
     }
 
+    /// Fresh pages a prefill chunk for `idx` would take right now (0 when
+    /// the chunk lands inside already-held pages, e.g. after a fork).
+    fn prefill_pages_needed(&self, idx: usize, chunk: usize) -> usize {
+        self.pool.pages_to_grow(self.seqs[idx].req.id as u64, chunk)
+    }
+
     /// Pick one engine step of work (without running it). Pool-aware: a
-    /// prefill chunk is only planned when its pages fit right now.
-    pub fn plan(&self) -> Work {
+    /// prefill chunk is only planned when its pages fit right now. With
+    /// fusion off this is the legacy alternating plan, untouched; with
+    /// fusion on it delegates to the token-budget planner.
+    pub fn plan(&self) -> StepPlan {
+        if self.fusion {
+            return self.plan_fused();
+        }
         let candidates: Vec<usize> = self
             .seqs
             .iter()
@@ -64,5 +116,218 @@ impl Scheduler {
             return Work::PrefillChunk { idx, chunk: self.chunk_of(idx) };
         }
         Work::Idle
+    }
+
+    /// The fused token-budget planner: the decode batch packs first (each
+    /// decoding sequence contributes one token), then prefill chunks fill
+    /// the remaining budget in policy order, each clamped to the budget
+    /// and admitted only while its fresh pages fit the free list
+    /// *cumulatively* — several chunks planned into one step must not
+    /// overdraw the pool between them.
+    fn plan_fused(&self) -> StepPlan {
+        let decode: Vec<usize> = self
+            .seqs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| matches!(s.phase, Phase::Decode { .. }))
+            .map(|(i, _)| i)
+            .take(self.max_batch.min(self.max_step_tokens))
+            .collect();
+        let mut tokens_left = self.max_step_tokens - decode.len();
+        // reserve the decode half's own page needs before budgeting
+        // prefill: a decoding sequence sitting exactly at a page boundary
+        // takes a fresh page for its next token (the same accounting
+        // preempt_for_decode frees for), and handing that page to a
+        // prefill chunk in the same step would make the decode-side grow
+        // fail silently under deliberate overcommit
+        let decode_new_pages: usize = decode
+            .iter()
+            .map(|&i| self.pool.pages_to_grow(self.seqs[i].req.id as u64, 1))
+            .sum();
+        let mut pages_left = self.pool.pages_free().saturating_sub(decode_new_pages);
+        let mut candidates: Vec<usize> = self
+            .seqs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| matches!(s.phase, Phase::Prefill { .. }))
+            .map(|(i, _)| i)
+            .collect();
+        let mut prefill: Vec<(usize, usize)> = Vec::new();
+        while tokens_left > 0 && !candidates.is_empty() {
+            let fits: Vec<usize> = candidates
+                .iter()
+                .copied()
+                .filter(|&i| {
+                    let chunk = self.chunk_of(i).min(tokens_left);
+                    chunk > 0 && self.prefill_pages_needed(i, chunk) <= pages_left
+                })
+                .collect();
+            let Some(idx) = self.policy.pick_prefill(&self.seqs, &fits) else {
+                break;
+            };
+            let chunk = self.chunk_of(idx).min(tokens_left);
+            pages_left -= self.prefill_pages_needed(idx, chunk);
+            tokens_left -= chunk;
+            prefill.push((idx, chunk));
+            candidates.retain(|&i| i != idx);
+        }
+        match (decode.is_empty(), prefill.len()) {
+            (true, 0) => Work::Idle,
+            (true, 1) => {
+                let (idx, chunk) = prefill[0];
+                Work::PrefillChunk { idx, chunk }
+            }
+            (false, 0) => Work::DecodeBatch { idxs: decode },
+            _ => Work::Mixed { decode, prefill },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::PagePool;
+    use crate::metrics::ServiceMetrics;
+    use crate::sched::PolicyKind;
+    use crate::workload::Request;
+
+    fn fused(n_pages: usize, ps: usize, chunk: usize, budget: usize) -> Scheduler {
+        Scheduler::new(PagePool::new(n_pages, ps), PolicyKind::Fcfs.build(), chunk, 256)
+            .with_fusion(budget)
+    }
+
+    #[test]
+    fn fused_plan_packs_decode_then_fills_budget_with_prefill() {
+        let mut m = ServiceMetrics::default();
+        let mut s = fused(32, 4, 8, 10);
+        // one decoding sequence + two prefilling ones
+        s.admit(Request::new(1, 4, 4), 0.0, 0.0, &mut m);
+        let _ = s.complete_prefill(0, 4, 1.0, &mut m); // now decoding
+        s.admit(Request::new(2, 12, 2), 0.0, 1.0, &mut m);
+        s.admit(Request::new(3, 12, 2), 0.0, 1.0, &mut m);
+        // budget 10: 1 decode token + chunk 8 (tile) + chunk 1 (remainder)
+        let plan = s.plan();
+        assert_eq!(
+            plan,
+            Work::Mixed { decode: vec![0], prefill: vec![(1, 8), (2, 1)] }
+        );
+        assert_eq!(plan.new_tokens(), 10);
+        // the fused step completes everything it planned at one instant
+        let Work::Mixed { decode, prefill } = plan else { unreachable!() };
+        let fin = s.complete_mixed(&decode, &prefill, 2.0, &mut m);
+        assert!(fin.is_empty());
+        assert_eq!(s.seqs()[0].phase, Phase::Decode { produced: 2 });
+        assert_eq!(s.seqs()[1].phase, Phase::Prefill { done: 8 });
+        assert_eq!(s.seqs()[2].phase, Phase::Prefill { done: 1 });
+        s.pool().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fused_plan_is_cumulatively_pool_aware() {
+        let mut m = ServiceMetrics::default();
+        // 3 pages of 4 tokens: two 8-token chunks need 2 pages each, so
+        // only the first fits next to the free list — the second must not
+        // be planned into the same step even though it would fit alone
+        let mut s = fused(3, 4, 8, 64);
+        s.admit(Request::new(1, 8, 1), 0.0, 0.0, &mut m);
+        s.admit(Request::new(2, 8, 1), 0.0, 0.0, &mut m);
+        assert_eq!(s.plan(), Work::PrefillChunk { idx: 0, chunk: 8 });
+        // with both chunks' pages available, one fused step packs both
+        let mut roomy = fused(8, 4, 8, 64);
+        roomy.admit(Request::new(1, 8, 1), 0.0, 0.0, &mut m);
+        roomy.admit(Request::new(2, 8, 1), 0.0, 0.0, &mut m);
+        assert_eq!(
+            roomy.plan(),
+            Work::Mixed { decode: vec![], prefill: vec![(0, 8), (1, 8)] }
+        );
+    }
+
+    #[test]
+    fn fused_decode_batch_is_clamped_to_the_budget() {
+        let mut m = ServiceMetrics::default();
+        let mut s = fused(64, 4, 8, 2);
+        for id in 1..=4 {
+            s.admit(Request::new(id, 4, 4), 0.0, 0.0, &mut m);
+        }
+        for i in 0..4 {
+            let _ = s.complete_prefill(i, 4, 1.0, &mut m);
+        }
+        // budget 2 < 4 decoding sequences: the batch clamps, prefill gets
+        // nothing, and the plan degenerates to a plain decode batch
+        match s.plan() {
+            Work::DecodeBatch { idxs } => assert_eq!(idxs, vec![0, 1]),
+            w => panic!("expected a clamped decode batch, got {w:?}"),
+        }
+    }
+
+    #[test]
+    fn fused_single_prefill_degenerates_to_the_legacy_arm() {
+        let mut m = ServiceMetrics::default();
+        let mut s = fused(32, 4, 8, 64);
+        s.admit(Request::new(1, 6, 2), 0.0, 0.0, &mut m);
+        assert_eq!(s.plan(), Work::PrefillChunk { idx: 0, chunk: 6 });
+        // and with nothing at all, Idle
+        let _ = s.complete_prefill(0, 6, 1.0, &mut m);
+        s.complete_decode(&[0], 2.0, &mut m);
+        assert_eq!(s.plan(), Work::Idle);
+    }
+
+    #[test]
+    fn alternating_planner_never_emits_mixed() {
+        // the inertness contract at the planner level: fusion off walks
+        // the exact legacy alternation (P, D, P, D, ...) and never fuses
+        let mut m = ServiceMetrics::default();
+        let mut s = Scheduler::new(
+            PagePool::new(32, 4),
+            PolicyKind::Fcfs.build(),
+            8,
+            256,
+        );
+        s.admit(Request::new(1, 8, 3), 0.0, 0.0, &mut m);
+        s.admit(Request::new(2, 16, 3), 0.0, 0.0, &mut m);
+        let mut t = 1.0;
+        let mut kinds = Vec::new();
+        loop {
+            let w = s.plan();
+            match w {
+                Work::Idle => break,
+                Work::PrefillChunk { idx, chunk } => {
+                    kinds.push('P');
+                    let _ = s.complete_prefill(idx, chunk, t, &mut m);
+                }
+                Work::DecodeBatch { idxs } => {
+                    kinds.push('D');
+                    s.complete_decode(&idxs, t, &mut m);
+                }
+                Work::Mixed { .. } => panic!("alternating batcher fused a step"),
+            }
+            t += 1.0;
+        }
+        assert!(s.is_idle());
+        // seq 1 prefills in one chunk, then strict alternation with seq
+        // 2's two chunks, then pure decode to drain
+        assert_eq!(kinds, vec!['P', 'D', 'P', 'D', 'P', 'D', 'D']);
+    }
+
+    #[test]
+    fn mixed_step_retiring_at_the_epilogue_keeps_indices_valid() {
+        let mut m = ServiceMetrics::default();
+        let mut s = fused(32, 4, 8, 64);
+        // seq 1 decodes; seq 2 retires at its prefill epilogue
+        // (decode_len 1) — its swap_remove must not corrupt the decode
+        // half of the same fused step
+        s.admit(Request::new(1, 4, 2), 0.0, 0.0, &mut m);
+        let _ = s.complete_prefill(0, 4, 1.0, &mut m);
+        s.admit(Request::new(2, 4, 1), 0.0, 1.0, &mut m);
+        let plan = s.plan();
+        assert_eq!(plan, Work::Mixed { decode: vec![0], prefill: vec![(1, 4)] });
+        let Work::Mixed { decode, prefill } = plan else { unreachable!() };
+        let fin = s.complete_mixed(&decode, &prefill, 2.0, &mut m);
+        // seq 2 retired at the epilogue AND seq 1 finished its budget
+        assert_eq!(fin.len(), 2);
+        assert!(s.is_idle());
+        assert_eq!(m.output_tokens, 2 + 1);
+        assert_eq!(s.pool().pages_free(), s.pool().pages_total());
+        s.pool().check_invariants().unwrap();
     }
 }

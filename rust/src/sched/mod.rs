@@ -22,10 +22,12 @@ pub mod batcher;
 pub mod policy;
 
 pub use admission::{AdmitScope, DriveMode, WaitQueue};
-pub use batcher::Work;
+pub use batcher::{StepPlan, Work};
 pub use policy::{
     DecodePriority, Fcfs, PolicyKind, PriorityFirst, SchedPolicy, ShortestPromptFirst,
 };
+
+use std::cell::Cell;
 
 use crate::kvcache::{PageId, PagePool, RadixIndex, SeqId};
 use crate::metrics::ServiceMetrics;
@@ -131,6 +133,25 @@ pub struct Scheduler {
     /// prefix-cache index over resident sequences (None = prefix caching
     /// off, the bit-identical legacy admission path)
     pub(crate) radix: Option<RadixIndex>,
+    /// fused-step planning ([`Scheduler::with_fusion`]): pack the decode
+    /// batch first, then fill `max_step_tokens` with prefill chunks.
+    /// Off = the alternating legacy batcher, bit for bit.
+    pub(crate) fusion: bool,
+    /// per-step token budget of the fused planner (decode tokens +
+    /// prefill chunk tokens); only read when `fusion` is on
+    pub(crate) max_step_tokens: usize,
+    /// monotone counter over seq-list changes; [`Scheduler::epoch`]
+    /// combines it with the pool's occupancy epoch so memoized admission
+    /// probes invalidate exactly when the answer could change
+    seq_epoch: u64,
+    /// radix longest-prefix probes actually executed (admission and
+    /// routing both count here — the memoized re-checks do not)
+    probes: Cell<u64>,
+    /// single-entry memo of the last admission probe, keyed
+    /// `(request id, epoch) -> shared pages`: the pool-blocked
+    /// head-of-line request re-checked every engine pump stops paying
+    /// O(prompt) per pump
+    probe_cache: Cell<Option<(u64, u64, usize)>>,
 }
 
 impl Scheduler {
@@ -149,7 +170,60 @@ impl Scheduler {
             max_batch,
             prefer_decode: false,
             radix: None,
+            fusion: false,
+            max_step_tokens: 0,
+            seq_epoch: 0,
+            probes: Cell::new(0),
+            probe_cache: Cell::new(None),
         }
+    }
+
+    /// Enable fused chunked-prefill + decode steps: [`Scheduler::plan`]
+    /// packs the ready decode batch first, then fills the remaining
+    /// `max_step_tokens` budget with prefill chunks (SGLang-style mixed
+    /// steps — see `batcher`). Without this flag the plan is the
+    /// alternating legacy batcher, bit for bit.
+    pub fn with_fusion(mut self, max_step_tokens: usize) -> Self {
+        assert!(max_step_tokens >= 1);
+        self.fusion = true;
+        self.max_step_tokens = max_step_tokens;
+        self
+    }
+
+    pub fn fusion_enabled(&self) -> bool {
+        self.fusion
+    }
+
+    /// Scheduler-state validity token for memoized probe/route decisions:
+    /// strictly increases whenever the pool occupancy or the live
+    /// sequence set changes, i.e. whenever a cached admission probe or
+    /// routing decision could change. (The radix index only mutates
+    /// alongside one of those two, so this also covers it.)
+    pub fn epoch(&self) -> u64 {
+        self.pool.epoch().wrapping_add(self.seq_epoch)
+    }
+
+    /// Radix longest-prefix probes executed so far (admission + routing).
+    /// The head-of-line memoization exists to keep this flat while a
+    /// blocked request is re-checked every pump — tested directly, and
+    /// surfaced as `ServiceMetrics::admission_probes` by the cluster.
+    pub fn probe_count(&self) -> u64 {
+        self.probes.get()
+    }
+
+    pub(crate) fn count_probe(&self) {
+        self.probes.set(self.probes.get() + 1);
+    }
+
+    pub(crate) fn probe_cache_get(&self, key: (u64, u64)) -> Option<usize> {
+        match self.probe_cache.get() {
+            Some((id, ep, pages)) if (id, ep) == key => Some(pages),
+            _ => None,
+        }
+    }
+
+    pub(crate) fn probe_cache_put(&self, key: (u64, u64), pages: usize) {
+        self.probe_cache.set(Some((key.0, key.1, pages)));
     }
 
     /// Enable prefix-cache-aware admission: prompts are indexed in a
@@ -224,6 +298,7 @@ impl Scheduler {
         if max_reuse == 0 {
             return None;
         }
+        self.count_probe();
         let (owner, matched) = radix.longest_prefix(toks, ps)?;
         self.pool.table(owner)?;
         let resident = (self.pool.len_of(owner) / ps) * ps;
@@ -279,6 +354,7 @@ impl Scheduler {
                 }
             }
         }
+        self.seq_epoch += 1;
         self.seqs.push(SeqState {
             req,
             phase: Phase::Prefill { done },
@@ -342,6 +418,7 @@ impl Scheduler {
     /// entries (the index must never outlive residency) and record its
     /// latency metrics. `idx` is invalidated (swap_remove).
     fn retire(&mut self, idx: usize, now: f64, metrics: &mut ServiceMetrics) -> FinishedSeq {
+        self.seq_epoch += 1;
         let state = self.seqs.swap_remove(idx);
         let seq_id = state.req.id as u64;
         let pages = self.pool.table(seq_id).map(|p| p.to_vec()).unwrap_or_default();
@@ -430,6 +507,7 @@ impl Scheduler {
                 .filter(|(_, s)| s.is_decoding())
                 .max_by(|a, b| a.1.start_t.partial_cmp(&b.1.start_t).expect("NaN start_t"))
                 .expect("n_decoding > 1 checked");
+            self.seq_epoch += 1;
             let s = self.seqs.swap_remove(youngest_idx);
             self.pool.preempt(s.req.id as u64);
             if let Some(radix) = &mut self.radix {
@@ -453,6 +531,7 @@ impl Scheduler {
         idx: usize,
         metrics: &mut ServiceMetrics,
     ) -> (SeqState, usize) {
+        self.seq_epoch += 1;
         let mut state = self.seqs.swap_remove(idx);
         let produced = match state.phase {
             Phase::Decode { produced } => produced,
@@ -509,7 +588,50 @@ impl Scheduler {
         metrics.pages_imported += pages as u64;
         metrics.migrations += 1;
         metrics.migration_wait.record(now - export_t);
+        self.seq_epoch += 1;
         self.seqs.push(state);
+    }
+
+    /// Current index of a live sequence by id (the seq list is small and
+    /// swap_remove shuffles it, so fused-step completion re-resolves ids
+    /// rather than trusting plan-time indices).
+    fn index_of(&self, seq_id: u64) -> Option<usize> {
+        self.seqs.iter().position(|s| s.req.id as u64 == seq_id)
+    }
+
+    /// Account one fused step ([`Work::Mixed`]) at time `now`: every
+    /// planned prefill chunk completes, then the decode batch — all at
+    /// the same step-completion instant, which is the point of fusion
+    /// (streaming decode tokens no longer wait out a separate prefill
+    /// step). Planned indices are pinned to sequence ids up front: a
+    /// prefill whose epilogue retires its sequence (`decode_len <= 1`)
+    /// swap_removes mid-loop, which would invalidate the raw indices.
+    pub fn complete_mixed(
+        &mut self,
+        decode: &[usize],
+        prefill: &[(usize, usize)],
+        now: f64,
+        metrics: &mut ServiceMetrics,
+    ) -> Vec<FinishedSeq> {
+        let decode_ids: Vec<u64> =
+            decode.iter().map(|&i| self.seqs[i].req.id as u64).collect();
+        let prefill_ids: Vec<(u64, usize)> = prefill
+            .iter()
+            .map(|&(i, c)| (self.seqs[i].req.id as u64, c))
+            .collect();
+        let mut out = Vec::new();
+        for (id, chunk) in prefill_ids {
+            let idx = self.index_of(id).expect("planned prefill seq is live");
+            if let Some(fin) = self.complete_prefill(idx, chunk, now, metrics) {
+                out.push(fin);
+            }
+        }
+        let idxs: Vec<usize> = decode_ids
+            .iter()
+            .map(|&id| self.index_of(id).expect("planned decode seq is live"))
+            .collect();
+        out.extend(self.complete_decode(&idxs, now, metrics));
+        out
     }
 }
 
@@ -722,6 +844,7 @@ mod tests {
                 Work::DecodeBatch { idxs } => {
                     s.complete_decode(&idxs, t, &mut m);
                 }
+                Work::Mixed { .. } => unreachable!("fusion is off"),
             }
             t += 1.0;
         }

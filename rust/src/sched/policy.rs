@@ -39,6 +39,21 @@ pub trait SchedPolicy: Send {
     /// right after a prefill chunk ran, so strict alternation (the FCFS
     /// default) keeps chunked prefill from starving decode and vice versa.
     fn decode_first(&self, alternate: bool) -> bool;
+
+    /// Index into `arrived` (link-landing order) of the migrated cache a
+    /// decode replica should re-admit next. Import stays head-of-line on
+    /// the policy's order — if the picked cache fits no replica, nothing
+    /// imports this round, exactly like pool-blocked admission. The
+    /// default is plain FIFO (position 0), which every pre-existing
+    /// policy keeps bit-identically; [`PriorityFirst`] jumps the highest
+    /// `Request::priority` class ahead, ties to the earliest landing.
+    fn pick_import(&self, arrived: &[&SeqState]) -> Option<usize> {
+        if arrived.is_empty() {
+            None
+        } else {
+            Some(0)
+        }
+    }
 }
 
 /// First-come-first-served: queue order everywhere, alternate prefill and
@@ -148,6 +163,10 @@ impl SchedPolicy for PriorityFirst {
 
     fn decode_first(&self, alternate: bool) -> bool {
         alternate
+    }
+
+    fn pick_import(&self, arrived: &[&SeqState]) -> Option<usize> {
+        first_max_by_priority(arrived.iter().map(|s| s.req.priority))
     }
 }
 
@@ -320,6 +339,32 @@ mod tests {
         );
         assert!(!PriorityFirst.decode_first(false));
         assert!(PriorityFirst.decode_first(true));
+    }
+
+    #[test]
+    fn import_order_is_fifo_by_default_and_priority_aware_for_priority() {
+        let mk = |id: usize, prio: u8| SeqState {
+            req: Request::new(id, 64, 8).with_priority(prio),
+            phase: Phase::Decode { produced: 1 },
+            start_t: 0.0,
+            first_token_t: Some(1.0),
+            last_token_t: 1.0,
+        };
+        let arrived_owned = vec![mk(0, 0), mk(1, 0), mk(2, 1)];
+        let arrived: Vec<&SeqState> = arrived_owned.iter().collect();
+        // every legacy policy keeps head-of-line FIFO
+        assert_eq!(Fcfs.pick_import(&arrived), Some(0));
+        assert_eq!(ShortestPromptFirst.pick_import(&arrived), Some(0));
+        assert_eq!(DecodePriority.pick_import(&arrived), Some(0));
+        // the priority policy jumps the class-1 cache past two queued
+        // class-0 FIFO entries
+        assert_eq!(PriorityFirst.pick_import(&arrived), Some(2));
+        // all-flat priorities reduce to FIFO (the bit-identity guarantee)
+        let flat_owned = vec![mk(5, 0), mk(6, 0)];
+        let flat: Vec<&SeqState> = flat_owned.iter().collect();
+        assert_eq!(PriorityFirst.pick_import(&flat), Some(0));
+        assert_eq!(Fcfs.pick_import(&[]), None);
+        assert_eq!(PriorityFirst.pick_import(&[]), None);
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //! decode cache, and runs one fused decode step per iteration — Python is
 //! never on this path.
 
+use std::collections::HashMap;
 use std::time::Instant;
 
 #[cfg(feature = "pjrt")]
@@ -124,6 +125,20 @@ pub struct RealEngine<M: StepModel> {
     cache_aux: HostTensor,
     /// per-slot next input token (written by prefill epilogue / decode)
     next_token: Vec<i32>,
+    /// fused steps (the live engine's historic behavior): one iteration
+    /// refills/prefills free slots AND runs a decode step. `false` =
+    /// strict alternation (a prefill iteration skips its decode), the
+    /// live counterpart of the simulator's alternating batcher — kept so
+    /// the fused-vs-alternating comparison runs on real tokens too.
+    fusion: bool,
+    /// record per-request output-token transcripts into `emitted`. Opt-in
+    /// ([`RealEngine::with_transcripts`]) because the map retains every
+    /// token of every request for the engine's lifetime — fine for a
+    /// bounded test run, an unbounded leak on a long-running server.
+    record_transcripts: bool,
+    /// output tokens per request id, in emission order — the completed-
+    /// token streams the fusion inertness test compares across schedules
+    emitted: HashMap<usize, Vec<i32>>,
     t0: Instant,
     pub metrics: ServiceMetrics,
     pub steps: u64,
@@ -148,11 +163,37 @@ impl<M: StepModel> RealEngine<M> {
             queue: WaitQueue::open(),
             cache_main,
             cache_aux,
+            fusion: true,
+            record_transcripts: false,
+            emitted: HashMap::new(),
             model,
             t0: Instant::now(),
             metrics: ServiceMetrics::default(),
             steps: 0,
         })
+    }
+
+    /// Switch to strict prefill/decode alternation (see the `fusion`
+    /// field). The default engine fuses, as it always has.
+    pub fn alternating(mut self) -> Self {
+        self.fusion = false;
+        self
+    }
+
+    /// Record per-request output-token transcripts (see the
+    /// `record_transcripts` field for why this is opt-in).
+    pub fn with_transcripts(mut self) -> Self {
+        self.record_transcripts = true;
+        self
+    }
+
+    /// The output tokens emitted for request `id` so far, in order
+    /// (epilogue token first) — `None` unless
+    /// [`RealEngine::with_transcripts`] was enabled. Scheduling — fused
+    /// or alternating — may reorder *steps*, but never a request's own
+    /// token stream.
+    pub fn transcript(&self, id: usize) -> Option<&[i32]> {
+        self.emitted.get(&id).map(|v| v.as_slice())
     }
 
     fn now(&self) -> f64 {
@@ -200,8 +241,9 @@ impl<M: StepModel> RealEngine<M> {
 
     /// Refill free slots: admit waiting requests through the shared
     /// scheduler, batch-prefill them, and splice their cache rows into the
-    /// live cache.
-    fn refill(&mut self) -> EngineResult<()> {
+    /// live cache. Returns whether a prefill batch actually ran (the
+    /// alternating mode skips its decode step when one did).
+    fn refill(&mut self) -> EngineResult<bool> {
         let now = self.now();
         self.queue.release(now, self.sched.n_live());
         loop {
@@ -221,7 +263,7 @@ impl<M: StepModel> RealEngine<M> {
             .map(|(i, _)| i)
             .collect();
         if pre.is_empty() {
-            return Ok(());
+            return Ok(false);
         }
         let t = self.model.prefill_t();
         let mut tokens = vec![0i32; self.model.batch() * t];
@@ -236,12 +278,18 @@ impl<M: StepModel> RealEngine<M> {
         // retires at the epilogue (swap_remove inside the scheduler), which
         // only disturbs indices at or above the one being completed
         for (bi, &idx) in pre.iter().enumerate().rev() {
-            let (seq_id, plen) = {
+            let (req_id, seq_id, plen) = {
                 let s = &self.sched.seqs()[idx];
-                (s.req.id as u64, s.req.prompt_len)
+                (s.req.id, s.req.id as u64, s.req.prompt_len)
             };
-            // full prompt in one chunk: allocates the slot page and emits
-            // the first token (greedy, from the last prompt position)
+            // the epilogue token: greedy, from the last prompt position
+            let base = (bi * t + plen - 1) * vocab;
+            let tok = argmax(&logits.data[base..base + vocab]);
+            if self.record_transcripts {
+                self.emitted.entry(req_id).or_default().push(tok);
+            }
+            // full prompt in one chunk: allocates the slot page and
+            // accounts the first token
             let retired = self.sched.complete_prefill(idx, plen, now, &mut self.metrics);
             if retired.is_some() {
                 // single-token budget: the epilogue token was the whole
@@ -251,15 +299,19 @@ impl<M: StepModel> RealEngine<M> {
             let slot = self.slot_of(seq_id);
             splice_cache_row(&mut self.cache_main, &pm, slot, bi);
             splice_cache_row(&mut self.cache_aux, &pa, slot, bi);
-            let base = (bi * t + plen - 1) * vocab;
-            self.next_token[slot] = argmax(&logits.data[base..base + vocab]);
+            self.next_token[slot] = tok;
         }
-        Ok(())
+        Ok(true)
     }
 
     /// One engine iteration: refill slots, then one fused decode step.
+    /// In alternating mode an iteration that prefilled does *not* decode
+    /// — the live analogue of the simulator's alternating batcher.
     pub fn step(&mut self) -> EngineResult<()> {
-        self.refill()?;
+        let prefilled = self.refill()?;
+        if !self.fusion && prefilled {
+            return Ok(());
+        }
         let dec: Vec<usize> = self
             .sched
             .seqs()
@@ -290,13 +342,20 @@ impl<M: StepModel> RealEngine<M> {
         self.cache_aux = na;
         self.steps += 1;
         let now = self.now();
-        let touched: Vec<usize> = dec.iter().map(|&i| slot_of_idx[i]).collect();
+        let ids: Vec<usize> = dec.iter().map(|&i| self.sched.seqs()[i].req.id).collect();
         let finished = self.sched.complete_decode(&dec, now, &mut self.metrics);
         let freed: Vec<usize> = finished.iter().map(|f| f.pages[0] as usize).collect();
         let vocab = self.model.vocab();
-        for slot in touched {
+        for (&i, &id) in dec.iter().zip(&ids) {
+            let slot = slot_of_idx[i];
+            let tok = argmax(&logits.data[slot * vocab..(slot + 1) * vocab]);
+            // every decode step emits its token (a finished sequence's
+            // final token included); only live slots feed it back
+            if self.record_transcripts {
+                self.emitted.entry(id).or_default().push(tok);
+            }
             if !freed.contains(&slot) {
-                self.next_token[slot] = argmax(&logits.data[slot * vocab..(slot + 1) * vocab]);
+                self.next_token[slot] = tok;
             }
         }
         Ok(())
@@ -797,6 +856,42 @@ mod tests {
         let pool = eng.sched.pool();
         pool.check_invariants().unwrap();
         assert_eq!(pool.pages_free(), pool.pages_total());
+    }
+
+    #[test]
+    fn alternating_and_fused_serving_emit_identical_token_streams() {
+        // the live half of the fusion inertness guarantee: scheduling
+        // (fused vs strictly alternating iterations) may change *when*
+        // tokens are produced, but never *which* tokens each request gets
+        let reqs: Vec<(usize, usize)> =
+            vec![(16, 4), (30, 8), (3, 2), (20, 6), (8, 1), (11, 5), (27, 3)];
+        let run = |alternate: bool| {
+            let mut eng = RealEngine::new(MockModel::new()).unwrap().with_transcripts();
+            if alternate {
+                eng = eng.alternating();
+            }
+            for (i, &(p, d)) in reqs.iter().enumerate() {
+                eng.submit(Request::new(i, p, d));
+            }
+            eng.run_to_completion().unwrap();
+            eng
+        };
+        let fused = run(false);
+        let alt = run(true);
+        assert_eq!(fused.metrics.e2e.len(), reqs.len());
+        assert_eq!(alt.metrics.e2e.len(), reqs.len());
+        assert_eq!(fused.metrics.output_tokens, alt.metrics.output_tokens);
+        for (i, &(_, d)) in reqs.iter().enumerate() {
+            let f = fused.transcript(i).expect("fused transcript");
+            let a = alt.transcript(i).expect("alternating transcript");
+            assert_eq!(f.len(), d, "request {i} must emit its decode budget");
+            assert_eq!(f, a, "request {i}: token stream diverged");
+        }
+        // both engines drain their pools completely
+        for eng in [&fused, &alt] {
+            eng.sched.pool().check_invariants().unwrap();
+            assert_eq!(eng.sched.pool().pages_free(), eng.sched.pool().pages_total());
+        }
     }
 
     #[test]
