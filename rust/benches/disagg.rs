@@ -15,7 +15,18 @@
 //!   the price is prefill capacity (1P saturates first) plus the
 //!   migration hop. The break-even QPS per variant is where the unified
 //!   layout's median E2E catches back up (part 3 reports it).
-//! * **Determinism** — same seed, bit-identical metrics (part 4).
+//! * **Hiding the hop** (part 4) — streamed migration ships each
+//!   completed prefill chunk over the per-pair link fabric while later
+//!   chunks compute, so `Phase::Migrating` spans only the unshipped
+//!   tail. At every pre-knee QPS point, streaming must give strictly
+//!   lower median E2E *and* strictly lower decode-resume wait
+//!   (decode-side TTFT) than epilogue shipping, for both variants;
+//!   chunk + tail bytes must equal the whole cache (conservation).
+//! * **Determinism** — same seed, bit-identical metrics, streaming on
+//!   and off (part 5).
+//!
+//! Emits `BENCH_disagg.json` (parts 1 and 4) for the CI perf-trajectory
+//! artifact.
 //!
 //!     cargo bench --bench disagg
 
@@ -23,7 +34,8 @@ use gla_serve::cluster::{Cluster, RouterKind};
 use gla_serve::config::{ClusterSpec, ServingConfig, DSV2};
 use gla_serve::hardware::DeviceModel;
 use gla_serve::metrics::ServiceMetrics;
-use gla_serve::parallel::LinkTier;
+use gla_serve::parallel::{FabricSpec, LinkTier};
+use gla_serve::report::{BenchReport, Val};
 use gla_serve::sched::DriveMode;
 use gla_serve::workload::{generate_open, LengthDist};
 
@@ -31,6 +43,12 @@ const N: usize = 96;
 const SEED: u64 = 42;
 const DIST: LengthDist = LengthDist::Fixed { prompt: 8192, decode: 512 };
 const QPS_SWEEP: [f64; 4] = [0.5, 1.0, 2.0, 4.0];
+/// queue-wait median above this marks the knee (saturation onset)
+const KNEE_WAIT_S: f64 = 2.0;
+/// part 4 prefill tile: 8192-token prompts in 4 chunks, so 3 chunks'
+/// bytes can stream ahead of the epilogue (a single-tile prompt would
+/// leave nothing to hide)
+const STREAM_CHUNK: usize = 2048;
 
 fn run(variant: &str, spec: &ClusterSpec, qps: f64, link: LinkTier) -> ServiceMetrics {
     let m = DSV2;
@@ -48,6 +66,29 @@ fn run(variant: &str, spec: &ClusterSpec, qps: f64, link: LinkTier) -> ServiceMe
     c.metrics
 }
 
+/// Part 4 runner: 1P+3D over PCIe, 2048-token prefill tiles. Streaming
+/// on rides the per-pair fabric (the feature bundle under test);
+/// streaming off is the PR 2 epilogue path over the shared pipe.
+fn run_stream(variant: &str, qps: f64, stream: bool) -> ServiceMetrics {
+    let m = DSV2;
+    let mut serving = ServingConfig::with_parallelism(2, 1);
+    serving.prefill_chunk = STREAM_CHUNK;
+    serving.stream_migration = stream;
+    let fabric = if stream { FabricSpec::per_pair() } else { FabricSpec::shared() };
+    let mut c = Cluster::new(
+        m,
+        m.variant(variant),
+        serving,
+        DeviceModel::h100_serving(),
+        &ClusterSpec::disagg(1, 3).with_link(LinkTier::Pcie).with_fabric(fabric),
+        RouterKind::RoleAware,
+        DriveMode::Open,
+    );
+    c.submit(&generate_open(DIST, N, SEED, qps));
+    c.run();
+    c.metrics
+}
+
 fn layouts() -> Vec<ClusterSpec> {
     vec![
         ClusterSpec::unified(4),
@@ -57,6 +98,7 @@ fn layouts() -> Vec<ClusterSpec> {
 }
 
 fn main() {
+    let mut report = BenchReport::new("disagg");
     println!(
         "disagg — DSV2 (236B/21B FP8), 4 replicas x TP2, 8K/512 fixed, \
          n {N}, PCIe migration link"
@@ -85,6 +127,19 @@ fn main() {
                     met.migrated_bytes as f64 / 1e9,
                     met.migration_wait.median(),
                 );
+                report.push_row(&[
+                    ("part", Val::I(1)),
+                    ("variant", Val::s(*variant)),
+                    ("layout", Val::s(spec.label())),
+                    ("qps", Val::F(qps)),
+                    ("e2e_med_s", Val::F(e)),
+                    ("ttft_med_s", Val::F(ttft)),
+                    ("itl_med_ms", Val::F(itl)),
+                    ("tok_per_s", Val::F(tput)),
+                    ("migrations", Val::I(met.migrations)),
+                    ("migrated_bytes", Val::I(met.migrated_bytes)),
+                    ("migration_wait_med_s", Val::F(met.migration_wait.median())),
+                ]);
             }
             println!();
         }
@@ -121,7 +176,83 @@ fn main() {
         }
     }
 
-    println!("\n[4] link tiers and determinism (gla2, 1P+3D, 1 req/s)");
+    println!(
+        "\n[4] hiding the hop: streamed vs epilogue migration \
+         (1P+3D, {STREAM_CHUNK}-token tiles, PCIe)"
+    );
+    println!(
+        "{:<6} {:>6} {:>9} {:>10} {:>13} {:>11} {:>9}",
+        "var", "req/s", "mode", "E2E med(s)", "resume med(s)", "hidden GB", "overlap"
+    );
+    for variant in ["gqa4", "gla2"] {
+        let mut pre_knee_points = 0usize;
+        for &qps in &QPS_SWEEP {
+            let mut off = run_stream(variant, qps, false);
+            let mut on = run_stream(variant, qps, true);
+            for (mode, met) in [("epilogue", &off), ("stream", &on)] {
+                let mut m = met.clone();
+                println!(
+                    "{variant:<6} {qps:>6.2} {mode:>9} {:>10.1} {:>13.3} {:>11.2} {:>9.2}",
+                    m.e2e.median(),
+                    m.migration_wait.median(),
+                    m.migration_hidden_bytes as f64 / 1e9,
+                    m.migration_overlap_ratio(),
+                );
+            }
+            report.push_row(&[
+                ("part", Val::I(4)),
+                ("variant", Val::s(variant)),
+                ("qps", Val::F(qps)),
+                ("e2e_med_off_s", Val::F(off.e2e.median())),
+                ("e2e_med_on_s", Val::F(on.e2e.median())),
+                ("resume_med_off_s", Val::F(off.migration_wait.median())),
+                ("resume_med_on_s", Val::F(on.migration_wait.median())),
+                ("hidden_bytes", Val::I(on.migration_hidden_bytes)),
+                ("overlap_ratio", Val::F(on.migration_overlap_ratio())),
+            ]);
+            // conservation + inertness of the flag, at every point
+            assert_eq!(off.e2e.len(), N, "{variant}@{qps}: lost requests (off)");
+            assert_eq!(on.e2e.len(), N, "{variant}@{qps}: lost requests (on)");
+            assert_eq!(on.output_tokens, off.output_tokens);
+            assert_eq!(
+                on.migrated_bytes, off.migrated_bytes,
+                "{variant}@{qps}: streaming changed total wire content"
+            );
+            assert_eq!(off.migration_hidden_bytes, 0, "epilogue path hides nothing");
+            assert!(
+                on.migration_hidden_bytes > 0
+                    && on.migration_hidden_bytes < on.migrated_bytes,
+                "{variant}@{qps}: chunk bytes + tail must partition the cache"
+            );
+            assert_eq!(on.pages_exported, on.pages_imported);
+            // the asserted contract, at every pre-knee point: strictly
+            // lower median E2E and strictly lower decode-resume wait
+            if off.queue_wait.median() < KNEE_WAIT_S {
+                pre_knee_points += 1;
+                assert!(
+                    on.e2e.median() < off.e2e.median(),
+                    "{variant}@{qps}: streaming must beat epilogue E2E \
+                     ({:.3}s vs {:.3}s)",
+                    on.e2e.median(),
+                    off.e2e.median()
+                );
+                assert!(
+                    on.migration_wait.median() < off.migration_wait.median(),
+                    "{variant}@{qps}: streamed decode-resume must beat \
+                     whole-cache shipping ({:.4}s vs {:.4}s)",
+                    on.migration_wait.median(),
+                    off.migration_wait.median()
+                );
+            }
+        }
+        assert!(
+            pre_knee_points > 0,
+            "{variant}: the whole sweep saturated — no pre-knee point asserted"
+        );
+        println!();
+    }
+
+    println!("[5] link tiers and determinism (gla2, 1P+3D, 1 req/s)");
     let mut nv = run("gla2", &spec, 1.0, LinkTier::NvLink);
     let mut pcie = run("gla2", &spec, 1.0, LinkTier::Pcie);
     println!(
@@ -143,5 +274,10 @@ fn main() {
         "migration wait drifted"
     );
     assert_eq!(pcie.output_tokens, again.output_tokens);
-    println!("same seed reproduced bit-identically ✓");
+    let s1 = run_stream("gla2", 1.0, true);
+    let s2 = run_stream("gla2", 1.0, true);
+    assert_eq!(s1, s2, "streamed schedule drifted between identical runs");
+    println!("same seed reproduced bit-identically, streaming on and off ✓");
+
+    report.emit();
 }

@@ -27,6 +27,7 @@ use gla_serve::config::{ServingConfig, DSV2};
 use gla_serve::engine::{run_benchmark, run_benchmark_with};
 use gla_serve::hardware::DeviceModel;
 use gla_serve::metrics::ServiceMetrics;
+use gla_serve::report::{BenchReport, Val};
 use gla_serve::workload::{generate, generate_open, LengthDist};
 
 const N: usize = 160;
@@ -57,6 +58,7 @@ fn open(variant: &str, qps: f64, fusion: bool) -> ServiceMetrics {
 }
 
 fn main() {
+    let mut report = BenchReport::new("prefill_fusion");
     println!(
         "prefill_fusion — DSV2 (236B/21B FP8), 8xH100, 8K/1K open loop, \
          n {N}, step budget 8192 tokens"
@@ -93,6 +95,17 @@ fn main() {
                     m.ttft.median(),
                     m.throughput(),
                 );
+                report.push_row(&[
+                    ("part", Val::I(1)),
+                    ("variant", Val::s(variant)),
+                    ("qps", Val::F(qps)),
+                    ("fusion", Val::B(mode == "on")),
+                    ("itl_p50_ms", Val::F(m.itl.median() * 1e3)),
+                    ("itl_p99_ms", Val::F(m.itl.p99() * 1e3)),
+                    ("itl_mean_ms", Val::F(m.itl.mean() * 1e3)),
+                    ("ttft_med_s", Val::F(m.ttft.median())),
+                    ("tok_per_s", Val::F(m.throughput())),
+                ]);
             }
             if pre_knee {
                 knee_qps = qps;
@@ -166,4 +179,6 @@ fn main() {
     let y = open("gla2", 1.0, true);
     assert_eq!(x, y, "fused schedule drifted between identical runs");
     println!("same seed reproduced bit-identically ✓");
+
+    report.emit();
 }

@@ -25,6 +25,7 @@ use gla_serve::config::{ClusterSpec, ServingConfig, DSV2};
 use gla_serve::engine::run_benchmark_with;
 use gla_serve::hardware::DeviceModel;
 use gla_serve::metrics::ServiceMetrics;
+use gla_serve::report::{BenchReport, Val};
 use gla_serve::sched::DriveMode;
 use gla_serve::workload::{
     generate_open, generate_shared_prefix_open, LengthDist, SharedPrefixSpec,
@@ -82,6 +83,7 @@ fn run_cluster(variant: &str, spec: SharedPrefixSpec, router: RouterKind) -> Ser
 }
 
 fn main() {
+    let mut report = BenchReport::new("prefix_cache");
     println!(
         "prefix_cache — DSV2 (236B/21B FP8), TP2, shared-prefix chat \
          workloads, n {N}, page size 64"
@@ -106,6 +108,17 @@ fn main() {
                     on.prefill_tokens_skipped,
                     on.pages_shared,
                 );
+                report.push_row(&[
+                    ("part", Val::I(1)),
+                    ("variant", Val::s(variant)),
+                    ("share", Val::s(label)),
+                    ("qps", Val::F(qps)),
+                    ("ttft_mean_off_s", Val::F(off.ttft.mean())),
+                    ("ttft_mean_on_s", Val::F(on.ttft.mean())),
+                    ("hit_rate", Val::F(on.prefix_hit_rate())),
+                    ("prefill_tokens_skipped", Val::I(on.prefill_tokens_skipped)),
+                    ("pages_shared", Val::I(on.pages_shared)),
+                ]);
                 assert_eq!(on.e2e.len(), N, "lost requests with radix on");
                 assert_eq!(off.e2e.len(), N, "lost requests with radix off");
                 assert_eq!(on.output_tokens, off.output_tokens);
@@ -187,4 +200,6 @@ fn main() {
     assert_eq!(a.pages_shared, b.pages_shared);
     assert_eq!(a.output_tokens, b.output_tokens);
     println!("same seed reproduced bit-identically ✓");
+
+    report.emit();
 }

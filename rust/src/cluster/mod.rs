@@ -14,15 +14,25 @@
 //!                        Phase::Prefill       Phase::Decode ──▶ retire
 //!                            │ epilogue            ▲ import
 //!                            ▼ (first token)       │ (reservation
-//!                        export_seq ──▶ TransferLink admission)
+//!                        export_seq ──▶ LinkFabric   admission)
 //!                                   Phase::Migrating
 //! ```
 //!
-//! The cache crosses the link at
+//! The cache crosses the link fabric at
 //! [`Variant::kv_bytes_per_token_per_device`] cost per rank pair
 //! (NVLink or PCIe tier, [`crate::parallel::LinkTier`]), so the paper's
 //! headline per-variant byte count directly prices the disaggregation
 //! hop: GLA's ~2x smaller cache halves migration bytes and wait.
+//!
+//! With [`crate::config::ServingConfig::stream_migration`] armed the hop
+//! is *hidden* instead of paid at the epilogue: a prefill replica routes
+//! its destination at admission (or the first completed chunk — whenever
+//! a decode replica can first promise the pool space), ships each
+//! completed prefill chunk's layer-shard bytes over the `(src, dst)`
+//! link while later chunks still compute, and the epilogue ships only
+//! the unshipped tail. `Phase::Migrating` then spans just the residual
+//! transfer. Off (the default) the whole-cache-at-epilogue path runs
+//! bit-identically to the original model.
 //!
 //! Two stepping disciplines:
 //!
@@ -40,7 +50,9 @@ pub mod router;
 pub mod transfer;
 
 pub use router::{Router, RouterKind};
-pub use transfer::{Migration, TransferLink};
+pub use transfer::{LinkFabric, Migration};
+
+use std::collections::HashMap;
 
 use crate::attention::Variant;
 use crate::config::{ClusterSpec, ModelConfig, ServingConfig};
@@ -48,8 +60,17 @@ use crate::hardware::DeviceModel;
 use crate::kvcache::PagePool;
 use crate::metrics::ServiceMetrics;
 use crate::parallel::CollectiveModel;
-use crate::sched::{AdmitScope, DriveMode, Role, SchedPolicy, Scheduler, WaitQueue, Work};
+use crate::sched::{AdmitScope, DriveMode, Phase, Role, SchedPolicy, Scheduler, WaitQueue, Work};
 use crate::workload::Request;
+
+/// One streamed migration in progress: its `(src, dst)` route (the
+/// destination holds a pool reservation) and how many prompt tokens have
+/// already been shipped ahead of the epilogue.
+struct StreamRoute {
+    src: usize,
+    dst: usize,
+    shipped_tokens: usize,
+}
 
 /// One replica of the cluster: a role, a scheduler over its own KV pool,
 /// and (async discipline) its in-flight step with completion time.
@@ -85,7 +106,12 @@ pub struct Cluster {
     router: Router,
     queue: WaitQueue,
     policy: Box<dyn SchedPolicy>,
-    link: TransferLink,
+    fabric: LinkFabric,
+    /// streamed migrations in flight, keyed by request id — only ever
+    /// populated when `serving.stream_migration` is on. Iteration is
+    /// never over the map (determinism): lookups key off the (ordered)
+    /// per-replica sequence lists.
+    streams: HashMap<u64, StreamRoute>,
     lockstep: bool,
     clock: f64,
     pub metrics: ServiceMetrics,
@@ -141,6 +167,9 @@ impl Cluster {
                 if serving.fusion {
                     sched = sched.with_fusion(serving.max_step_tokens);
                 }
+                if serving.chunk_align {
+                    sched = sched.with_chunk_alignment();
+                }
                 ClusterReplica::new(role, sched)
             })
             .collect();
@@ -148,7 +177,8 @@ impl Cluster {
         let lockstep = all_unified && serving.hybrid_barrier && replicas.len() > 1;
         Cluster {
             coll: CollectiveModel::nvlink(&device.gpu),
-            link: TransferLink::new(spec.link.model(&device.gpu)),
+            fabric: LinkFabric::new(spec.link.model(&device.gpu), spec.fabric),
+            streams: HashMap::new(),
             policy: serving.policy.build(),
             queue: WaitQueue::new(drive),
             router: Router::new(router),
@@ -198,7 +228,7 @@ impl Cluster {
     /// the transfer link (the closed-loop generator counts both).
     fn live(&self) -> usize {
         self.replicas.iter().map(|r| r.sched.n_live()).sum::<usize>()
-            + self.link.n_in_system()
+            + self.fabric.n_in_system()
     }
 
     /// Distinct cache bytes per token, all layers — what one migrated
@@ -241,8 +271,11 @@ impl Cluster {
             if !self.replicas[ri].sched.can_admit_scoped(&req, scope) {
                 // a request even an EMPTY replica cannot hold would wait
                 // (and spin the virtual clock) forever — fail loudly
+                // (a replica holding only import reservations is not
+                // empty: the promised pages free once the cache retires)
                 assert!(
-                    self.replicas[ri].sched.n_live() > 0,
+                    self.replicas[ri].sched.n_live() > 0
+                        || self.replicas[ri].sched.reserved_imports() > 0,
                     "request {} ({} prompt + {} decode tokens) exceeds a {} \
                      replica's KV pool capacity of {} tokens",
                     req.id,
@@ -256,7 +289,42 @@ impl Cluster {
             let (req, send_t) = self.queue.remove(pick);
             self.replicas[ri].sched.admit(req, send_t, self.clock, &mut self.metrics);
             self.router.note_admitted(ri, self.replicas.len());
+            // streamed migration routes its destination AT ADMISSION when
+            // a decode replica can already promise the pool space; if
+            // none can, `stream_chunks` retries at each completed chunk
+            // (single-token requests retire at the epilogue — no route)
+            if self.serving.stream_migration
+                && self.replicas[ri].role == Role::Prefill
+                && req.decode_len > 1
+            {
+                self.try_route_stream(&req, ri);
+            }
         }
+    }
+
+    /// Pick and reserve a streamed-migration destination for `req`
+    /// prefilling on `src`: the least-loaded (live + promised imports)
+    /// import-eligible replica whose pool can promise the full-lifetime
+    /// footprint right now. Returns false when no replica can — the
+    /// sequence stays unrouted and falls back to the epilogue path
+    /// unless a later chunk finds room.
+    fn try_route_stream(&mut self, req: &Request, src: usize) -> bool {
+        let id = req.id as u64;
+        if self.streams.contains_key(&id) {
+            return true;
+        }
+        let dst = self
+            .replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.role.imports() && r.sched.can_reserve_import(req))
+            .min_by_key(|&(i, r)| (r.sched.n_live() + r.sched.reserved_imports(), i))
+            .map(|(i, _)| i);
+        let Some(dst) = dst else { return false };
+        self.replicas[dst].sched.reserve_import(req);
+        self.streams
+            .insert(id, StreamRoute { src, dst, shipped_tokens: 0 });
+        true
     }
 
     /// Per-replica (attention + TP-comm) time of one unit of work, plus
@@ -353,12 +421,60 @@ impl Cluster {
             }
         }
         if self.replicas[ri].role == Role::Prefill {
+            if self.serving.stream_migration {
+                self.stream_chunks(ri, now);
+            }
             self.export_finished(ri, now);
         }
     }
 
+    /// Streamed migration: ship the bytes of every newly-completed
+    /// prefill chunk on replica `ri` to its routed destination while the
+    /// later chunks still compute. A sequence with no route yet (no
+    /// decode replica could promise space at admission) retries routing
+    /// here — "at admission or first chunk" — and keeps degrading to the
+    /// plain epilogue path while the decode pools stay full. The shipped
+    /// pages stay pinned on the source (the sequence is still live and
+    /// prefilling over them) until the tail exports, which is the
+    /// source half of the conservation property.
+    fn stream_chunks(&mut self, ri: usize, now: f64) {
+        let wire_per_tok = self.wire_bytes_per_token();
+        let per_link_per_tok = self.per_link_bytes_per_token();
+        // snapshot first: routing reserves on *other* replicas' pools
+        let prefilling: Vec<(u64, usize, Request)> = self.replicas[ri]
+            .sched
+            .seqs()
+            .iter()
+            .filter_map(|s| match s.phase {
+                Phase::Prefill { done } if done > 0 && s.req.decode_len > 1 => {
+                    Some((s.req.id as u64, done, s.req))
+                }
+                _ => None,
+            })
+            .collect();
+        for (id, done, req) in prefilling {
+            if !self.streams.contains_key(&id) && !self.try_route_stream(&req, ri) {
+                continue;
+            }
+            let route = self.streams.get_mut(&id).expect("routed above");
+            let delta = done - route.shipped_tokens;
+            if delta == 0 {
+                continue;
+            }
+            route.shipped_tokens = done;
+            let (src, dst) = (route.src, route.dst);
+            self.metrics.migration_hidden_bytes += wire_per_tok * delta as u64;
+            self.fabric
+                .send_chunk(src, dst, per_link_per_tok * delta as f64, now);
+        }
+    }
+
     /// Ship every finished-prefill cache on replica `ri` (now in
-    /// `Phase::Decode` from the epilogue) onto the transfer link.
+    /// `Phase::Decode` from the epilogue) onto the link fabric: for a
+    /// streamed sequence only the unshipped tail crosses now (chunk
+    /// bytes + tail bytes == whole cache — the conservation property);
+    /// an unrouted sequence ships whole, exactly the original epilogue
+    /// model.
     fn export_finished(&mut self, ri: usize, now: f64) {
         while let Some(idx) = self.replicas[ri]
             .sched
@@ -366,12 +482,72 @@ impl Cluster {
             .iter()
             .position(|s| s.is_decoding())
         {
+            let req_id = self.replicas[ri].sched.seqs()[idx].req.id as u64;
             let (state, kv_tokens) =
                 self.replicas[ri].sched.export_seq(idx, &mut self.metrics);
             let wire = self.wire_bytes_per_token() * kv_tokens as u64;
-            let per_link = self.per_link_bytes_per_token() * kv_tokens as f64;
-            self.link.send(state, kv_tokens, wire, per_link, now);
+            let per_link_tok = self.per_link_bytes_per_token();
+            if let Some(route) = self.streams.remove(&req_id) {
+                // every byte is on the wire before the source frees a
+                // page: chunks went ahead, the tail goes right now
+                assert!(
+                    route.shipped_tokens < kv_tokens,
+                    "streamed more tokens than the cache stores"
+                );
+                let tail_tokens = kv_tokens - route.shipped_tokens;
+                let tail_bytes = self.wire_bytes_per_token() * tail_tokens as u64;
+                self.fabric.send_tail(
+                    route.src,
+                    route.dst,
+                    Some(route.dst),
+                    state,
+                    kv_tokens,
+                    wire,
+                    tail_bytes,
+                    per_link_tok * tail_tokens as f64,
+                    now,
+                );
+            } else {
+                // epilogue path: the whole cache in one shipment. A
+                // per-pair fabric still needs a concrete wire destination
+                // (the bytes land on one host): pin the least-loaded
+                // import-eligible replica. The shared pipe keeps the
+                // historic importer's-choice semantics bit for bit.
+                let (wire_dst, pin) = if self.fabric.spec().per_pair {
+                    let d = self.pick_wire_dst();
+                    (d, Some(d))
+                } else {
+                    (0, None)
+                };
+                self.fabric.send_tail(
+                    ri,
+                    wire_dst,
+                    pin,
+                    state,
+                    kv_tokens,
+                    wire,
+                    wire,
+                    per_link_tok * kv_tokens as f64,
+                    now,
+                );
+            }
         }
+    }
+
+    /// Wire destination for an unrouted epilogue export on a per-pair
+    /// fabric: least-committed import-eligible replica — live sequences
+    /// plus promised imports, the same load key `try_route_stream` uses
+    /// (capacity waits at import, like the original model — only the
+    /// wire needs a name, but pinning toward a replica whose pool is
+    /// already promised away would park the cache behind reservations).
+    fn pick_wire_dst(&self) -> usize {
+        self.replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.role.imports())
+            .min_by_key(|&(i, r)| (r.sched.n_live() + r.sched.reserved_imports(), i))
+            .map(|(i, _)| i)
+            .expect("constructor guarantees an import-eligible replica")
     }
 
     /// Land due transfers and re-admit them (reservation admission) into
@@ -380,33 +556,77 @@ impl Cluster {
     /// every legacy policy, priority-class-first for `priority` — and
     /// head-of-line on that order, exactly like pool-blocked admission.
     fn deliver_and_import(&mut self) {
-        self.link.deliver(self.clock);
+        self.fabric.deliver(self.clock);
+        // phase 1: land every RESERVED tail first (deterministic fabric
+        // order). Its pool space is already promised — importing it is
+        // unconditional progress, can never steal a page from anyone,
+        // and must not sit behind a pool-blocked unreserved head: an
+        // unroutable cache at the head of the queue would otherwise
+        // deadlock against the very reservation whose pages it is
+        // waiting for. A no-op whenever streaming is off.
+        loop {
+            let hit = self.fabric.arrived().iter().enumerate().find_map(|(i, m)| {
+                let d = m.dst?;
+                self.replicas[d]
+                    .sched
+                    .has_reservation(m.state.req.id as u64)
+                    .then_some((i, d))
+            });
+            let Some((i, d)) = hit else { break };
+            let m = self.fabric.remove_arrived(i).expect("found above");
+            self.metrics.migrated_bytes += m.bytes;
+            self.replicas[d].sched.import_seq(
+                m.state,
+                m.kv_tokens,
+                m.export_t,
+                self.clock,
+                &mut self.metrics,
+            );
+        }
+        // phase 2: everything else — policy-ordered, head-of-line
         loop {
             let (pick, target) = {
-                let arrived: Vec<&crate::sched::SeqState> =
-                    self.link.arrived().iter().map(|m| &m.state).collect();
-                let Some(pick) = self.policy.pick_import(&arrived) else { break };
-                let m = &self.link.arrived()[pick];
-                let best = self
-                    .replicas
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, r)| r.role.imports() && r.sched.can_import(&m.state))
-                    .min_by_key(|&(i, r)| (r.sched.n_live(), i))
-                    .map(|(i, _)| i);
-                if best.is_none() {
-                    // distinguish "waiting for pool space" from "can never
-                    // fit": if every import-eligible replica is empty and
-                    // still refuses, the run would spin forever
-                    let stuck = self
+                let arrived = self.fabric.arrived();
+                let states: Vec<&crate::sched::SeqState> =
+                    arrived.iter().map(|m| &m.state).collect();
+                let Some(pick) = self.policy.pick_import(&states) else { break };
+                let m = arrived[pick];
+                let best = match m.dst {
+                    // pinned destination: a streamed tail lands against
+                    // its reservation (always fits), a per-pair epilogue
+                    // shipment waits for the host its bytes landed on
+                    Some(d) => self.replicas[d]
+                        .sched
+                        .can_import(&m.state)
+                        .then_some(d),
+                    None => self
                         .replicas
                         .iter()
-                        .filter(|r| r.role.imports())
-                        .all(|r| r.sched.n_live() == 0);
+                        .enumerate()
+                        .filter(|(_, r)| r.role.imports() && r.sched.can_import(&m.state))
+                        .min_by_key(|&(i, r)| (r.sched.n_live(), i))
+                        .map(|(i, _)| i),
+                };
+                if best.is_none() {
+                    // distinguish "waiting for pool space" from "can never
+                    // fit": an eligible replica with neither live work nor
+                    // outstanding promises that still refuses would spin
+                    // the run forever
+                    let idle_refuses = |r: &ClusterReplica| {
+                        r.sched.n_live() == 0 && r.sched.reserved_imports() == 0
+                    };
+                    let stuck = match m.dst {
+                        Some(d) => idle_refuses(&self.replicas[d]),
+                        None => self
+                            .replicas
+                            .iter()
+                            .filter(|r| r.role.imports())
+                            .all(idle_refuses),
+                    };
                     assert!(
                         !stuck,
                         "migrated cache of request {} ({} tokens) exceeds \
-                         every decode replica's capacity",
+                         its decode replica's capacity",
                         m.state.req.id,
                         m.kv_tokens
                     );
@@ -414,7 +634,7 @@ impl Cluster {
                 (pick, best)
             };
             let Some(ri) = target else { break };
-            let m = self.link.remove_arrived(pick).expect("picked above");
+            let m = self.fabric.remove_arrived(pick).expect("picked above");
             self.metrics.migrated_bytes += m.bytes;
             self.replicas[ri].sched.import_seq(
                 m.state,
@@ -479,7 +699,10 @@ impl Cluster {
                     next = min_t(next, *t);
                 }
             }
-            if let Some(t) = self.link.next_ready() {
+            // never jump the idle clock past any link's next landing —
+            // tails gate imports, and chunk landings are harmless clock
+            // stops (nothing fires, the loop just re-plans)
+            if let Some(t) = self.fabric.next_ready() {
                 next = min_t(next, t);
             }
             if self
@@ -518,9 +741,11 @@ impl Cluster {
                 }
             }
         }
-        self.metrics.admission_probes =
-            self.replicas.iter().map(|r| r.sched.probe_count()).sum();
-        self.metrics.duration = self.clock - t0;
+        debug_assert!(
+            self.streams.is_empty(),
+            "drained run left a streamed migration un-exported"
+        );
+        self.finish_metrics(t0);
         self.clock - t0
     }
 
@@ -584,10 +809,18 @@ impl Cluster {
                 self.apply(ri, w, now);
             }
         }
+        self.finish_metrics(t0);
+        self.clock - t0
+    }
+
+    /// End-of-run metric rollup shared by both disciplines.
+    fn finish_metrics(&mut self, t0: f64) {
         self.metrics.admission_probes =
             self.replicas.iter().map(|r| r.sched.probe_count()).sum();
+        for (_, busy) in self.fabric.busy_times() {
+            self.metrics.link_busy_time.record(busy);
+        }
         self.metrics.duration = self.clock - t0;
-        self.clock - t0
     }
 }
 
@@ -632,6 +865,142 @@ mod tests {
         for r in c.replicas() {
             r.sched.pool().check_invariants().unwrap();
             assert_eq!(r.sched.pool().pages_free(), r.sched.pool().pages_total());
+        }
+    }
+
+    #[test]
+    fn streamed_migration_hides_bytes_and_conserves_everything() {
+        use crate::parallel::FabricSpec;
+        let m = DSV2;
+        let (prompt, chunk, n) = (4096usize, 1024usize, 24usize);
+        let reqs = generate(LengthDist::Fixed { prompt, decode: 64 }, n, 5);
+        let run = |stream: bool| {
+            let mut serving = ServingConfig::with_parallelism(2, 1);
+            serving.prefill_chunk = chunk;
+            serving.stream_migration = stream;
+            let mut c = Cluster::new(
+                m,
+                m.variant("gla2"),
+                serving,
+                DeviceModel::h100_serving(),
+                &ClusterSpec::disagg(1, 2).with_fabric(FabricSpec::per_pair()),
+                RouterKind::RoleAware,
+                DriveMode::Closed { concurrency: 8 },
+            );
+            c.submit(&reqs);
+            c.run();
+            for r in c.replicas() {
+                r.sched.pool().check_invariants().unwrap();
+                assert_eq!(r.sched.pool().pages_free(), r.sched.pool().pages_total());
+                assert_eq!(r.sched.reserved_imports(), 0, "leaked a reservation");
+            }
+            c.metrics
+        };
+        let off = run(false);
+        let on = run(true);
+        for met in [&off, &on] {
+            assert_eq!(met.e2e.len(), n);
+            assert_eq!(met.output_tokens, (n * 64) as u64);
+            assert_eq!(met.migrations, n as u64);
+            assert_eq!(met.pages_exported, met.pages_imported);
+            assert_eq!(met.preemptions, 0);
+        }
+        // identical total wire content either way...
+        assert_eq!(on.migrated_bytes, off.migrated_bytes);
+        assert_eq!(off.migration_hidden_bytes, 0, "epilogue path hides nothing");
+        // ...but streaming hides every chunk except the last: a 4096
+        // prompt in 1024-chunks ships 3072 tokens ahead of the epilogue
+        let wire_per_tok = m.variant("gla2").kv_bytes_per_token(m.dtype_bytes) as u64
+            * m.n_layers as u64;
+        assert_eq!(
+            on.migration_hidden_bytes,
+            (n * (prompt - chunk)) as u64 * wire_per_tok,
+            "every pre-epilogue chunk must stream"
+        );
+        assert!(on.migration_overlap_ratio() > 0.7);
+        // the migrating window spans only the tail: strictly less wait
+        let (mut on_w, mut off_w) = (on.migration_wait.clone(), off.migration_wait.clone());
+        assert!(
+            on_w.median() < off_w.median(),
+            "streamed tail wait {:.4}s must beat whole-cache wait {:.4}s",
+            on_w.median(),
+            off_w.median()
+        );
+        assert!(on.e2e.mean() <= off.e2e.mean(), "streaming must never cost E2E");
+    }
+
+    #[test]
+    fn streaming_off_is_identical_across_fabrics_on_a_single_pair() {
+        // with exactly one (src, dst) pair a per-pair fabric IS the
+        // shared pipe; streaming off must be byte-identical across both
+        // (the inertness half of the fabric rewrite)
+        use crate::parallel::FabricSpec;
+        let reqs = generate(
+            LengthDist::RandomRatio { max_prompt: 8192, max_decode: 128, ratio: 0.1 },
+            24,
+            13,
+        );
+        let run = |fabric: FabricSpec| {
+            let m = DSV2;
+            let mut c = Cluster::new(
+                m,
+                m.variant("gla2"),
+                ServingConfig::with_parallelism(2, 1),
+                DeviceModel::h100_serving(),
+                &ClusterSpec::disagg(1, 1).with_fabric(fabric),
+                RouterKind::RoleAware,
+                DriveMode::Closed { concurrency: 8 },
+            );
+            c.submit(&reqs);
+            c.run();
+            c.metrics
+        };
+        assert_eq!(run(FabricSpec::shared()), run(FabricSpec::per_pair()));
+    }
+
+    #[test]
+    fn unrouted_streams_fall_back_to_the_epilogue_path() {
+        // decode pool sized for ONE full-lifetime footprint: at most one
+        // reservation/import lives at a time, so trailing requests admit
+        // on the prefill replica unrouted and must still complete via
+        // whole-cache epilogue shipping
+        let m = DSV2;
+        let variant = m.variant("gla2");
+        let (prompt, decode) = (2048usize, 256usize);
+        let kv_per_token = variant.kv_bytes_per_token_per_device(2, m.dtype_bytes) as u64
+            * m.n_layers as u64;
+        let mut serving = ServingConfig::with_parallelism(2, 1);
+        serving.page_size = 64;
+        serving.prefill_chunk = 512;
+        serving.stream_migration = true;
+        serving.kv_hbm_budget = kv_per_token * (prompt + decode) as u64;
+        let mut c = Cluster::new(
+            m,
+            variant,
+            serving,
+            DeviceModel::h100_serving(),
+            &ClusterSpec::disagg(1, 1),
+            RouterKind::RoleAware,
+            DriveMode::Closed { concurrency: 4 },
+        );
+        c.submit(&generate(LengthDist::Fixed { prompt, decode }, 6, 2));
+        c.run();
+        assert_eq!(c.metrics.e2e.len(), 6);
+        assert_eq!(c.metrics.migrations, 6);
+        assert_eq!(c.metrics.output_tokens, 6 * 256);
+        assert_eq!(c.metrics.pages_exported, c.metrics.pages_imported);
+        // some caches streamed (hidden bytes), and with the decode pool
+        // holding one footprint not all of them could route eagerly —
+        // both paths coexist in one run
+        assert!(c.metrics.migration_hidden_bytes > 0);
+        assert!(
+            c.metrics.migration_hidden_bytes
+                < c.metrics.migrated_bytes,
+            "tails always pay something"
+        );
+        for r in c.replicas() {
+            assert_eq!(r.sched.reserved_imports(), 0);
+            r.sched.pool().check_invariants().unwrap();
         }
     }
 

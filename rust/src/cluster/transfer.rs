@@ -1,125 +1,322 @@
-//! The KV-cache migration path of disaggregated serving: a bandwidth-
-//! contended point-to-point link carrying finished prefill caches from
-//! prefill replicas to decode replicas.
+//! The KV-cache migration path of disaggregated serving: a fabric of
+//! bandwidth-contended point-to-point links carrying prefill-replica
+//! caches to decode replicas.
 //!
 //! Cost model: each of the `tp` rank pairs ships its own cache shard
-//! concurrently, so one migration occupies the link for
+//! concurrently, so one shipment occupies its link for
 //! `alpha + per_device_bytes / bw` seconds ([`CollectiveModel::p2p_time`]
 //! with the NVLink or PCIe tier from [`crate::parallel::LinkTier`]).
-//! Migrations are serialized FIFO over the link — that serialization *is*
+//! Shipments on the *same* link serialize FIFO — that serialization *is*
 //! the bandwidth contention, and it is what makes KV bytes per token
 //! (the paper's per-variant headline number) directly price the
 //! disaggregation hop: GLA's ~2x smaller cache halves both the bytes and
-//! the queueing the next migration sees.
+//! the queueing the next shipment sees.
+//!
+//! Two orthogonal upgrades over the original single-pipe model live here:
+//!
+//! * **[`LinkFabric`]** — links are keyed by `(src, dst)` replica pair
+//!   ([`FabricSpec::per_pair`]), so transfers between *disjoint* pairs no
+//!   longer falsely serialize; an optional per-tier shared ceiling
+//!   (`FabricSpec::channels`) caps how many pair links may be
+//!   mid-transfer at once (the host-root-complex bound of a PCIe-tier
+//!   fabric). The default [`FabricSpec::shared`] collapses every pair to
+//!   one FIFO pipe — bit-identical to the original model.
+//! * **Chunked migrations** — a migration is no longer one monolithic
+//!   shipment: a streaming source enqueues [`Shipment::Chunk`] bytes as
+//!   prefill chunks complete (the sequence still *live* on the source)
+//!   and finishes with a [`Shipment::Tail`] carrying the sequence itself
+//!   plus the unshipped residual. Per-link FIFO guarantees every chunk
+//!   lands before its tail, so "tail landed" == "whole cache landed" and
+//!   import needs no per-chunk bookkeeping. The epilogue path is the
+//!   degenerate case: zero chunks, the tail is the whole cache.
 
+use std::collections::BTreeMap;
 use std::collections::VecDeque;
 
-use crate::parallel::CollectiveModel;
+use crate::parallel::{CollectiveModel, FabricSpec};
 use crate::sched::SeqState;
 
-/// One cache in flight from a prefill replica to a decode replica. The
-/// sequence (phase [`crate::sched::Phase::Migrating`]) is owned here —
-/// by the link, not by any scheduler — until import.
+/// One importable cache arriving at a decode replica — the *tail* of a
+/// migration (for the epilogue path, the whole migration). The sequence
+/// (phase [`crate::sched::Phase::Migrating`]) is owned here — by the
+/// fabric, not by any scheduler — until import.
 #[derive(Debug, Clone)]
 pub struct Migration {
     pub state: SeqState,
-    /// KV tokens stored at export (== the prompt length at the epilogue)
+    /// KV tokens stored at export (== the prompt length at the epilogue);
+    /// the *whole* cache the importer materializes, not just the tail
     pub kv_tokens: usize,
-    /// distinct cache bytes shipped, all layers (metric accounting)
+    /// distinct cache bytes of the whole migration, all layers (metric
+    /// accounting: chunk shipments + tail == this)
     pub bytes: u64,
+    /// distinct bytes of the tail shipment itself (== `bytes` on the
+    /// epilogue path; `bytes - streamed` when chunks went ahead)
+    pub tail_bytes: u64,
     /// virtual time the cache left the prefill replica's pool
     pub export_t: f64,
     /// virtual time the last byte lands on the decode side
     pub ready_t: f64,
+    /// destination replica this cache is pinned to (streamed migrations
+    /// carry their reservation holder; `None` = importer's choice, the
+    /// epilogue path over a shared fabric)
+    pub dst: Option<usize>,
 }
 
-/// FIFO transfer queue over one interconnect link.
-#[derive(Debug)]
-pub struct TransferLink {
-    coll: CollectiveModel,
+/// One unit of traffic on a link.
+#[derive(Debug, Clone)]
+enum Shipment {
+    /// Bytes of a completed prefill chunk, streamed ahead while the
+    /// sequence is still prefilling on the source. Nothing happens at its
+    /// landing (FIFO ordering makes the tail the synchronization point);
+    /// it exists to occupy link bandwidth at the right time.
+    Chunk { ready_t: f64 },
+    /// The final shipment: the sequence itself + unshipped residual.
+    Tail(Box<Migration>),
+}
+
+impl Shipment {
+    fn ready_t(&self) -> f64 {
+        match self {
+            Shipment::Chunk { ready_t } => *ready_t,
+            Shipment::Tail(m) => m.ready_t,
+        }
+    }
+}
+
+/// FIFO transfer queue over one interconnect link (one `(src, dst)` pair
+/// of the fabric, or the single shared pipe).
+#[derive(Debug, Default)]
+struct TransferLink {
     /// when the link finishes its current backlog
     busy_until: f64,
     /// sent, last byte not yet landed (ready_t non-decreasing)
-    in_flight: VecDeque<Migration>,
-    /// landed, waiting for pool space on a decode replica
+    in_flight: VecDeque<Shipment>,
+    /// landed tails, waiting for pool space on a decode replica
     arrived: VecDeque<Migration>,
+    /// total seconds this link spent mid-transfer (per-pair busy metric)
+    busy_time: f64,
 }
 
 impl TransferLink {
-    pub fn new(coll: CollectiveModel) -> Self {
-        TransferLink {
-            coll,
-            busy_until: 0.0,
-            in_flight: VecDeque::new(),
-            arrived: VecDeque::new(),
+    /// Earliest pending landing on this link.
+    fn next_ready(&self) -> Option<f64> {
+        self.in_flight.front().map(|s| s.ready_t())
+    }
+
+    fn deliver(&mut self, now: f64) {
+        while self.in_flight.front().is_some_and(|s| s.ready_t() <= now) {
+            match self.in_flight.pop_front().expect("front checked") {
+                Shipment::Chunk { .. } => {} // landed; tail still syncs
+                Shipment::Tail(m) => self.arrived.push_back(*m),
+            }
         }
     }
 
-    /// Enqueue a migration at time `now`. `per_link_bytes` is the largest
-    /// per-rank shard (governs transfer time); `wire_bytes` is the
-    /// distinct cache content (recorded as `Migration::bytes`). The link
-    /// serves one migration at a time, so a busy link queues the transfer
-    /// behind `busy_until`.
-    pub fn send(
+    /// Tails owned by this link: in flight or awaiting import. Chunk
+    /// shipments are *not* counted — their sequence is still live (and
+    /// counted) on the source replica.
+    fn n_in_system(&self) -> usize {
+        self.in_flight
+            .iter()
+            .filter(|s| matches!(s, Shipment::Tail(_)))
+            .count()
+            + self.arrived.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.in_flight.is_empty() && self.arrived.is_empty()
+    }
+}
+
+/// The inter-replica link fabric: every KV-cache migration of the cluster
+/// crosses one of its links. With [`FabricSpec::shared`] (the default)
+/// there is exactly one link and the behavior is the original
+/// bandwidth-contended FIFO pipe, bit for bit; with
+/// [`FabricSpec::per_pair`] each `(src, dst)` replica pair owns a link
+/// and only same-pair traffic queues, optionally behind a fabric-wide
+/// channel ceiling.
+#[derive(Debug)]
+pub struct LinkFabric {
+    coll: CollectiveModel,
+    spec: FabricSpec,
+    /// BTreeMap for deterministic iteration order (import scans, metrics)
+    links: BTreeMap<(usize, usize), TransferLink>,
+    /// free-times of the shared channels (empty = unlimited): a shipment
+    /// additionally waits for the earliest-free channel, modeling the
+    /// per-tier ceiling on concurrent transfers
+    channels: Vec<f64>,
+}
+
+impl LinkFabric {
+    pub fn new(coll: CollectiveModel, spec: FabricSpec) -> Self {
+        let n = if spec.per_pair { spec.channels } else { 0 };
+        LinkFabric { coll, spec, links: BTreeMap::new(), channels: vec![0.0; n] }
+    }
+
+    pub fn spec(&self) -> FabricSpec {
+        self.spec
+    }
+
+    fn key(&self, src: usize, dst: usize) -> (usize, usize) {
+        if self.spec.per_pair {
+            (src, dst)
+        } else {
+            (0, 0)
+        }
+    }
+
+    /// Occupy the `(src, dst)` link for `per_link_bytes` starting no
+    /// earlier than `now`, respecting the link's FIFO backlog and the
+    /// fabric-wide channel ceiling. Returns the landing time.
+    fn occupy(&mut self, src: usize, dst: usize, per_link_bytes: f64, now: f64) -> f64 {
+        let key = self.key(src, dst);
+        let link = self.links.entry(key).or_default();
+        let mut start = if link.busy_until > now { link.busy_until } else { now };
+        let mut channel = None;
+        if !self.channels.is_empty() {
+            // earliest-free channel, ties to the lowest index (determinism)
+            let (ci, &free) = self
+                .channels
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).expect("NaN channel").then(a.0.cmp(&b.0)))
+                .expect("channels non-empty");
+            if free > start {
+                start = free;
+            }
+            channel = Some(ci);
+        }
+        let dur = self.coll.p2p_time(per_link_bytes);
+        let ready = start + dur;
+        let link = self.links.get_mut(&key).expect("entry created above");
+        link.busy_until = ready;
+        link.busy_time += dur;
+        if let Some(ci) = channel {
+            self.channels[ci] = ready;
+        }
+        ready
+    }
+
+    /// Stream one completed prefill chunk's bytes ahead of the sequence:
+    /// the chunk occupies the `(src, dst)` link like any transfer, but
+    /// carries no sequence — the source still owns (and keeps resident)
+    /// every page until the tail exports. Returns the landing time.
+    pub fn send_chunk(&mut self, src: usize, dst: usize, per_link_bytes: f64, now: f64) -> f64 {
+        let ready_t = self.occupy(src, dst, per_link_bytes, now);
+        let key = self.key(src, dst);
+        self.links
+            .get_mut(&key)
+            .expect("occupied above")
+            .in_flight
+            .push_back(Shipment::Chunk { ready_t });
+        ready_t
+    }
+
+    /// Enqueue a migration's final shipment at time `now`: the sequence
+    /// itself plus the unshipped residual. `per_link_bytes` is the
+    /// largest per-rank shard of the *tail* (governs transfer time);
+    /// `bytes`/`tail_bytes` are the distinct content of the whole
+    /// migration / of the tail (metric accounting); `kv_tokens` is the
+    /// whole cache the importer materializes. `pin_dst` pins the import
+    /// to one replica (the streamed path's reservation holder, and any
+    /// per-pair shipment — its bytes physically land there); `None`
+    /// leaves the choice to the importer (the shared-pipe epilogue path,
+    /// bit-identical to the original model).
+    #[allow(clippy::too_many_arguments)]
+    pub fn send_tail(
         &mut self,
+        src: usize,
+        dst: usize,
+        pin_dst: Option<usize>,
         state: SeqState,
         kv_tokens: usize,
-        wire_bytes: u64,
+        bytes: u64,
+        tail_bytes: u64,
         per_link_bytes: f64,
         now: f64,
     ) {
-        let start = if self.busy_until > now { self.busy_until } else { now };
-        let ready_t = start + self.coll.p2p_time(per_link_bytes);
-        self.busy_until = ready_t;
-        self.in_flight.push_back(Migration {
-            state,
-            kv_tokens,
-            bytes: wire_bytes,
-            export_t: now,
-            ready_t,
-        });
+        let ready_t = self.occupy(src, dst, per_link_bytes, now);
+        let key = self.key(src, dst);
+        self.links
+            .get_mut(&key)
+            .expect("occupied above")
+            .in_flight
+            .push_back(Shipment::Tail(Box::new(Migration {
+                state,
+                kv_tokens,
+                bytes,
+                tail_bytes,
+                export_t: now,
+                ready_t,
+                dst: pin_dst,
+            })));
     }
 
-    /// Move every migration whose last byte has landed (`ready_t <= now`)
-    /// to the arrived queue (FIFO order preserved).
+    /// Move every shipment whose last byte has landed (`ready_t <= now`):
+    /// chunks simply vanish (the tail is the synchronization point),
+    /// tails join their link's arrived queue (FIFO order preserved).
     pub fn deliver(&mut self, now: f64) {
-        while self
-            .in_flight
-            .front()
-            .is_some_and(|m| m.ready_t <= now)
-        {
-            let m = self.in_flight.pop_front().expect("front checked");
-            self.arrived.push_back(m);
+        for link in self.links.values_mut() {
+            link.deliver(now);
         }
     }
 
-    /// Earliest pending landing — the event an idle cluster must not jump
-    /// its virtual clock past.
+    /// Earliest pending landing across all links — the event an idle
+    /// cluster must not jump its virtual clock past.
     pub fn next_ready(&self) -> Option<f64> {
-        self.in_flight.front().map(|m| m.ready_t)
+        self.links
+            .values()
+            .filter_map(|l| l.next_ready())
+            .min_by(|a, b| a.partial_cmp(b).expect("NaN ready_t"))
     }
 
-    /// Landed migrations awaiting a decode-pool slot, in landing (FIFO)
-    /// order — the list the import-order policy hook
-    /// (`SchedPolicy::pick_import`) chooses from.
-    pub fn arrived(&self) -> &VecDeque<Migration> {
-        &self.arrived
+    /// Landed migrations awaiting a decode-pool slot, flattened across
+    /// links in *landing* order (`ready_t`, ties resolving in `(src,
+    /// dst)` key order — deterministic) — the list the import-order
+    /// policy hook ([`crate::sched::SchedPolicy::pick_import`]) chooses
+    /// from. Landing order matters: the FIFO head must be the globally
+    /// earliest-landed cache, exactly as on the shared pipe, or a
+    /// blocked head on one link would starve later links' imports.
+    /// Indexes returned here are valid for [`LinkFabric::remove_arrived`].
+    pub fn arrived(&self) -> Vec<&Migration> {
+        let mut v: Vec<&Migration> =
+            self.links.values().flat_map(|l| l.arrived.iter()).collect();
+        // stable sort: equal ready_t keeps the BTreeMap key order
+        v.sort_by(|a, b| a.ready_t.partial_cmp(&b.ready_t).expect("NaN ready_t"));
+        v
     }
 
-    /// Remove the i-th arrived migration (policy-picked import; index 0
+    /// Remove the i-th arrived migration in [`LinkFabric::arrived`]'s
+    /// landing order (policy-picked import; index 0 on a shared fabric
     /// reproduces the historic FIFO pop bit for bit).
     pub fn remove_arrived(&mut self, i: usize) -> Option<Migration> {
-        self.arrived.remove(i)
+        let mut order: Vec<((usize, usize), usize, f64)> = Vec::new();
+        for (&key, link) in &self.links {
+            for (j, m) in link.arrived.iter().enumerate() {
+                order.push((key, j, m.ready_t));
+            }
+        }
+        order.sort_by(|a, b| a.2.partial_cmp(&b.2).expect("NaN ready_t"));
+        let &(key, j, _) = order.get(i)?;
+        self.links.get_mut(&key).expect("key listed above").arrived.remove(j)
     }
 
-    /// Requests currently owned by the link (in flight or awaiting
-    /// import) — counted as live by the closed-loop generator.
+    /// Requests currently owned by the fabric (tails in flight or
+    /// awaiting import) — counted as live by the closed-loop generator.
+    /// Streamed *chunks* are excluded: their sequence is still live on
+    /// the source replica and counted there.
     pub fn n_in_system(&self) -> usize {
-        self.in_flight.len() + self.arrived.len()
+        self.links.values().map(|l| l.n_in_system()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.in_flight.is_empty() && self.arrived.is_empty()
+        self.links.values().all(|l| l.is_empty())
+    }
+
+    /// Per-link busy seconds, in deterministic key order — one sample per
+    /// pair link that ever carried traffic (the per-pair busy metric).
+    pub fn busy_times(&self) -> Vec<((usize, usize), f64)> {
+        self.links.iter().map(|(&k, l)| (k, l.busy_time)).collect()
     }
 }
 
@@ -129,10 +326,10 @@ mod tests {
     use crate::sched::{Phase, SeqState};
     use crate::workload::Request;
 
-    fn link() -> TransferLink {
+    fn fabric(spec: FabricSpec) -> LinkFabric {
         // 1 GB/s, 0.25 s alpha: exact binary fractions, so the expected
         // landing times below are exact and assert_eq! on f64 is safe
-        TransferLink::new(CollectiveModel { bus_bw: 1e9, alpha: 0.25 })
+        LinkFabric::new(CollectiveModel { bus_bw: 1e9, alpha: 0.25 }, spec)
     }
 
     fn seq(id: usize) -> SeqState {
@@ -145,35 +342,151 @@ mod tests {
         }
     }
 
+    fn whole(f: &mut LinkFabric, src: usize, dst: usize, id: usize, bytes: u64, pl: f64, now: f64) {
+        f.send_tail(src, dst, None, seq(id), 64, bytes, bytes, pl, now);
+    }
+
     #[test]
-    fn fifo_serialization_is_bandwidth_contention() {
-        let mut l = link();
-        // two 0.5 GB transfers sent back-to-back at t=1: each occupies
-        // the link for 0.25 + 0.5 = 0.75 s, so the second queues
-        l.send(seq(1), 64, 500_000_000, 5e8, 1.0);
-        l.send(seq(2), 64, 500_000_000, 5e8, 1.0);
-        assert_eq!(l.n_in_system(), 2);
-        assert_eq!(l.next_ready(), Some(1.75));
-        l.deliver(1.5);
-        assert!(l.arrived().front().is_none(), "nothing lands before ready_t");
-        l.deliver(1.75);
-        assert_eq!(l.arrived().front().unwrap().state.req.id, 1);
+    fn shared_fifo_serialization_is_bandwidth_contention() {
+        // the original single-pipe model, pinned bit for bit: two 0.5 GB
+        // transfers sent back-to-back at t=1 (each 0.25 + 0.5 = 0.75 s)
+        // serialize even though they cross DISJOINT replica pairs
+        let mut f = fabric(FabricSpec::shared());
+        whole(&mut f, 0, 2, 1, 500_000_000, 5e8, 1.0);
+        whole(&mut f, 1, 3, 2, 500_000_000, 5e8, 1.0);
+        assert_eq!(f.n_in_system(), 2);
+        assert_eq!(f.next_ready(), Some(1.75));
+        f.deliver(1.5);
+        assert!(f.arrived().is_empty(), "nothing lands before ready_t");
+        f.deliver(1.75);
+        assert_eq!(f.arrived()[0].state.req.id, 1);
         // second transfer queued behind the first: 1.75 + 0.75
-        assert_eq!(l.next_ready(), Some(2.5));
-        l.deliver(3.0);
-        assert_eq!(l.remove_arrived(0).unwrap().state.req.id, 1);
-        assert_eq!(l.remove_arrived(0).unwrap().state.req.id, 2);
-        assert!(l.is_empty());
+        assert_eq!(f.next_ready(), Some(2.5));
+        f.deliver(3.0);
+        assert_eq!(f.remove_arrived(0).unwrap().state.req.id, 1);
+        assert_eq!(f.remove_arrived(0).unwrap().state.req.id, 2);
+        assert!(f.is_empty());
+        // one link, busy for two full transfers
+        let busy = f.busy_times();
+        assert_eq!(busy.len(), 1);
+        assert_eq!(busy[0].1, 1.5);
+    }
+
+    #[test]
+    fn per_pair_fabric_overlaps_disjoint_pairs_and_serializes_same_pair() {
+        let mut f = fabric(FabricSpec::per_pair());
+        // disjoint pairs (0,2) and (1,3): both land at 1.75, no queueing
+        whole(&mut f, 0, 2, 1, 500_000_000, 5e8, 1.0);
+        whole(&mut f, 1, 3, 2, 500_000_000, 5e8, 1.0);
+        assert_eq!(f.next_ready(), Some(1.75));
+        f.deliver(1.75);
+        assert_eq!(f.arrived().len(), 2, "disjoint pairs must overlap");
+        // per-pair shipments land pinned to their wire destination
+        assert_eq!(f.arrived()[0].dst, None); // pin is the caller's choice
+        let _ = f.remove_arrived(0);
+        let _ = f.remove_arrived(0);
+        // same pair (0,2): the second still FIFO-serializes behind the first
+        whole(&mut f, 0, 2, 3, 500_000_000, 5e8, 10.0);
+        whole(&mut f, 0, 2, 4, 500_000_000, 5e8, 10.0);
+        f.deliver(10.75);
+        assert_eq!(f.arrived().len(), 1, "same-pair transfers stay FIFO");
+        assert_eq!(f.next_ready(), Some(11.5));
+        f.deliver(11.5);
+        assert_eq!(f.arrived().len(), 2);
+    }
+
+    #[test]
+    fn channel_ceiling_caps_concurrent_transfers() {
+        // 3 disjoint pairs, ceiling 2: the third transfer waits for the
+        // earliest channel to free even though its own link is idle
+        let mut f = fabric(FabricSpec::per_pair_capped(2));
+        whole(&mut f, 0, 3, 1, 500_000_000, 5e8, 1.0); // ch0: 1.0 -> 1.75
+        whole(&mut f, 1, 4, 2, 500_000_000, 5e8, 1.0); // ch1: 1.0 -> 1.75
+        whole(&mut f, 2, 5, 3, 500_000_000, 5e8, 1.0); // waits: 1.75 -> 2.5
+        f.deliver(1.75);
+        assert_eq!(f.arrived().len(), 2);
+        assert_eq!(f.next_ready(), Some(2.5), "third transfer queued on the ceiling");
+        f.deliver(2.5);
+        assert_eq!(f.arrived().len(), 3);
+        // unlimited channels: all three would have landed together
+        let mut open = fabric(FabricSpec::per_pair());
+        whole(&mut open, 0, 3, 1, 500_000_000, 5e8, 1.0);
+        whole(&mut open, 1, 4, 2, 500_000_000, 5e8, 1.0);
+        whole(&mut open, 2, 5, 3, 500_000_000, 5e8, 1.0);
+        open.deliver(1.75);
+        assert_eq!(open.arrived().len(), 3);
+    }
+
+    #[test]
+    fn arrived_flattens_in_landing_order_across_links() {
+        // lower (src, dst) key but LATER landing must not head the
+        // import queue: the FIFO head is the globally earliest-landed
+        // cache, exactly as on the shared pipe
+        let mut f = fabric(FabricSpec::per_pair());
+        whole(&mut f, 1, 3, 1, 500_000_000, 5e8, 1.0); // ready 1.75
+        whole(&mut f, 0, 2, 2, 1_000_000_000, 1e9, 1.0); // ready 2.25
+        f.deliver(2.25);
+        let a = f.arrived();
+        assert_eq!(a[0].state.req.id, 1, "earlier landing heads the queue");
+        assert_eq!(a[1].state.req.id, 2);
+        assert_eq!(f.remove_arrived(0).unwrap().state.req.id, 1);
+        assert_eq!(f.remove_arrived(0).unwrap().state.req.id, 2);
+        assert!(f.is_empty());
     }
 
     #[test]
     fn idle_link_restarts_at_now() {
-        let mut l = link();
-        l.send(seq(1), 64, 1_000, 0.0, 1.0);
-        l.deliver(10.0);
-        let _ = l.remove_arrived(0);
+        let mut f = fabric(FabricSpec::shared());
+        whole(&mut f, 0, 1, 1, 1_000, 0.0, 1.0);
+        f.deliver(10.0);
+        let _ = f.remove_arrived(0);
         // link idle since 1.25; a send at t=5 starts at 5, not busy_until
-        l.send(seq(2), 64, 1_000_000_000, 1e9, 5.0);
-        assert_eq!(l.next_ready(), Some(6.25)); // 5 + 0.25 + 1.0
+        whole(&mut f, 0, 1, 2, 1_000_000_000, 1e9, 5.0);
+        assert_eq!(f.next_ready(), Some(6.25)); // 5 + 0.25 + 1.0
+    }
+
+    #[test]
+    fn chunks_stream_ahead_and_tail_is_the_sync_point() {
+        let mut f = fabric(FabricSpec::per_pair());
+        // two 0.25 GB chunks stream at t=1 and t=2 while the sequence
+        // keeps prefilling on the source; each takes 0.25 + 0.25 = 0.5 s
+        let r1 = f.send_chunk(0, 1, 2.5e8, 1.0);
+        assert_eq!(r1, 1.5);
+        let r2 = f.send_chunk(0, 1, 2.5e8, 2.0);
+        assert_eq!(r2, 2.5);
+        // chunks are NOT in-system requests (their seq is live on src)
+        assert_eq!(f.n_in_system(), 0);
+        assert_eq!(f.next_ready(), Some(1.5), "chunk landings are clock events");
+        // the tail (same pair => behind both chunks by FIFO) carries the
+        // sequence and the whole-cache accounting
+        f.send_tail(0, 1, Some(1), seq(7), 64, 1_000_000_000, 500_000_000, 5e8, 3.0);
+        assert_eq!(f.n_in_system(), 1);
+        f.deliver(2.9);
+        assert!(f.arrived().is_empty(), "chunks landing import nothing");
+        f.deliver(3.75); // tail: 3.0 + 0.25 + 0.5
+        let m = f.remove_arrived(0).expect("tail landed");
+        assert_eq!(m.state.req.id, 7);
+        assert_eq!(m.kv_tokens, 64, "importer materializes the whole cache");
+        assert_eq!(m.bytes, 1_000_000_000);
+        assert_eq!(m.tail_bytes, 500_000_000);
+        assert_eq!(m.dst, Some(1), "streamed tails stay pinned to the reservation");
+        assert!(f.is_empty());
+        // busy time counted the chunks too: 0.5 + 0.5 + 0.75
+        assert_eq!(f.busy_times(), vec![((0, 1), 1.75)]);
+    }
+
+    #[test]
+    fn tail_lands_after_its_chunks_even_when_sent_later() {
+        // FIFO within the pair: a tail sent while chunks are still in
+        // flight queues behind them, so "tail landed" == "cache landed"
+        let mut f = fabric(FabricSpec::shared());
+        let c = f.send_chunk(0, 1, 1e9, 1.0); // 1.0 -> 2.25
+        f.send_tail(0, 1, Some(1), seq(9), 64, 2_000_000_000, 1_000_000_000, 1e9, 1.1);
+        assert_eq!(c, 2.25);
+        f.deliver(2.25);
+        assert!(f.arrived().is_empty());
+        f.deliver(3.5); // tail: 2.25 + 1.25
+        assert_eq!(f.arrived().len(), 1);
+        assert_eq!(f.arrived()[0].ready_t, 3.5);
     }
 }

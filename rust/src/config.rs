@@ -7,7 +7,7 @@
 //! §B.6).
 
 use crate::attention::Variant;
-use crate::parallel::LinkTier;
+use crate::parallel::{FabricSpec, LinkTier};
 use crate::sched::{DriveMode, PolicyKind, Role};
 
 /// Transformer shapes relevant to the performance models.
@@ -148,6 +148,21 @@ pub struct ServingConfig {
     /// tile, so a fused step never computes more than an unfused prefill
     /// step did. Only read when `fusion` is on.
     pub max_step_tokens: usize,
+    /// decode-aware chunk alignment for the fused planner: round a
+    /// budget-shaved prefill chunk down to a page multiple so the shave
+    /// (decode batch carved out of the first chunk) doesn't strand a
+    /// straggler tail chunk. Off by default — the PR 4 budget math is the
+    /// bit-identical legacy path. Only read when `fusion` is on.
+    pub chunk_align: bool,
+    /// streamed KV-cache migration (disaggregated layouts): a prefill
+    /// replica routes its destination at admission (or first completed
+    /// chunk), ships each completed prefill chunk's layer-shard bytes on
+    /// the `(src, dst)` link while later chunks still compute, and the
+    /// epilogue ships only the unshipped tail — `Phase::Migrating` spans
+    /// just the residual instead of the whole cache. Off by default: the
+    /// whole-cache-at-epilogue path is the bit-identical legacy model
+    /// (`benches/disagg.rs` pins it).
+    pub stream_migration: bool,
 }
 
 impl Default for ServingConfig {
@@ -166,6 +181,8 @@ impl Default for ServingConfig {
             prefix_cache: false,
             fusion: false,
             max_step_tokens: 8192,
+            chunk_align: false,
+            stream_migration: false,
         }
     }
 }
@@ -211,24 +228,43 @@ impl ServingConfig {
         self
     }
 
+    /// Enable decode-aware chunk alignment in the fused planner.
+    pub fn with_chunk_alignment(mut self) -> Self {
+        self.chunk_align = true;
+        self
+    }
+
+    /// Enable streamed KV-cache migration on prefill replicas.
+    pub fn with_stream_migration(mut self) -> Self {
+        self.stream_migration = true;
+        self
+    }
+
     pub fn total_gpus(&self) -> usize {
         self.tp * self.dp
     }
 }
 
 /// Cluster topology for `cluster::Cluster`: the role of each replica
-/// (every replica is a `ServingConfig::tp`-way TP group) and the
-/// interconnect tier migrated KV caches cross between them.
+/// (every replica is a `ServingConfig::tp`-way TP group), the
+/// interconnect tier migrated KV caches cross between them, and the
+/// shape of the link fabric carrying them (one shared pipe, or one link
+/// per `(src, dst)` replica pair — see [`FabricSpec`]).
 #[derive(Debug, Clone)]
 pub struct ClusterSpec {
     pub roles: Vec<Role>,
     pub link: LinkTier,
+    pub fabric: FabricSpec,
 }
 
 impl ClusterSpec {
     /// `dp` identical unified replicas — the classic data-parallel layout.
     pub fn unified(dp: usize) -> Self {
-        ClusterSpec { roles: vec![Role::Unified; dp.max(1)], link: LinkTier::default() }
+        ClusterSpec {
+            roles: vec![Role::Unified; dp.max(1)],
+            link: LinkTier::default(),
+            fabric: FabricSpec::default(),
+        }
     }
 
     /// Disaggregated layout: `n_prefill` prefill-only replicas shipping
@@ -236,11 +272,16 @@ impl ClusterSpec {
     pub fn disagg(n_prefill: usize, n_decode: usize) -> Self {
         let mut roles = vec![Role::Prefill; n_prefill];
         roles.extend(vec![Role::Decode; n_decode]);
-        ClusterSpec { roles, link: LinkTier::default() }
+        ClusterSpec { roles, link: LinkTier::default(), fabric: FabricSpec::default() }
     }
 
     pub fn with_link(mut self, link: LinkTier) -> Self {
         self.link = link;
+        self
+    }
+
+    pub fn with_fabric(mut self, fabric: FabricSpec) -> Self {
+        self.fabric = fabric;
         self
     }
 
@@ -307,6 +348,12 @@ mod tests {
             ClusterSpec::disagg(2, 2).with_link(LinkTier::Pcie).link,
             LinkTier::Pcie
         );
+        // the fabric defaults to the legacy shared pipe
+        assert_eq!(d.fabric, FabricSpec::shared());
+        assert_eq!(
+            ClusterSpec::disagg(2, 2).with_fabric(FabricSpec::per_pair()).fabric,
+            FabricSpec::per_pair()
+        );
     }
 
     #[test]
@@ -322,6 +369,10 @@ mod tests {
         assert!(!c.fusion, "fusion must default off (alternating legacy)");
         assert_eq!(c.max_step_tokens, 8192, "budget matches the prefill tile");
         assert!(c.clone().with_prefix_cache().prefix_cache);
+        assert!(!c.chunk_align, "chunk alignment must default off");
+        assert!(!c.stream_migration, "streamed migration must default off");
+        assert!(c.clone().with_chunk_alignment().chunk_align);
+        assert!(c.clone().with_stream_migration().stream_migration);
         let fused = c.with_fusion().with_step_budget(4096);
         assert!(fused.fusion);
         assert_eq!(fused.max_step_tokens, 4096);

@@ -11,6 +11,7 @@
 //! * [`kvcache`] — paged pool, prefix radix, §4.2 gather strategies
 //! * [`workload`] — §B.6 request-length distributions + open-loop arrivals
 //! * [`metrics`] — service-level summaries (E2E/TTFT/ITL/throughput)
+//! * [`report`] — machine-readable `BENCH_*.json` emitter for CI artifacts
 //! * [`sched`] — the shared scheduling core: request lifecycle, paged-KV
 //!   admission, pluggable policies, preemption — executed by BOTH engines
 //! * [`cluster`] — cluster orchestration: heterogeneous replica roles
@@ -33,6 +34,7 @@ pub mod hardware;
 pub mod kvcache;
 pub mod metrics;
 pub mod parallel;
+pub mod report;
 pub mod sched;
 pub mod workload;
 

@@ -10,11 +10,16 @@
 //!                                simulated DSV2 closed-loop benchmark row
 //!   qps    [variant] [tp] [dp] [rate] [policy]
 //!                                simulated DSV2 open-loop (Poisson) row
-//!   disagg [variant] [tp] [nP] [nD] [rate] [link] [router]
+//!   disagg [variant] [tp] [nP] [nD] [rate] [link] [router] [migrate] [fabric]
 //!                                disaggregated prefill/decode cluster:
 //!                                nP prefill + nD decode replicas (tp each)
 //!                                under open-loop Poisson arrivals, caches
-//!                                migrating over `nvlink` or `pcie`
+//!                                migrating over `nvlink` or `pcie`;
+//!                                `migrate` = `epilogue` (default) or
+//!                                `stream` (layer-streamed, overlapped
+//!                                with prefill); `fabric` = `shared`
+//!                                (default), `pair`, or `pair:N` (per-
+//!                                replica-pair links, ceiling N)
 //!   prefix [variant] [tp] [dp] [rate] [families] [prefix_len] [router]
 //!                                prefix-cache-aware admission on a
 //!                                shared-prefix (multi-turn chat) workload:
@@ -32,7 +37,7 @@ use gla_serve::cluster::{Cluster, RouterKind};
 use gla_serve::config::{ClusterSpec, ServingConfig, DSV2};
 use gla_serve::engine::{run_benchmark, run_benchmark_with};
 use gla_serve::hardware::DeviceModel;
-use gla_serve::parallel::{paper_layouts, shard_plan, LinkTier};
+use gla_serve::parallel::{paper_layouts, shard_plan, FabricSpec, LinkTier};
 use gla_serve::sched::{DriveMode, PolicyKind};
 use gla_serve::workload::{
     generate, generate_open, generate_shared_prefix_open, LengthDist, SharedPrefixSpec,
@@ -210,12 +215,31 @@ fn main() {
                 })
                 .unwrap_or_default();
             let router = router_arg(&args, 8, RouterKind::RoleAware);
+            let stream = match args.get(9).map(String::as_str) {
+                None | Some("epilogue") => false,
+                Some("stream") => true,
+                Some(s) => {
+                    eprintln!("unknown migrate mode `{s}` (try: epilogue stream)");
+                    std::process::exit(2);
+                }
+            };
+            let fabric = args
+                .get(10)
+                .map(|s| {
+                    FabricSpec::parse(s).unwrap_or_else(|| {
+                        eprintln!("unknown fabric `{s}` (try: shared pair pair:N)");
+                        std::process::exit(2);
+                    })
+                })
+                .unwrap_or_default();
             let m = DSV2;
-            let spec = ClusterSpec::disagg(n_p, n_d).with_link(link);
+            let spec = ClusterSpec::disagg(n_p, n_d).with_link(link).with_fabric(fabric);
+            let mut serving = ServingConfig::with_parallelism(tp, 1);
+            serving.stream_migration = stream;
             let mut cluster = Cluster::new(
                 m,
                 m.variant(&variant),
-                ServingConfig::with_parallelism(tp, 1),
+                serving,
                 DeviceModel::h100_serving(),
                 &spec,
                 router,
@@ -231,17 +255,23 @@ fn main() {
             let met = &mut cluster.metrics;
             let (e2e, ttft, itl, tput) = met.paper_row();
             println!(
-                "{variant} {} TP{tp} {rate:.2} req/s over {} ({}): e2e {e2e:.1}s \
-                 ttft {ttft:.1}s itl {itl:.1}ms {tput:.0} tok/s",
+                "{variant} {} TP{tp} {rate:.2} req/s over {} {} fabric ({}, \
+                 {} migration): e2e {e2e:.1}s ttft {ttft:.1}s itl {itl:.1}ms \
+                 {tput:.0} tok/s",
                 spec.label(),
                 link.name(),
+                fabric.name(),
                 router.name(),
+                if stream { "streamed" } else { "epilogue" },
             );
             println!(
-                "  migrations {} | migrated {:.2} GB | migration-wait med \
-                 {:.3}s p99 {:.3}s | preemptions {}",
+                "  migrations {} | migrated {:.2} GB | hidden {:.2} GB \
+                 (overlap {:.0}%) | migration-wait med {:.3}s p99 {:.3}s | \
+                 preemptions {}",
                 met.migrations,
                 met.migrated_bytes as f64 / 1e9,
+                met.migration_hidden_bytes as f64 / 1e9,
+                met.migration_overlap_ratio() * 100.0,
                 met.migration_wait.median(),
                 met.migration_wait.p99(),
                 met.preemptions,

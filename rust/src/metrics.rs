@@ -124,6 +124,13 @@ pub struct ServiceMetrics {
     pub pages_exported: u64,
     /// pool pages allocated by decode replicas at cache import
     pub pages_imported: u64,
+    /// migration bytes that crossed the link *while their prefill was
+    /// still computing* (streamed chunk shipments) — the hidden part of
+    /// the disaggregation hop; 0 when streamed migration is off
+    pub migration_hidden_bytes: u64,
+    /// total busy seconds per fabric link (one sample per `(src, dst)`
+    /// pair that carried traffic; a shared fabric contributes one)
+    pub link_busy_time: Summary,
     /// admissions that probed the prefix-cache radix index (prefix
     /// caching enabled; the hit-rate denominator)
     pub prefix_lookups: u64,
@@ -159,6 +166,18 @@ impl ServiceMetrics {
             0.0
         } else {
             self.prefix_hits as f64 / self.prefix_lookups as f64
+        }
+    }
+
+    /// Fraction of migration bytes hidden behind prefill compute
+    /// (streamed chunks / total migrated): 0 with streaming off, and
+    /// approaching `1 - chunk/prompt` when every chunk but the last
+    /// streams ahead of the epilogue.
+    pub fn migration_overlap_ratio(&self) -> f64 {
+        if self.migrated_bytes == 0 {
+            0.0
+        } else {
+            self.migration_hidden_bytes as f64 / self.migrated_bytes as f64
         }
     }
 
@@ -228,6 +247,18 @@ mod tests {
         assert_ne!(a, b);
         let c = ServiceMetrics { output_tokens: 1, ..Default::default() };
         assert_ne!(c, ServiceMetrics::default());
+    }
+
+    #[test]
+    fn migration_overlap_ratio_guards_zero_bytes() {
+        let m = ServiceMetrics::default();
+        assert_eq!(m.migration_overlap_ratio(), 0.0);
+        let m = ServiceMetrics {
+            migrated_bytes: 1000,
+            migration_hidden_bytes: 750,
+            ..Default::default()
+        };
+        assert_eq!(m.migration_overlap_ratio(), 0.75);
     }
 
     #[test]

@@ -170,6 +170,72 @@ impl LinkTier {
     }
 }
 
+/// Shape of the inter-replica link fabric a cluster's KV-cache migrations
+/// cross (see `cluster::transfer::LinkFabric`).
+///
+/// * `shared()` (the default) is one FIFO pipe every `(src, dst)` replica
+///   pair contends on — the original migration model, bit-identical.
+/// * `per_pair()` gives every `(src, dst)` pair its own FIFO link at the
+///   tier's point-to-point bandwidth (a switched fabric): transfers
+///   between *disjoint* pairs no longer falsely serialize, while
+///   same-pair transfers still queue in order.
+/// * `channels` is the per-tier shared ceiling: at most that many pair
+///   links may be mid-transfer at once (0 = unlimited — a full-bisection
+///   switch). A PCIe-tier fabric crossing one host root complex would set
+///   a small ceiling; transfers past it queue for the next free channel.
+///   Channels are claimed greedily in *enqueue* order: a shipment that
+///   also queues behind its own link's backlog holds its channel from
+///   the claim, so the ceiling is conservative — it can start a transfer
+///   on an idle link slightly later than an optimal interval schedule
+///   would, but it never exceeds the cap and stays deterministic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FabricSpec {
+    /// one link per (src, dst) replica pair instead of one shared pipe
+    pub per_pair: bool,
+    /// max concurrently-active transfers across the whole fabric
+    /// (0 = unlimited); only meaningful with `per_pair`
+    pub channels: usize,
+}
+
+impl FabricSpec {
+    /// The legacy single shared FIFO pipe (default).
+    pub fn shared() -> Self {
+        FabricSpec { per_pair: false, channels: 0 }
+    }
+
+    /// Full-bisection switched fabric: every replica pair owns a link.
+    pub fn per_pair() -> Self {
+        FabricSpec { per_pair: true, channels: 0 }
+    }
+
+    /// Per-pair links behind a shared ceiling of `channels` concurrent
+    /// transfers (the host-root-complex bound of a PCIe-tier fabric).
+    pub fn per_pair_capped(channels: usize) -> Self {
+        FabricSpec { per_pair: true, channels }
+    }
+
+    pub fn name(self) -> &'static str {
+        if self.per_pair {
+            "per-pair"
+        } else {
+            "shared"
+        }
+    }
+
+    /// CLI-friendly parse: `shared`, `pair`/`per-pair`, or `pair:N`
+    /// (per-pair with a shared ceiling of N concurrent transfers).
+    pub fn parse(s: &str) -> Option<FabricSpec> {
+        match s {
+            "shared" => Some(FabricSpec::shared()),
+            "pair" | "per-pair" => Some(FabricSpec::per_pair()),
+            _ => {
+                let n = s.strip_prefix("pair:")?.parse().ok()?;
+                Some(FabricSpec::per_pair_capped(n))
+            }
+        }
+    }
+}
+
 /// The §5.2 parallelism sweep: layouts compared in Fig. 4 (right)/Fig. 10.
 pub fn paper_layouts() -> Vec<Topology> {
     vec![Topology::new(8, 1), Topology::new(4, 2), Topology::new(2, 4)]
@@ -235,6 +301,22 @@ mod tests {
         assert_eq!(LinkTier::parse("nvlink"), Some(LinkTier::NvLink));
         assert_eq!(LinkTier::parse("infiniband"), None);
         assert_eq!(LinkTier::default().name(), "nvlink");
+    }
+
+    #[test]
+    fn fabric_spec_parse_and_defaults() {
+        assert_eq!(FabricSpec::default(), FabricSpec::shared());
+        assert_eq!(FabricSpec::parse("shared"), Some(FabricSpec::shared()));
+        assert_eq!(FabricSpec::parse("pair"), Some(FabricSpec::per_pair()));
+        assert_eq!(FabricSpec::parse("per-pair"), Some(FabricSpec::per_pair()));
+        assert_eq!(
+            FabricSpec::parse("pair:2"),
+            Some(FabricSpec::per_pair_capped(2))
+        );
+        assert_eq!(FabricSpec::parse("pair:x"), None);
+        assert_eq!(FabricSpec::parse("mesh"), None);
+        assert_eq!(FabricSpec::shared().name(), "shared");
+        assert_eq!(FabricSpec::per_pair().name(), "per-pair");
     }
 
     #[test]

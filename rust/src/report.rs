@@ -1,0 +1,168 @@
+//! Machine-readable bench reports: each serving bench emits a
+//! `BENCH_<name>.json` next to its human-readable stdout so CI can
+//! archive the perf trajectory across PRs (the workflow uploads
+//! `target/bench-json/` as an artifact).
+//!
+//! Hand-rolled JSON because the default build is dependency-free (no
+//! serde): a report is a flat list of rows, each row a list of
+//! `(key, value)` fields, serialized as `{"bench": ..., "rows": [...]}`.
+//! Writers should keep keys stable across PRs — downstream tooling diffs
+//! them by name.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// One JSON scalar. Non-finite floats serialize as `null` (JSON has no
+/// NaN/inf) rather than producing an unparsable file.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Val {
+    F(f64),
+    I(u64),
+    S(String),
+    B(bool),
+}
+
+impl Val {
+    pub fn s(v: impl Into<String>) -> Val {
+        Val::S(v.into())
+    }
+
+    fn render(&self, out: &mut String) {
+        match self {
+            Val::F(x) if x.is_finite() => out.push_str(&format!("{x}")),
+            Val::F(_) => out.push_str("null"),
+            Val::I(x) => out.push_str(&format!("{x}")),
+            Val::B(x) => out.push_str(if *x { "true" } else { "false" }),
+            Val::S(x) => {
+                out.push('"');
+                for c in x.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => {
+                            out.push_str(&format!("\\u{:04x}", c as u32))
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+        }
+    }
+}
+
+/// A bench's machine-readable result table.
+#[derive(Debug, Default)]
+pub struct BenchReport {
+    name: String,
+    rows: Vec<Vec<(String, Val)>>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> Self {
+        BenchReport { name: name.to_string(), rows: Vec::new() }
+    }
+
+    /// Append one row of `(key, value)` fields.
+    pub fn push_row(&mut self, fields: &[(&str, Val)]) {
+        self.rows
+            .push(fields.iter().map(|(k, v)| (k.to_string(), v.clone())).collect());
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Serialize to a JSON object string (stable field order).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"bench\": ");
+        Val::s(&self.name).render(&mut out);
+        out.push_str(", \"rows\": [");
+        for (i, row) in self.rows.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push('{');
+            for (j, (k, v)) in row.iter().enumerate() {
+                if j > 0 {
+                    out.push_str(", ");
+                }
+                Val::s(k).render(&mut out);
+                out.push_str(": ");
+                v.render(&mut out);
+            }
+            out.push('}');
+        }
+        out.push_str("]}\n");
+        out
+    }
+
+    /// Write `BENCH_<name>.json` under `dir`, creating it as needed.
+    pub fn write_to(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        fs::create_dir_all(dir)?;
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+
+    /// Write to `$BENCH_JSON_DIR` (default `target/bench-json`, i.e.
+    /// inside the crate's target dir when run via cargo) and report the
+    /// outcome on stdout/stderr. Never fails the bench: the JSON is a CI
+    /// artifact, not part of the asserted contract.
+    pub fn emit(&self) {
+        let dir = std::env::var("BENCH_JSON_DIR")
+            .unwrap_or_else(|_| "target/bench-json".into());
+        match self.write_to(Path::new(&dir)) {
+            Ok(path) => println!("\n[bench-json] wrote {}", path.display()),
+            Err(e) => eprintln!("\n[bench-json] could not write {dir}: {e}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_serializes_stable_json() {
+        let mut r = BenchReport::new("disagg");
+        r.push_row(&[
+            ("variant", Val::s("gla2")),
+            ("qps", Val::F(0.5)),
+            ("migrations", Val::I(96)),
+            ("stream", Val::B(true)),
+        ]);
+        r.push_row(&[("e2e_med_s", Val::F(12.25))]);
+        assert_eq!(r.n_rows(), 2);
+        assert_eq!(
+            r.to_json(),
+            "{\"bench\": \"disagg\", \"rows\": [{\"variant\": \"gla2\", \
+             \"qps\": 0.5, \"migrations\": 96, \"stream\": true}, \
+             {\"e2e_med_s\": 12.25}]}\n"
+        );
+    }
+
+    #[test]
+    fn report_escapes_and_guards_nonfinite() {
+        let mut r = BenchReport::new("x");
+        r.push_row(&[("s", Val::s("a\"b\\c\nd")), ("nan", Val::F(f64::NAN))]);
+        let json = r.to_json();
+        assert!(json.contains("\"a\\\"b\\\\c\\nd\""));
+        assert!(json.contains("\"nan\": null"));
+    }
+
+    #[test]
+    fn report_writes_a_file() {
+        let dir = std::env::temp_dir().join("gla_serve_report_test");
+        let mut r = BenchReport::new("unit");
+        r.push_row(&[("k", Val::I(1))]);
+        let path = r.write_to(&dir).expect("write");
+        assert!(path.ends_with("BENCH_unit.json"));
+        let back = std::fs::read_to_string(&path).expect("read back");
+        assert_eq!(back, r.to_json());
+        let _ = std::fs::remove_file(path);
+    }
+}

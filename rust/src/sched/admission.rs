@@ -206,23 +206,27 @@ impl Scheduler {
             return 0;
         }
         let key = (req.id as u64, self.epoch());
-        if let Some(pages) = self.probe_cache_get(key) {
-            return pages;
-        }
-        let pages = self
-            .probe_prefix(req)
-            .map_or(0, |(_, m)| m / self.pool.page_size);
-        self.probe_cache_put(key, pages);
-        pages
+        let res = match self.probe_cache_get(key) {
+            Some(res) => res,
+            None => {
+                let res = self.probe_prefix(req);
+                self.probe_cache_put(key, res);
+                res
+            }
+        };
+        res.map_or(0, |(_, m)| m / self.pool.page_size)
     }
 
     /// The reservation inequality, in free-list terms: the pages every
-    /// live sequence has *yet to take* plus the new request's residual
-    /// need must fit in the free list. With no prefix sharing this is
-    /// algebraically identical to the historic "sum of full footprints vs
-    /// pool total" rule (every resident page then belongs to exactly one
-    /// table); with sharing it stays exact, because refcounted shared
-    /// pages are physical pages counted once, wherever they are resident.
+    /// live sequence has *yet to take*, plus the pages promised to
+    /// in-flight streamed caches ([`Scheduler::reserve_import`] — a term
+    /// that is zero whenever streamed migration is off), plus the new
+    /// request's residual need must fit in the free list. With no prefix
+    /// sharing this is algebraically identical to the historic "sum of
+    /// full footprints vs pool total" rule (every resident page then
+    /// belongs to exactly one table); with sharing it stays exact,
+    /// because refcounted shared pages are physical pages counted once,
+    /// wherever they are resident.
     pub(crate) fn fits_residual(
         &self,
         req: &Request,
@@ -239,11 +243,12 @@ impl Scheduler {
                     .saturating_sub(have)
             })
             .sum();
+        let reserved = self.reserved_pages(req.id as u64);
         let need = self
             .pool
             .pages_needed(scope.footprint_tokens(req))
             .saturating_sub(shared_pages);
-        future + need <= self.pool.pages_free()
+        future + reserved + need <= self.pool.pages_free()
     }
 }
 

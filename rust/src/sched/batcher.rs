@@ -74,6 +74,29 @@ impl Scheduler {
         self.pool.pages_to_grow(self.seqs[idx].req.id as u64, chunk)
     }
 
+    /// Budget-clamped chunk for `idx` in a fused step. With
+    /// [`super::Scheduler::with_chunk_alignment`] a chunk that the budget
+    /// (not the prompt) cut short is rounded down to a page multiple:
+    /// the fused budget shaves the first chunk by the decode batch size,
+    /// and without alignment that shave re-appears at the end of the
+    /// prompt as a tiny straggler tail chunk paying a full step overhead.
+    /// A chunk that rounds to zero is simply not planned this step.
+    fn budget_chunk(&self, idx: usize, tokens_left: usize) -> usize {
+        let full = self.chunk_of(idx);
+        let clamped = full.min(tokens_left);
+        if !self.align_chunks || clamped == full {
+            return clamped;
+        }
+        let aligned = (clamped / self.pool.page_size) * self.pool.page_size;
+        // never round a chunk away entirely: a sub-page budget remainder
+        // plans unaligned rather than idling a step (livelock guard)
+        if aligned == 0 {
+            clamped
+        } else {
+            aligned
+        }
+    }
+
     /// Pick one engine step of work (without running it). Pool-aware: a
     /// prefill chunk is only planned when its pages fit right now. With
     /// fusion off this is the legacy alternating plan, untouched; with
@@ -158,14 +181,14 @@ impl Scheduler {
                 .iter()
                 .copied()
                 .filter(|&i| {
-                    let chunk = self.chunk_of(i).min(tokens_left);
+                    let chunk = self.budget_chunk(i, tokens_left);
                     chunk > 0 && self.prefill_pages_needed(i, chunk) <= pages_left
                 })
                 .collect();
             let Some(idx) = self.policy.pick_prefill(&self.seqs, &fits) else {
                 break;
             };
-            let chunk = self.chunk_of(idx).min(tokens_left);
+            let chunk = self.budget_chunk(idx, tokens_left);
             pages_left -= self.prefill_pages_needed(idx, chunk);
             tokens_left -= chunk;
             prefill.push((idx, chunk));
@@ -270,6 +293,48 @@ mod tests {
         let _ = s.complete_prefill(0, 6, 1.0, &mut m);
         s.complete_decode(&[0], 2.0, &mut m);
         assert_eq!(s.plan(), Work::Idle);
+    }
+
+    #[test]
+    fn chunk_alignment_rounds_budget_shaved_chunks_to_page_multiples() {
+        let mut m = ServiceMetrics::default();
+        // one decoding seq + one 16-token prompt, page size 4, chunk 8,
+        // budget 7: the decode token leaves 6 tokens of budget
+        let mk = |aligned: bool| {
+            let mut s = fused(32, 4, 8, 7);
+            if aligned {
+                s = s.with_chunk_alignment();
+            }
+            s.admit(Request::new(1, 4, 4), 0.0, 0.0, &mut m);
+            let _ = s.complete_prefill(0, 4, 1.0, &mut m); // now decoding
+            s.admit(Request::new(2, 16, 2), 0.0, 1.0, &mut m);
+            s
+        };
+        // legacy: the shaved chunk is 6 (leaves a 16-6-8 = 2-token
+        // straggler two steps later); aligned: rounded down to 4
+        assert_eq!(
+            mk(false).plan(),
+            Work::Mixed { decode: vec![0], prefill: vec![(1, 6)] }
+        );
+        assert_eq!(
+            mk(true).plan(),
+            Work::Mixed { decode: vec![0], prefill: vec![(1, 4)] }
+        );
+        // a chunk the budget did NOT cut short is never touched
+        let mut s = fused(32, 4, 8, 64).with_chunk_alignment();
+        s.admit(Request::new(3, 6, 2), 0.0, 0.0, &mut m);
+        assert_eq!(s.plan(), Work::PrefillChunk { idx: 0, chunk: 6 });
+    }
+
+    #[test]
+    fn chunk_alignment_never_rounds_a_step_away() {
+        // sub-page budget remainder: rounding to zero would idle the
+        // step forever (no decode to make progress) — the guard plans
+        // the unaligned remainder instead
+        let mut m = ServiceMetrics::default();
+        let mut s = fused(32, 4, 8, 3).with_chunk_alignment();
+        s.admit(Request::new(1, 16, 2), 0.0, 0.0, &mut m);
+        assert_eq!(s.plan(), Work::PrefillChunk { idx: 0, chunk: 3 });
     }
 
     #[test]

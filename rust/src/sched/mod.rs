@@ -82,6 +82,10 @@ impl Role {
     }
 }
 
+/// Single-entry admission-probe memo: `(request id, scheduler epoch,
+/// probe result)` — see the `probe_cache` field on [`Scheduler`].
+type ProbeMemo = (u64, u64, Option<(SeqId, usize)>);
+
 /// One admitted sequence: its request, phase and latency clocks.
 #[derive(Debug, Clone)]
 pub struct SeqState {
@@ -140,6 +144,18 @@ pub struct Scheduler {
     /// per-step token budget of the fused planner (decode tokens +
     /// prefill chunk tokens); only read when `fusion` is on
     pub(crate) max_step_tokens: usize,
+    /// fused-planner chunk alignment ([`Scheduler::with_chunk_alignment`]):
+    /// round a budget-shaved prefill chunk down to a page multiple so the
+    /// shave doesn't strand a straggler tail chunk. Off = the exact
+    /// PR 4 budget math, bit for bit.
+    pub(crate) align_chunks: bool,
+    /// destination-side reservations for in-flight streamed migrations:
+    /// `(seq id, full-lifetime footprint tokens)` promised to caches that
+    /// have not landed yet. Counted by [`Scheduler::fits_residual`] next
+    /// to live sequences' future needs, so admission/import can never
+    /// hand a promised page to someone else (the import-deadlock guard of
+    /// streamed migration). Always empty when streaming is off.
+    reserved: Vec<(SeqId, usize)>,
     /// monotone counter over seq-list changes; [`Scheduler::epoch`]
     /// combines it with the pool's occupancy epoch so memoized admission
     /// probes invalidate exactly when the answer could change
@@ -148,10 +164,11 @@ pub struct Scheduler {
     /// routing both count here — the memoized re-checks do not)
     probes: Cell<u64>,
     /// single-entry memo of the last admission probe, keyed
-    /// `(request id, epoch) -> shared pages`: the pool-blocked
-    /// head-of-line request re-checked every engine pump stops paying
-    /// O(prompt) per pump
-    probe_cache: Cell<Option<(u64, u64, usize)>>,
+    /// `(request id, epoch) -> probe result (owner, matched tokens)`:
+    /// the pool-blocked head-of-line request re-checked every engine pump
+    /// stops paying O(prompt) per pump, and [`Scheduler::admit`] reuses
+    /// the probe its `can_admit` check already ran
+    probe_cache: Cell<Option<ProbeMemo>>,
 }
 
 impl Scheduler {
@@ -172,6 +189,8 @@ impl Scheduler {
             radix: None,
             fusion: false,
             max_step_tokens: 0,
+            align_chunks: false,
+            reserved: Vec::new(),
             seq_epoch: 0,
             probes: Cell::new(0),
             probe_cache: Cell::new(None),
@@ -192,6 +211,17 @@ impl Scheduler {
 
     pub fn fusion_enabled(&self) -> bool {
         self.fusion
+    }
+
+    /// Enable decode-aware chunk alignment in the fused planner: a
+    /// prefill chunk clamped by the step budget is rounded *down* to a
+    /// page multiple, so the budget shave (decode batch size carved out
+    /// of the first chunk) cannot strand a tiny straggler tail chunk.
+    /// Only read when fusion is on; off by default (the PR 4 budget math
+    /// is the bit-identical legacy path).
+    pub fn with_chunk_alignment(mut self) -> Self {
+        self.align_chunks = true;
+        self
     }
 
     /// Scheduler-state validity token for memoized probe/route decisions:
@@ -215,15 +245,30 @@ impl Scheduler {
         self.probes.set(self.probes.get() + 1);
     }
 
-    pub(crate) fn probe_cache_get(&self, key: (u64, u64)) -> Option<usize> {
+    pub(crate) fn probe_cache_get(&self, key: (u64, u64)) -> Option<Option<(SeqId, usize)>> {
         match self.probe_cache.get() {
-            Some((id, ep, pages)) if (id, ep) == key => Some(pages),
+            Some((id, ep, res)) if (id, ep) == key => Some(res),
             _ => None,
         }
     }
 
-    pub(crate) fn probe_cache_put(&self, key: (u64, u64), pages: usize) {
-        self.probe_cache.set(Some((key.0, key.1, pages)));
+    pub(crate) fn probe_cache_put(&self, key: (u64, u64), res: Option<(SeqId, usize)>) {
+        self.probe_cache.set(Some((key.0, key.1, res)));
+    }
+
+    /// Memoized probe with pre-materialized prompt tokens: consult the
+    /// `(request id, epoch)` memo first (a hit costs nothing and keeps
+    /// [`Scheduler::probe_count`] flat), probe and fill it on a miss.
+    /// This is how [`Scheduler::admit`] reuses the probe its
+    /// [`Scheduler::can_admit`] check already ran at the same epoch.
+    fn cached_probe_with(&self, req_id: u64, toks: &[u32]) -> Option<(SeqId, usize)> {
+        let key = (req_id, self.epoch());
+        if let Some(res) = self.probe_cache_get(key) {
+            return res;
+        }
+        let res = self.probe_prefix_with(toks);
+        self.probe_cache_put(key, res);
+        res
     }
 
     /// Enable prefix-cache-aware admission: prompts are indexed in a
@@ -335,7 +380,7 @@ impl Scheduler {
                 Some(radix) if !radix.is_empty() => req.prompt_tokens(),
                 _ => Vec::new(),
             };
-            if let Some((owner, m)) = self.probe_prefix_with(&toks) {
+            if let Some((owner, m)) = self.cached_probe_with(req.id as u64, &toks) {
                 let forked = self.pool.fork_prefix(owner, req.id as u64, m);
                 debug_assert!(forked, "probe_prefix validated owner residency");
                 if forked {
@@ -559,7 +604,52 @@ impl Scheduler {
     /// fresh pages (`PagePool::import`), never forks, so the reservation
     /// must cover the full footprint.
     pub fn can_import(&self, state: &SeqState) -> bool {
+        // a cache this replica reserved for (streamed migration) already
+        // holds its promise: the reservation has been counted against
+        // every admission/import decision since it was made
+        if self.has_reservation(state.req.id as u64) {
+            return true;
+        }
         self.fits_residual(&state.req, AdmitScope::FullLifetime, 0)
+    }
+
+    /// Streamed migration, destination side: can this replica *promise*
+    /// pool space for `req`'s full lifetime before a single byte lands?
+    /// Same reservation inequality as [`Scheduler::can_import`]; existing
+    /// reservations are counted, so promises never overlap.
+    pub fn can_reserve_import(&self, req: &Request) -> bool {
+        self.fits_residual(req, AdmitScope::FullLifetime, 0)
+    }
+
+    /// Record a destination-side reservation for a streamed migration:
+    /// the full prompt+decode footprint is held against this pool until
+    /// the cache lands and [`Scheduler::import_seq`] consumes it. The
+    /// caller must check [`Scheduler::can_reserve_import`] first.
+    pub fn reserve_import(&mut self, req: &Request) {
+        self.seq_epoch += 1; // memoized probes must see the state change
+        self.reserved
+            .push((req.id as u64, req.prompt_len + req.decode_len));
+    }
+
+    /// Pending streamed-import reservations (tests/debug visibility).
+    pub fn reserved_imports(&self) -> usize {
+        self.reserved.len()
+    }
+
+    /// Does this replica hold an import reservation for `seq_id`?
+    pub fn has_reservation(&self, seq_id: SeqId) -> bool {
+        self.reserved.iter().any(|(id, _)| *id == seq_id)
+    }
+
+    /// Pages currently promised to in-flight streamed caches, excluding
+    /// any reservation held for `except` (so a reservation is never
+    /// double-counted against its own import).
+    pub(crate) fn reserved_pages(&self, except: SeqId) -> usize {
+        self.reserved
+            .iter()
+            .filter(|(id, _)| *id != except)
+            .map(|(_, toks)| self.pool.pages_needed(*toks))
+            .sum()
     }
 
     /// Disaggregated handoff, import side: re-admit a migrated sequence
@@ -582,6 +672,9 @@ impl Scheduler {
         };
         state.phase = Phase::Decode { produced };
         let seq_id = state.req.id as u64;
+        // a streamed cache consumes the reservation it landed against
+        // (no-op for the epilogue path, which never reserves)
+        self.reserved.retain(|(id, _)| *id != seq_id);
         let ok = self.pool.import(seq_id, kv_tokens);
         assert!(ok, "reservation admission must guarantee import space");
         let pages = self.pool.table(seq_id).map_or(0, |t| t.len());
@@ -944,6 +1037,88 @@ mod tests {
         let _ = s.export_seq(0, &mut m);
         assert!(s.probe_prefix(&mate).is_none(), "exported owner must not match");
         s.pool().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admit_reuses_the_can_admit_probe_memo() {
+        // the PR 4 leftover: the admission-time radix probe must reuse
+        // the memo `can_admit` filled at the same epoch, so a checked
+        // admission costs ONE probe total, not two
+        let mut m = ServiceMetrics::default();
+        // 6 pages of 4 tokens; owner reserves 3 (8 prompt + 2 decode)
+        let mut s = sched(6, 4, 8192).with_prefix_cache();
+        let owner = Request::new(1, 8, 2).with_shared_prefix(5, 8);
+        s.admit(owner, 0.0, 0.0, &mut m);
+        let _ = s.complete_prefill(0, 8, 1.0, &mut m);
+        assert_eq!(s.probe_count(), 0, "cold index never probes");
+        // mate fits only residually: can_admit must probe (once)...
+        let mate = Request::new(2, 12, 2).with_shared_prefix(5, 8);
+        assert!(s.can_admit(&mate));
+        assert_eq!(s.probe_count(), 1);
+        // ...and admit reuses that exact probe through the memo
+        s.admit(mate, 0.0, 2.0, &mut m);
+        assert_eq!(s.probe_count(), 1, "admit re-probed a memoized result");
+        assert_eq!(m.prefix_hits, 1, "the memoized hit still forks");
+        assert_eq!(s.seqs()[1].phase, Phase::Prefill { done: 8 });
+        // a request can_admit never probed (fits in full) still probes
+        // exactly once at admission
+        let mut roomy = sched(64, 4, 8192).with_prefix_cache();
+        let a = Request::new(7, 8, 2).with_shared_prefix(9, 8);
+        roomy.admit(a, 0.0, 0.0, &mut m);
+        let _ = roomy.complete_prefill(0, 8, 1.0, &mut m);
+        let b = Request::new(8, 12, 2).with_shared_prefix(9, 8);
+        assert!(roomy.can_admit(&b));
+        assert_eq!(roomy.probe_count(), 0, "full fit needs no probe");
+        roomy.admit(b, 0.0, 2.0, &mut m);
+        assert_eq!(roomy.probe_count(), 1, "admission probes once");
+    }
+
+    #[test]
+    fn import_reservation_holds_pool_space_until_the_cache_lands() {
+        let mut m = ServiceMetrics::default();
+        // prefill side: finish a 40-token prompt and export it
+        let mut pre = sched(8, 16, 64);
+        let req = Request::new(7, 40, 3);
+        pre.admit(req, 0.0, 0.0, &mut m);
+        let _ = pre.complete_prefill(0, 40, 1.0, &mut m);
+        // decode side: 8 pages of 16 = 128 tokens capacity; the streamed
+        // reservation promises ceil(43/16) = 3 pages
+        let mut dec = sched(8, 16, 64);
+        assert!(dec.can_reserve_import(&req));
+        dec.reserve_import(&req);
+        assert_eq!(dec.reserved_imports(), 1);
+        // the promise is visible to every other admission decision: a
+        // 81-token footprint (6 pages) no longer fits next to it...
+        let big = Request::new(9, 78, 3);
+        assert!(!dec.can_admit(&big), "reservation must block overcommit");
+        assert!(!dec.can_reserve_import(&big));
+        // ...while a small one still does
+        assert!(dec.can_admit(&Request::new(10, 30, 2)));
+        // the reserved cache itself always clears can_import
+        let (state, kv_tokens) = pre.export_seq(0, &mut m);
+        assert!(dec.can_import(&state));
+        dec.import_seq(state, kv_tokens, 1.0, 1.5, &mut m);
+        assert_eq!(dec.reserved_imports(), 0, "import consumes the reservation");
+        // the promise became real pages — total commitment is unchanged
+        assert!(!dec.can_admit(&big));
+        // two decode steps spend the budget; retiring frees everything
+        dec.complete_decode(&[0], 2.0, &mut m);
+        let fin = dec.complete_decode(&[0], 3.0, &mut m);
+        assert_eq!(fin.len(), 1);
+        assert!(dec.can_admit(&big), "retired import frees its promise");
+        dec.pool().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reservation_epoch_invalidates_probe_memos() {
+        let mut m = ServiceMetrics::default();
+        let mut s = sched(6, 4, 8192).with_prefix_cache();
+        let owner = Request::new(1, 8, 2).with_shared_prefix(5, 8);
+        s.admit(owner, 0.0, 0.0, &mut m);
+        let _ = s.complete_prefill(0, 8, 1.0, &mut m);
+        let e0 = s.epoch();
+        s.reserve_import(&Request::new(2, 8, 2));
+        assert_ne!(s.epoch(), e0, "a new promise must move the epoch");
     }
 
     #[test]

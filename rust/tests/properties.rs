@@ -728,6 +728,131 @@ fn prop_disagg_migration_conserves_pages() {
 }
 
 #[test]
+fn prop_streamed_migration_conserves_bytes_pages_and_promises() {
+    // The streamed-migration conservation property under random
+    // interleavings: across random layouts, fabrics, prefill tiles,
+    // page sizes, pool capacities (down to one request's footprint —
+    // which forces unrouted epilogue fallbacks next to streamed runs)
+    // and drives,
+    //  * streamed chunk bytes + tails == whole-cache bytes: the total
+    //    wire content is identical to the epilogue path on the same
+    //    workload (placement can move, bytes cannot), and the hidden
+    //    share never exceeds it;
+    //  * no page is freed on the source while its bytes are unshipped —
+    //    structurally, export is the only point that frees source pages
+    //    and it enqueues the residual tail first; the cluster asserts
+    //    `shipped < stored` at every export and the pool invariants
+    //    here catch any violation;
+    //  * destination promises are exact: no reservation outlives its
+    //    import, reservation admission keeps preemptions at zero, and
+    //    pages exported == pages imported after the drain.
+    use gla_serve::parallel::FabricSpec;
+    let mut rng = Rng::new(0x57AE4);
+    let mut streamed_runs = 0u64;
+    for case in 0..10 {
+        let m = DSV2;
+        let variant_name = ["gla2", "gqa4"][rng.range(0, 1)];
+        let n_p = rng.range(1, 2);
+        let n_d = rng.range(1, 2);
+        let page_size = [16usize, 64][rng.range(0, 1)];
+        let chunk = [256usize, 512, 1024][rng.range(0, 2)];
+        let fabric = [
+            FabricSpec::shared(),
+            FabricSpec::per_pair(),
+            FabricSpec::per_pair_capped(1),
+        ][rng.range(0, 2)];
+        let max_prompt = 4096;
+        let max_decode = 128;
+        let dist = LengthDist::RandomRatio { max_prompt, max_decode, ratio: 0.1 };
+        let footprint_pages = (max_prompt + max_decode).div_ceil(page_size);
+        let n_pages = footprint_pages * rng.range(1, 3);
+        let variant = m.variant(variant_name);
+        let kv_per_token = variant.kv_bytes_per_token_per_device(2, m.dtype_bytes)
+            as u64
+            * m.n_layers as u64;
+        let n = rng.range(6, 20);
+        let drive = if rng.range(0, 1) == 0 {
+            DriveMode::Closed { concurrency: rng.range(2, 8) }
+        } else {
+            DriveMode::Open
+        };
+        let reqs = if matches!(drive, DriveMode::Open) {
+            generate_open(dist, n, case as u64 + 1, 2.0)
+        } else {
+            generate(dist, n, case as u64 + 1)
+        };
+        let expected_tokens: u64 = reqs.iter().map(|r| r.decode_len as u64).sum();
+        let run = |stream: bool| {
+            let mut serving = ServingConfig::with_parallelism(2, 1);
+            serving.page_size = page_size;
+            serving.prefill_chunk = chunk;
+            serving.stream_migration = stream;
+            serving.kv_hbm_budget = kv_per_token * (page_size * n_pages) as u64;
+            let mut c = Cluster::new(
+                m,
+                variant,
+                serving,
+                DeviceModel::h100_serving(),
+                &ClusterSpec::disagg(n_p, n_d).with_fabric(fabric),
+                RouterKind::RoleAware,
+                drive,
+            );
+            c.submit(&reqs);
+            c.run();
+            for (ri, r) in c.replicas().iter().enumerate() {
+                r.sched
+                    .pool()
+                    .check_invariants()
+                    .unwrap_or_else(|e| panic!("case {case} replica {ri}: {e}"));
+                assert_eq!(
+                    r.sched.pool().pages_free(),
+                    r.sched.pool().pages_total(),
+                    "case {case} replica {ri}: leaked pages"
+                );
+                assert_eq!(
+                    r.sched.reserved_imports(),
+                    0,
+                    "case {case} replica {ri}: a promise outlived its import"
+                );
+            }
+            c.metrics
+        };
+        let on = run(true);
+        let off = run(false);
+        for (label, met) in [("on", &on), ("off", &off)] {
+            assert_eq!(met.e2e.len(), n, "case {case} {label}: lost requests");
+            assert_eq!(met.output_tokens, expected_tokens, "case {case} {label}");
+            assert_eq!(met.preemptions, 0, "case {case} {label}: reservation broken");
+            assert_eq!(
+                met.pages_exported, met.pages_imported,
+                "case {case} {label}: migration pages not conserved"
+            );
+            let expect_migrations =
+                reqs.iter().filter(|r| r.decode_len > 1).count() as u64;
+            assert_eq!(met.migrations, expect_migrations, "case {case} {label}");
+        }
+        // bytes conservation: chunks + tails == the same whole caches
+        // the epilogue path ships, and hidden is a strict subset
+        assert_eq!(
+            on.migrated_bytes, off.migrated_bytes,
+            "case {case}: streaming changed total wire content"
+        );
+        assert_eq!(off.migration_hidden_bytes, 0, "case {case}");
+        assert!(
+            on.migration_hidden_bytes <= on.migrated_bytes,
+            "case {case}: hidden bytes exceed the cache"
+        );
+        if on.migration_hidden_bytes > 0 {
+            streamed_runs += 1;
+        }
+    }
+    assert!(
+        streamed_runs > 0,
+        "the property never exercised a streamed chunk"
+    );
+}
+
+#[test]
 fn prop_sim_benchmark_conserves_requests_and_tokens() {
     // failure-injection-ish: random workloads and layouts never lose or
     // double-count requests, and throughput is finite and positive
