@@ -33,7 +33,7 @@
 use gla_serve::cluster::{Cluster, RouterKind};
 use gla_serve::config::{ClusterSpec, ServingConfig, DSV2};
 use gla_serve::hardware::DeviceModel;
-use gla_serve::metrics::ServiceMetrics;
+use gla_serve::metrics::{ServiceMetrics, SimStats};
 use gla_serve::parallel::{FabricSpec, LinkTier};
 use gla_serve::report::{BenchReport, Val};
 use gla_serve::sched::DriveMode;
@@ -68,8 +68,10 @@ fn run(variant: &str, spec: &ClusterSpec, qps: f64, link: LinkTier) -> ServiceMe
 
 /// Part 4 runner: 1P+3D over PCIe, 2048-token prefill tiles. Streaming
 /// on rides the per-pair fabric (the feature bundle under test);
-/// streaming off is the PR 2 epilogue path over the shared pipe.
-fn run_stream(variant: &str, qps: f64, stream: bool) -> ServiceMetrics {
+/// streaming off is the PR 2 epilogue path over the shared pipe. Also
+/// returns the run's simulator self-throughput so the JSON artifact
+/// tracks events/sec alongside the serving metrics.
+fn run_stream(variant: &str, qps: f64, stream: bool) -> (ServiceMetrics, SimStats) {
     let m = DSV2;
     let mut serving = ServingConfig::with_parallelism(2, 1);
     serving.prefill_chunk = STREAM_CHUNK;
@@ -86,7 +88,8 @@ fn run_stream(variant: &str, qps: f64, stream: bool) -> ServiceMetrics {
     );
     c.submit(&generate_open(DIST, N, SEED, qps));
     c.run();
-    c.metrics
+    let stats = c.sim_stats();
+    (c.metrics, stats)
 }
 
 fn layouts() -> Vec<ClusterSpec> {
@@ -187,8 +190,10 @@ fn main() {
     for variant in ["gqa4", "gla2"] {
         let mut pre_knee_points = 0usize;
         for &qps in &QPS_SWEEP {
-            let mut off = run_stream(variant, qps, false);
-            let mut on = run_stream(variant, qps, true);
+            let (mut off, off_stats) = run_stream(variant, qps, false);
+            let (mut on, on_stats) = run_stream(variant, qps, true);
+            report.push_sim_stats(&format!("{variant}/epilogue@{qps}"), &off_stats);
+            report.push_sim_stats(&format!("{variant}/stream@{qps}"), &on_stats);
             for (mode, met) in [("epilogue", &off), ("stream", &on)] {
                 let mut m = met.clone();
                 println!(
@@ -274,8 +279,8 @@ fn main() {
         "migration wait drifted"
     );
     assert_eq!(pcie.output_tokens, again.output_tokens);
-    let s1 = run_stream("gla2", 1.0, true);
-    let s2 = run_stream("gla2", 1.0, true);
+    let s1 = run_stream("gla2", 1.0, true).0;
+    let s2 = run_stream("gla2", 1.0, true).0;
     assert_eq!(s1, s2, "streamed schedule drifted between identical runs");
     println!("same seed reproduced bit-identically, streaming on and off ✓");
 

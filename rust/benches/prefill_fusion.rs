@@ -24,9 +24,9 @@
 //!     cargo bench --bench prefill_fusion
 
 use gla_serve::config::{ServingConfig, DSV2};
-use gla_serve::engine::{run_benchmark, run_benchmark_with};
+use gla_serve::engine::{run_benchmark, run_benchmark_with, run_benchmark_with_stats};
 use gla_serve::hardware::DeviceModel;
-use gla_serve::metrics::ServiceMetrics;
+use gla_serve::metrics::{ServiceMetrics, SimStats};
 use gla_serve::report::{BenchReport, Val};
 use gla_serve::workload::{generate, generate_open, LengthDist};
 
@@ -47,8 +47,14 @@ fn serving(fusion: bool) -> ServingConfig {
 }
 
 fn open(variant: &str, qps: f64, fusion: bool) -> ServiceMetrics {
+    open_stats(variant, qps, fusion).0
+}
+
+/// Like [`open`], but also returns the simulator's own throughput so the
+/// JSON artifact records events/sec alongside the serving metrics.
+fn open_stats(variant: &str, qps: f64, fusion: bool) -> (ServiceMetrics, SimStats) {
     let m = DSV2;
-    run_benchmark_with(
+    run_benchmark_with_stats(
         m,
         m.variant(variant),
         serving(fusion),
@@ -76,8 +82,10 @@ fn main() {
         let mut knee_qps = QPS_SWEEP[0];
         let mut knee: Option<(ServiceMetrics, ServiceMetrics)> = None;
         for &qps in &QPS_SWEEP {
-            let mut off = open(variant, qps, false);
-            let on = open(variant, qps, true);
+            let (mut off, off_stats) = open_stats(variant, qps, false);
+            let (on, on_stats) = open_stats(variant, qps, true);
+            report.push_sim_stats(&format!("{variant}/alt@{qps}"), &off_stats);
+            report.push_sim_stats(&format!("{variant}/fused@{qps}"), &on_stats);
             assert_eq!(off.e2e.len(), N, "{variant}@{qps}: lost requests (off)");
             assert_eq!(on.e2e.len(), N, "{variant}@{qps}: lost requests (on)");
             assert_eq!(

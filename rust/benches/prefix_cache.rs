@@ -22,9 +22,9 @@
 
 use gla_serve::cluster::{Cluster, RouterKind};
 use gla_serve::config::{ClusterSpec, ServingConfig, DSV2};
-use gla_serve::engine::run_benchmark_with;
+use gla_serve::engine::{run_benchmark_with, run_benchmark_with_stats};
 use gla_serve::hardware::DeviceModel;
-use gla_serve::metrics::ServiceMetrics;
+use gla_serve::metrics::{ServiceMetrics, SimStats};
 use gla_serve::report::{BenchReport, Val};
 use gla_serve::sched::DriveMode;
 use gla_serve::workload::{
@@ -56,8 +56,17 @@ fn serving(prefix_cache: bool) -> ServingConfig {
 }
 
 fn run_single(variant: &str, spec: SharedPrefixSpec, qps: f64, radix: bool) -> ServiceMetrics {
+    run_single_stats(variant, spec, qps, radix).0
+}
+
+fn run_single_stats(
+    variant: &str,
+    spec: SharedPrefixSpec,
+    qps: f64,
+    radix: bool,
+) -> (ServiceMetrics, SimStats) {
     let m = DSV2;
-    run_benchmark_with(
+    run_benchmark_with_stats(
         m,
         m.variant(variant),
         serving(radix),
@@ -98,7 +107,8 @@ fn main() {
         for (label, spec) in share_specs() {
             for &qps in &QPS_SWEEP {
                 let off = run_single(variant, spec, qps, false);
-                let on = run_single(variant, spec, qps, true);
+                let (on, on_stats) = run_single_stats(variant, spec, qps, true);
+                report.push_sim_stats(&format!("{variant}/{label}@{qps}"), &on_stats);
                 println!(
                     "{variant:<6} {label:<10} {qps:>6.2} {:>12.2} {:>12.2} {:>8.0} \
                      {:>12} {:>8}",
@@ -200,6 +210,65 @@ fn main() {
     assert_eq!(a.pages_shared, b.pages_shared);
     assert_eq!(a.output_tokens, b.output_tokens);
     println!("same seed reproduced bit-identically ✓");
+
+    println!("\n[5] page-size sweep 64 -> 1: token-granular sharing (§4.2)");
+    // a deliberately non-page-aligned prefix (6100 = 95*64 + 20): page 64
+    // can only share the aligned 6080 tokens of it, page 16 shares 6096,
+    // page 1 shares all 6100 — the paper's point that once the
+    // distributed-offset kernel makes page size 1 free (Fig. 6), sharing
+    // becomes token-granular. Skipped-per-hit is exact arithmetic
+    // (floor(prefix/ps)*ps), so the monotone assertion is noise-free even
+    // though hit *counts* can drift a little across page sizes (different
+    // skip amounts shift the schedule).
+    let ps_spec =
+        SharedPrefixSpec { n_families: 4, prefix_len: 6100, max_suffix: 2048, decode: 256 };
+    println!(
+        "{:<6} {:>6} {:>6} {:>10} {:>10} {:>13} {:>13}",
+        "var", "page", "hits", "skipped", "skip/hit", "pages shared", "TTFT mean(s)"
+    );
+    for variant in ["gqa4", "gla2"] {
+        let mut prev_per_hit = 0.0f64;
+        for page_size in [64usize, 16, 1] {
+            let mut s = serving(true);
+            s.page_size = page_size;
+            let mut met = run_benchmark_with(
+                m,
+                m.variant(variant),
+                s,
+                DeviceModel::h100_serving(),
+                &generate_shared_prefix_open(ps_spec, N, SEED, 2.0),
+            );
+            assert_eq!(met.e2e.len(), N, "{variant} ps{page_size}: lost requests");
+            assert!(met.prefix_hits > 0, "{variant} ps{page_size}: no hits");
+            assert!(met.prefill_tokens_skipped > 0);
+            let per_hit = met.prefill_tokens_skipped as f64 / met.prefix_hits as f64;
+            println!(
+                "{variant:<6} {page_size:>6} {:>6} {:>10} {per_hit:>10.1} {:>13} {:>13.2}",
+                met.prefix_hits,
+                met.prefill_tokens_skipped,
+                met.pages_shared,
+                met.ttft.mean(),
+            );
+            report.push_row(&[
+                ("part", Val::I(5)),
+                ("variant", Val::s(variant)),
+                ("page_size", Val::I(page_size as u64)),
+                ("prefix_hits", Val::I(met.prefix_hits)),
+                ("prefill_tokens_skipped", Val::I(met.prefill_tokens_skipped)),
+                ("skipped_per_hit", Val::F(per_hit)),
+                ("pages_shared", Val::I(met.pages_shared)),
+                ("ttft_mean_s", Val::F(met.ttft.mean())),
+            ]);
+            assert!(
+                per_hit > prev_per_hit,
+                "{variant}: finer pages must share strictly more of the \
+                 unaligned prefix per hit (ps{page_size}: {per_hit:.1} \
+                 vs coarser {prev_per_hit:.1})"
+            );
+            prev_per_hit = per_hit;
+        }
+        println!();
+    }
 
     report.emit();
 }

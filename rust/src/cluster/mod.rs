@@ -40,7 +40,12 @@
 //!   advances to the earliest of any replica's step completion, the
 //!   link's next landing, or (when an admission-eligible replica is
 //!   idle) the next open-loop arrival. An idle replica therefore never
-//!   jumps the clock past another replica's pending transfer.
+//!   jumps the clock past another replica's pending transfer. Two
+//!   interchangeable loops implement this discipline
+//!   ([`crate::config::SimLoop`]): the default O(log n) *event
+//!   calendar* (binary heap of typed events + dirty-flag replanning;
+//!   see DESIGN.md "Event calendar & dirty-flag replanning") and the
+//!   legacy *min-scan* validator, bit-identical by construction.
 //! * **lockstep**: the pre-cluster hybrid TP+DP barrier (every replica
 //!   synchronizes at the MoE all-gather each step, §B.6.3), used by
 //!   [`crate::engine::SimEngine`] for all-unified hybrid layouts —
@@ -52,16 +57,64 @@ pub mod transfer;
 pub use router::{Router, RouterKind};
 pub use transfer::{LinkFabric, Migration};
 
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 
 use crate::attention::Variant;
-use crate::config::{ClusterSpec, ModelConfig, ServingConfig};
+use crate::config::{ClusterSpec, ModelConfig, ServingConfig, SimLoop};
 use crate::hardware::DeviceModel;
 use crate::kvcache::PagePool;
-use crate::metrics::ServiceMetrics;
+use crate::metrics::{ServiceMetrics, SimStats};
 use crate::parallel::CollectiveModel;
 use crate::sched::{AdmitScope, DriveMode, Phase, Role, SchedPolicy, Scheduler, WaitQueue, Work};
 use crate::workload::Request;
+
+/// Event kinds of the calendar loop, in tie-break order: at one instant
+/// a step completion is popped before a link landing. The order is only
+/// a *deterministic total order* for the heap — every event due at a
+/// clock stop is drained before any handler runs, and the handlers
+/// themselves run in the same fixed sequence as the min-scan loop
+/// (apply in replica order, then deliver → import → admit → replan), so
+/// the tie-break never changes observable behavior.
+const EV_STEP: u8 = 0;
+const EV_LANDING: u8 = 1;
+
+/// One pending calendar event: `(time, kind, index)` with a total order
+/// on exactly that tuple. `index` is the replica index for `EV_STEP` and
+/// the flattened `(src, dst)` link key for `EV_LANDING`. Times are
+/// immutable once pushed — a started step never cancels, and a
+/// shipment's landing time is fixed by FIFO link occupancy at send time
+/// — so the heap needs no lazy deletion.
+#[derive(Debug, Clone, Copy)]
+struct CalEvent {
+    time: f64,
+    kind: u8,
+    index: u64,
+}
+
+impl PartialEq for CalEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for CalEvent {}
+
+impl PartialOrd for CalEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for CalEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time
+            .partial_cmp(&other.time)
+            .expect("NaN event time")
+            .then(self.kind.cmp(&other.kind))
+            .then(self.index.cmp(&other.index))
+    }
+}
 
 /// One streamed migration in progress: its `(src, dst)` route (the
 /// destination holds a pool reservation) and how many prompt tokens have
@@ -114,6 +167,22 @@ pub struct Cluster {
     streams: HashMap<u64, StreamRoute>,
     lockstep: bool,
     clock: f64,
+    /// pending step completions and link landings of the calendar loop,
+    /// min-first via `Reverse` (only populated under `SimLoop::Calendar`)
+    calendar: BinaryHeap<Reverse<CalEvent>>,
+    /// per-replica dirty flags: replica state changed since its last
+    /// replan (step applied, import landed, admission succeeded)
+    dirty: Vec<bool>,
+    /// something admission-relevant changed (any replica state change,
+    /// a preemption requeue, a reservation) — re-run `admit`
+    admission_dirty: bool,
+    /// a tail landed or pool space may have freed — re-run the import
+    /// phases (cheaply skipped while nothing has arrived)
+    import_dirty: bool,
+    /// a landing event popped at the current stop — run `fabric.deliver`
+    deliver_due: bool,
+    /// simulator self-throughput counters (events = clock stops)
+    sim: SimStats,
     pub metrics: ServiceMetrics,
 }
 
@@ -186,6 +255,12 @@ impl Cluster {
             variant,
             serving,
             device,
+            calendar: BinaryHeap::new(),
+            dirty: vec![true; replicas.len()],
+            admission_dirty: true,
+            import_dirty: true,
+            deliver_due: false,
+            sim: SimStats::default(),
             replicas,
             lockstep,
             clock: 0.0,
@@ -213,6 +288,37 @@ impl Cluster {
 
     pub fn clock(&self) -> f64 {
         self.clock
+    }
+
+    /// Simulator self-throughput of the runs so far: discrete-event clock
+    /// stops processed and host wall-clock spent in [`Cluster::run`].
+    /// Deliberately outside [`ServiceMetrics`] — wall time is never
+    /// deterministic and must not participate in bit-identity asserts.
+    pub fn sim_stats(&self) -> SimStats {
+        self.sim
+    }
+
+    /// Record that replica `ri`'s scheduler state changed: it must be
+    /// re-planned before the next clock stop, and anything keyed on
+    /// cluster-wide state (admission, pool-blocked arrived imports) must
+    /// be re-checked. Harmless bookkeeping under the legacy loops, which
+    /// re-check everything unconditionally.
+    fn mark_dirty(&mut self, ri: usize) {
+        self.dirty[ri] = true;
+        self.admission_dirty = true;
+        self.import_dirty = true;
+    }
+
+    /// Calendar bookkeeping for a shipment put on the fabric at
+    /// `ready_t`: its landing becomes a pending event. Landing times are
+    /// final at send time (FIFO links, per-channel ceiling), so the event
+    /// never goes stale. No-op under the legacy loops.
+    fn note_landing(&mut self, src: usize, dst: usize, ready_t: f64) {
+        if self.serving.sim_loop == SimLoop::Calendar && !self.lockstep {
+            let index = (src * self.replicas.len() + dst) as u64;
+            self.calendar
+                .push(Reverse(CalEvent { time: ready_t, kind: EV_LANDING, index }));
+        }
     }
 
     /// Tokens of KV capacity per replica (how many cached tokens fit).
@@ -289,6 +395,7 @@ impl Cluster {
             let (req, send_t) = self.queue.remove(pick);
             self.replicas[ri].sched.admit(req, send_t, self.clock, &mut self.metrics);
             self.router.note_admitted(ri, self.replicas.len());
+            self.mark_dirty(ri);
             // streamed migration routes its destination AT ADMISSION when
             // a decode replica can already promise the pool space; if
             // none can, `stream_chunks` retries at each completed chunk
@@ -322,6 +429,10 @@ impl Cluster {
             .map(|(i, _)| i);
         let Some(dst) = dst else { return false };
         self.replicas[dst].sched.reserve_import(req);
+        // a reservation moves dst's epoch (admission headroom, import
+        // eligibility) without needing a replan of dst itself
+        self.admission_dirty = true;
+        self.import_dirty = true;
         self.streams
             .insert(id, StreamRoute { src, dst, shipped_tokens: 0 });
         true
@@ -406,6 +517,7 @@ impl Cluster {
     /// Apply the outcome of one unit of work at virtual time `now`, then
     /// (prefill role) export every cache whose prompt just completed.
     fn apply(&mut self, ri: usize, work: Work, now: f64) {
+        self.mark_dirty(ri);
         let sched = &mut self.replicas[ri].sched;
         match work {
             Work::Idle => {}
@@ -464,8 +576,10 @@ impl Cluster {
             route.shipped_tokens = done;
             let (src, dst) = (route.src, route.dst);
             self.metrics.migration_hidden_bytes += wire_per_tok * delta as u64;
-            self.fabric
+            let ready_t = self
+                .fabric
                 .send_chunk(src, dst, per_link_per_tok * delta as f64, now);
+            self.note_landing(src, dst, ready_t);
         }
     }
 
@@ -496,7 +610,7 @@ impl Cluster {
                 );
                 let tail_tokens = kv_tokens - route.shipped_tokens;
                 let tail_bytes = self.wire_bytes_per_token() * tail_tokens as u64;
-                self.fabric.send_tail(
+                let ready_t = self.fabric.send_tail(
                     route.src,
                     route.dst,
                     Some(route.dst),
@@ -507,6 +621,7 @@ impl Cluster {
                     per_link_tok * tail_tokens as f64,
                     now,
                 );
+                self.note_landing(route.src, route.dst, ready_t);
             } else {
                 // epilogue path: the whole cache in one shipment. A
                 // per-pair fabric still needs a concrete wire destination
@@ -519,7 +634,7 @@ impl Cluster {
                 } else {
                     (0, None)
                 };
-                self.fabric.send_tail(
+                let ready_t = self.fabric.send_tail(
                     ri,
                     wire_dst,
                     pin,
@@ -530,6 +645,7 @@ impl Cluster {
                     per_link_tok * kv_tokens as f64,
                     now,
                 );
+                self.note_landing(ri, wire_dst, ready_t);
             }
         }
     }
@@ -557,6 +673,13 @@ impl Cluster {
     /// head-of-line on that order, exactly like pool-blocked admission.
     fn deliver_and_import(&mut self) {
         self.fabric.deliver(self.clock);
+        self.import_phases();
+    }
+
+    /// The two re-admission phases over already-landed caches, shared by
+    /// both async loops (the calendar loop delivers separately and skips
+    /// the phases entirely while nothing has arrived).
+    fn import_phases(&mut self) {
         // phase 1: land every RESERVED tail first (deterministic fabric
         // order). Its pool space is already promised — importing it is
         // unconditional progress, can never steal a page from anyone,
@@ -582,6 +705,7 @@ impl Cluster {
                 self.clock,
                 &mut self.metrics,
             );
+            self.mark_dirty(d);
         }
         // phase 2: everything else — policy-ordered, head-of-line
         loop {
@@ -643,6 +767,7 @@ impl Cluster {
                 self.clock,
                 &mut self.metrics,
             );
+            self.mark_dirty(ri);
         }
     }
 
@@ -650,27 +775,45 @@ impl Cluster {
     /// to the front of the shared queue with send times intact.
     fn ensure_capacity(&mut self, ri: usize) {
         let evicted = self.replicas[ri].sched.preempt_for_decode(&mut self.metrics);
+        if !evicted.is_empty() {
+            // freed pages + requeued work: admission and any pool-blocked
+            // arrived import must be re-checked at the next stop (the
+            // min-scan loop re-checks unconditionally)
+            self.admission_dirty = true;
+            self.import_dirty = true;
+        }
         for (req, send_t) in evicted {
             self.queue.requeue_front(req, send_t);
         }
     }
 
-    /// Run to completion; returns total virtual duration.
+    /// Run to completion; returns total virtual duration. Also meters
+    /// the simulator itself ([`Cluster::sim_stats`]): host wall-clock
+    /// accumulates across calls, `events` counts clock stops.
     pub fn run(&mut self) -> f64 {
-        if self.lockstep {
+        let wall = std::time::Instant::now();
+        let d = if self.lockstep {
             self.run_lockstep()
         } else {
-            self.run_async()
-        }
+            match self.serving.sim_loop {
+                SimLoop::Calendar => self.run_calendar(),
+                SimLoop::MinScan => self.run_min_scan(),
+            }
+        };
+        self.sim.wall_s += wall.elapsed().as_secs_f64();
+        self.sim.requests = self.metrics.e2e.len() as u64;
+        d
     }
 
-    /// Asynchronous discrete-event loop: start work on every idle
-    /// replica, then advance the clock to the earliest of (a) a replica's
-    /// step completion, (b) the link's next landing, (c) the next
-    /// open-loop arrival when an admission-eligible replica sits idle.
-    /// (b) is the multi-replica idle-clock fix: a replica with an empty
-    /// role-filtered queue never jumps time past a pending transfer.
-    fn run_async(&mut self) -> f64 {
+    /// Legacy asynchronous discrete-event loop (`SimLoop::MinScan`), kept
+    /// as the validator the calendar is checked against: start work on
+    /// every idle replica, then advance the clock to the earliest of (a)
+    /// a replica's step completion, (b) the link's next landing, (c) the
+    /// next open-loop arrival when an admission-eligible replica sits
+    /// idle. (b) is the multi-replica idle-clock fix: a replica with an
+    /// empty role-filtered queue never jumps time past a pending
+    /// transfer. O(replicas + links) re-scanned on every clock stop.
+    fn run_min_scan(&mut self) -> f64 {
         fn min_t(a: Option<f64>, b: f64) -> Option<f64> {
             Some(match a {
                 Some(x) if x <= b => x,
@@ -727,6 +870,7 @@ impl Cluster {
                     self.live()
                 );
             };
+            self.sim.events += 1;
             if t > self.clock {
                 self.clock = t;
             }
@@ -738,6 +882,166 @@ impl Cluster {
                 if finished {
                     let (work, _) = self.replicas[ri].in_flight.take().expect("checked");
                     self.apply(ri, work, self.clock);
+                }
+            }
+        }
+        debug_assert!(
+            self.streams.is_empty(),
+            "drained run left a streamed migration un-exported"
+        );
+        self.finish_metrics(t0);
+        self.clock - t0
+    }
+
+    /// The O(log n) event-calendar loop (`SimLoop::Calendar`, the
+    /// default). Bit-identical to [`Cluster::run_min_scan`] by
+    /// construction: it visits exactly the same clock stops (the heap
+    /// holds precisely the completion/landing times the min-scan would
+    /// minimize over, and the open-loop arrival is compared lazily
+    /// against the heap top under the same idle-admitter gate) and runs
+    /// the same handlers in the same order at each stop — apply finished
+    /// steps in replica order, then deliver → import → admit → replan.
+    /// It differs only in *skipping* handlers whose inputs provably did
+    /// not change, tracked by the dirty flags: `plan`/`preempt_for_decode`
+    /// are pure functions of one replica's scheduler state, admission of
+    /// the whole cluster state + queue, and the import phases of the
+    /// arrived set + replica states — each is a fixpoint that re-runs
+    /// only when one of its inputs moved. A streamed chunk landing
+    /// therefore costs one heap pop and one targeted delivery instead of
+    /// a full cluster re-scan.
+    fn run_calendar(&mut self) -> f64 {
+        let t0 = self.clock;
+        // (Re)seed calendar + flags from current state, so repeated
+        // submit/run cycles on one cluster behave like the legacy loop:
+        // one StepDone per in-flight step, one LinkLanding per in-flight
+        // shipment, everything dirty.
+        self.calendar.clear();
+        let n = self.replicas.len();
+        let mut seed: Vec<CalEvent> = Vec::new();
+        for (ri, r) in self.replicas.iter().enumerate() {
+            if let Some((_, t)) = &r.in_flight {
+                seed.push(CalEvent { time: *t, kind: EV_STEP, index: ri as u64 });
+            }
+        }
+        for ((src, dst), t) in self.fabric.pending_landings() {
+            seed.push(CalEvent {
+                time: t,
+                kind: EV_LANDING,
+                index: (src * n + dst) as u64,
+            });
+        }
+        for e in seed {
+            self.calendar.push(Reverse(e));
+        }
+        self.dirty.iter_mut().for_each(|d| *d = true);
+        self.admission_dirty = true;
+        self.import_dirty = true;
+        self.deliver_due = false;
+        loop {
+            // -- land shipments due at this stop (only when one is) --
+            if self.deliver_due {
+                self.deliver_due = false;
+                self.fabric.deliver(self.clock);
+            }
+            // -- import phases: skipped unless a tail could now import --
+            if self.import_dirty {
+                self.import_dirty = false;
+                if self.fabric.n_arrived() > 0 {
+                    self.import_phases();
+                }
+            }
+            // -- admission: state changed, or an arrival crossed the
+            //    clock while every admitting replica was busy --
+            let arrivals_crossed = self
+                .queue
+                .next_arrival()
+                .is_some_and(|t| t <= self.clock);
+            if self.admission_dirty || arrivals_crossed {
+                self.admission_dirty = false;
+                self.admit();
+            }
+            // -- replan exactly the replicas whose state changed --
+            for ri in 0..n {
+                if !self.dirty[ri] {
+                    continue;
+                }
+                self.dirty[ri] = false;
+                if self.replicas[ri].in_flight.is_some() {
+                    continue;
+                }
+                self.ensure_capacity(ri);
+                let work = self.replicas[ri].sched.plan();
+                if matches!(work, Work::Idle) {
+                    continue;
+                }
+                let d = self.duration(ri, &work);
+                let done_t = self.clock + d;
+                self.replicas[ri].in_flight = Some((work, done_t));
+                self.calendar.push(Reverse(CalEvent {
+                    time: done_t,
+                    kind: EV_STEP,
+                    index: ri as u64,
+                }));
+            }
+            // -- next stop: heap top vs the gated next arrival --
+            let head = self.calendar.peek().map(|Reverse(e)| e.time);
+            let arrival = if self
+                .replicas
+                .iter()
+                .any(|r| r.in_flight.is_none() && r.role.admits_new())
+            {
+                self.queue.next_arrival()
+            } else {
+                None
+            };
+            let next = match (head, arrival) {
+                (Some(h), Some(a)) => Some(h.min(a)),
+                (h, a) => h.or(a),
+            };
+            let Some(t) = next else {
+                if self.queue.is_drained() && self.live() == 0 {
+                    break;
+                }
+                panic!(
+                    "cluster deadlock at t={:.3}: {} queued, {} pending, \
+                     {} live/migrating",
+                    self.clock,
+                    self.queue.n_queued(),
+                    self.queue.n_pending(),
+                    self.live()
+                );
+            };
+            self.sim.events += 1;
+            if t > self.clock {
+                self.clock = t;
+            }
+            // drain every event due at the stop; landings defer their
+            // delivery to the loop top (after step application — the
+            // min-scan handler order at a shared stop)
+            let mut any_step = false;
+            while let Some(&Reverse(e)) = self.calendar.peek() {
+                if e.time > self.clock {
+                    break;
+                }
+                self.calendar.pop();
+                if e.kind == EV_STEP {
+                    any_step = true;
+                } else {
+                    self.deliver_due = true;
+                    self.import_dirty = true;
+                }
+            }
+            if any_step {
+                for ri in 0..n {
+                    let finished = match &self.replicas[ri].in_flight {
+                        Some((_, f)) => *f <= self.clock,
+                        None => false,
+                    };
+                    if finished {
+                        let (work, _) =
+                            self.replicas[ri].in_flight.take().expect("checked");
+                        self.apply(ri, work, self.clock);
+                    }
                 }
             }
         }
@@ -803,6 +1107,7 @@ impl Cluster {
                 self.serving.dp,
             );
             let step = attn_max + ffn + gather + self.device.step_overhead;
+            self.sim.events += 1; // one barrier step == one clock stop
             self.clock += step;
             let now = self.clock;
             for (ri, w) in works.into_iter().enumerate() {
@@ -1023,6 +1328,45 @@ mod tests {
         assert_eq!(a.migration_wait.median(), b.migration_wait.median());
         assert_eq!(a.migrated_bytes, b.migrated_bytes);
         assert_eq!(a.output_tokens, b.output_tokens);
+    }
+
+    #[test]
+    fn calendar_loop_matches_min_scan_and_counts_events() {
+        use crate::parallel::FabricSpec;
+        let reqs = generate(
+            LengthDist::RandomRatio { max_prompt: 8192, max_decode: 128, ratio: 0.1 },
+            24,
+            7,
+        );
+        let run = |sim_loop: SimLoop| {
+            let m = DSV2;
+            let mut serving =
+                ServingConfig::with_parallelism(2, 1).with_sim_loop(sim_loop);
+            serving.prefill_chunk = 2048;
+            serving.stream_migration = true;
+            let mut c = Cluster::new(
+                m,
+                m.variant("gla2"),
+                serving,
+                DeviceModel::h100_serving(),
+                &ClusterSpec::disagg(1, 2).with_fabric(FabricSpec::per_pair()),
+                RouterKind::RoleAware,
+                DriveMode::Closed { concurrency: 8 },
+            );
+            c.submit(&reqs);
+            c.run();
+            (c.metrics.clone(), c.sim_stats())
+        };
+        let (cal_m, cal_s) = run(SimLoop::Calendar);
+        let (min_m, min_s) = run(SimLoop::MinScan);
+        assert_eq!(cal_m, min_m, "calendar must be bit-identical to min-scan");
+        assert_eq!(
+            cal_s.events, min_s.events,
+            "both loops must visit the same clock stops"
+        );
+        assert!(cal_s.events > 0);
+        assert_eq!(cal_s.requests, 24);
+        assert!(cal_s.wall_s > 0.0, "wall time is metered");
     }
 
     #[test]

@@ -145,12 +145,21 @@ pub struct LinkFabric {
     /// additionally waits for the earliest-free channel, modeling the
     /// per-tier ceiling on concurrent transfers
     channels: Vec<f64>,
+    /// reusable landing-order scratch for [`LinkFabric::remove_arrived`]
+    /// (hot on the import path; avoids a fresh `Vec` per import)
+    order_scratch: Vec<((usize, usize), usize, f64)>,
 }
 
 impl LinkFabric {
     pub fn new(coll: CollectiveModel, spec: FabricSpec) -> Self {
         let n = if spec.per_pair { spec.channels } else { 0 };
-        LinkFabric { coll, spec, links: BTreeMap::new(), channels: vec![0.0; n] }
+        LinkFabric {
+            coll,
+            spec,
+            links: BTreeMap::new(),
+            channels: vec![0.0; n],
+            order_scratch: Vec::new(),
+        }
     }
 
     pub fn spec(&self) -> FabricSpec {
@@ -221,7 +230,9 @@ impl LinkFabric {
     /// to one replica (the streamed path's reservation holder, and any
     /// per-pair shipment — its bytes physically land there); `None`
     /// leaves the choice to the importer (the shared-pipe epilogue path,
-    /// bit-identical to the original model).
+    /// bit-identical to the original model). Returns the landing time
+    /// (like [`LinkFabric::send_chunk`]) so the caller can schedule the
+    /// landing as a calendar event.
     #[allow(clippy::too_many_arguments)]
     pub fn send_tail(
         &mut self,
@@ -234,7 +245,7 @@ impl LinkFabric {
         tail_bytes: u64,
         per_link_bytes: f64,
         now: f64,
-    ) {
+    ) -> f64 {
         let ready_t = self.occupy(src, dst, per_link_bytes, now);
         let key = self.key(src, dst);
         self.links
@@ -250,6 +261,7 @@ impl LinkFabric {
                 ready_t,
                 dst: pin_dst,
             })));
+        ready_t
     }
 
     /// Move every shipment whose last byte has landed (`ready_t <= now`):
@@ -268,6 +280,27 @@ impl LinkFabric {
             .values()
             .filter_map(|l| l.next_ready())
             .min_by(|a, b| a.partial_cmp(b).expect("NaN ready_t"))
+    }
+
+    /// Every in-flight shipment's `(link key, ready_t)` — the complete
+    /// set of future landing events, used to (re)seed the calendar
+    /// loop's event heap. Chunks and tails both appear: every landing is
+    /// a clock stop. Landing times are fixed at send (per-link FIFO +
+    /// channel ceiling are both resolved in `occupy`), so these events
+    /// never go stale.
+    pub fn pending_landings(&self) -> Vec<((usize, usize), f64)> {
+        self.links
+            .iter()
+            .flat_map(|(&k, l)| l.in_flight.iter().map(move |s| (k, s.ready_t())))
+            .collect()
+    }
+
+    /// Landed migrations awaiting import, counted without allocating —
+    /// the calendar loop's "anything to import at all?" fast path that
+    /// skips the sorted [`LinkFabric::arrived`] walk on the (common)
+    /// stops where no tail has landed.
+    pub fn n_arrived(&self) -> usize {
+        self.links.values().map(|l| l.arrived.len()).sum()
     }
 
     /// Landed migrations awaiting a decode-pool slot, flattened across
@@ -290,14 +323,19 @@ impl LinkFabric {
     /// landing order (policy-picked import; index 0 on a shared fabric
     /// reproduces the historic FIFO pop bit for bit).
     pub fn remove_arrived(&mut self, i: usize) -> Option<Migration> {
-        let mut order: Vec<((usize, usize), usize, f64)> = Vec::new();
+        let mut order = std::mem::take(&mut self.order_scratch);
+        order.clear();
         for (&key, link) in &self.links {
             for (j, m) in link.arrived.iter().enumerate() {
                 order.push((key, j, m.ready_t));
             }
         }
+        // stable sort: equal ready_t keeps the BTreeMap key order, same
+        // tie-break as [`LinkFabric::arrived`]
         order.sort_by(|a, b| a.2.partial_cmp(&b.2).expect("NaN ready_t"));
-        let &(key, j, _) = order.get(i)?;
+        let picked = order.get(i).copied();
+        self.order_scratch = order;
+        let (key, j, _) = picked?;
         self.links.get_mut(&key).expect("key listed above").arrived.remove(j)
     }
 
@@ -473,6 +511,26 @@ mod tests {
         assert!(f.is_empty());
         // busy time counted the chunks too: 0.5 + 0.5 + 0.75
         assert_eq!(f.busy_times(), vec![((0, 1), 1.75)]);
+    }
+
+    #[test]
+    fn pending_landings_and_arrived_counts_feed_the_calendar() {
+        let mut f = fabric(FabricSpec::per_pair());
+        // chunk: 1.0 + 0.25 + 0.25 = 1.5; tail queues behind it on the
+        // same pair: 1.5 + 0.25 + 0.25 = 2.0
+        let c = f.send_chunk(0, 1, 2.5e8, 1.0);
+        let t = f.send_tail(0, 1, Some(1), seq(11), 64, 500_000_000, 250_000_000, 2.5e8, 1.0);
+        assert_eq!(c, 1.5);
+        assert_eq!(t, 2.0, "send_tail returns the landing time");
+        let mut pend = f.pending_landings();
+        pend.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("NaN ready_t"));
+        assert_eq!(pend, vec![((0, 1), 1.5), ((0, 1), 2.0)]);
+        assert_eq!(f.n_arrived(), 0, "nothing imported before landing");
+        f.deliver(2.0);
+        assert!(f.pending_landings().is_empty());
+        assert_eq!(f.n_arrived(), 1, "chunks vanish, the tail arrives");
+        let _ = f.remove_arrived(0);
+        assert_eq!(f.n_arrived(), 0);
     }
 
     #[test]

@@ -10,6 +10,26 @@ use crate::attention::Variant;
 use crate::parallel::{FabricSpec, LinkTier};
 use crate::sched::{DriveMode, PolicyKind, Role};
 
+/// Which discrete-event loop drives `cluster::Cluster::run` in
+/// asynchronous (non-lockstep) mode. Both loops visit the *same* clock
+/// stops in the same order and run the same per-stop handlers, so their
+/// [`crate::metrics::ServiceMetrics`] are bit-identical — the property
+/// suite pins this. They differ only in how the next stop is found and
+/// how much per-stop work is skipped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimLoop {
+    /// Indexed binary-heap event calendar with dirty-flag replanning:
+    /// O(log n) next-event lookup, and only replicas whose state changed
+    /// are re-planned/re-admitted. The production default.
+    #[default]
+    Calendar,
+    /// Legacy min-scan: every clock stop re-scans all replicas, all
+    /// fabric links and the arrival stream, and re-plans every idle
+    /// replica — O(replicas + links) per event. Kept as the debug
+    /// validator the calendar is checked against.
+    MinScan,
+}
+
 /// Transformer shapes relevant to the performance models.
 #[derive(Debug, Clone, Copy)]
 pub struct ModelConfig {
@@ -163,6 +183,12 @@ pub struct ServingConfig {
     /// whole-cache-at-epilogue path is the bit-identical legacy model
     /// (`benches/disagg.rs` pins it).
     pub stream_migration: bool,
+    /// which async discrete-event loop runs the cluster (see [`SimLoop`]).
+    /// Defaults to the O(log n) event calendar; `SimLoop::MinScan` is the
+    /// legacy debug validator. Purely a simulator-speed knob — metrics are
+    /// bit-identical either way (`benches/sim_speed.rs` and the property
+    /// suite pin it).
+    pub sim_loop: SimLoop,
 }
 
 impl Default for ServingConfig {
@@ -183,6 +209,7 @@ impl Default for ServingConfig {
             max_step_tokens: 8192,
             chunk_align: false,
             stream_migration: false,
+            sim_loop: SimLoop::Calendar,
         }
     }
 }
@@ -237,6 +264,13 @@ impl ServingConfig {
     /// Enable streamed KV-cache migration on prefill replicas.
     pub fn with_stream_migration(mut self) -> Self {
         self.stream_migration = true;
+        self
+    }
+
+    /// Select the async discrete-event loop (debug/validation knob; the
+    /// calendar default is bit-identical and strictly faster).
+    pub fn with_sim_loop(mut self, sim_loop: SimLoop) -> Self {
+        self.sim_loop = sim_loop;
         self
     }
 
@@ -371,8 +405,13 @@ mod tests {
         assert!(c.clone().with_prefix_cache().prefix_cache);
         assert!(!c.chunk_align, "chunk alignment must default off");
         assert!(!c.stream_migration, "streamed migration must default off");
+        assert_eq!(c.sim_loop, SimLoop::Calendar, "calendar loop is the default");
         assert!(c.clone().with_chunk_alignment().chunk_align);
         assert!(c.clone().with_stream_migration().stream_migration);
+        assert_eq!(
+            c.clone().with_sim_loop(SimLoop::MinScan).sim_loop,
+            SimLoop::MinScan
+        );
         let fused = c.with_fusion().with_step_budget(4096);
         assert!(fused.fusion);
         assert_eq!(fused.max_step_tokens, 4096);

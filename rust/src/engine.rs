@@ -33,7 +33,7 @@ use crate::attention::Variant;
 use crate::cluster::Cluster;
 use crate::config::{ModelConfig, ServingConfig};
 use crate::hardware::DeviceModel;
-use crate::metrics::ServiceMetrics;
+use crate::metrics::{ServiceMetrics, SimStats};
 use crate::sched::DriveMode;
 use crate::workload::Request;
 
@@ -90,6 +90,13 @@ impl SimEngine {
         &self.cluster.metrics
     }
 
+    /// Simulator self-throughput of the last [`SimEngine::run`] (event
+    /// count, host wall seconds, events/sec) — see
+    /// [`crate::metrics::SimStats`].
+    pub fn sim_stats(&self) -> SimStats {
+        self.cluster.sim_stats()
+    }
+
     /// Run the benchmark to completion; returns total virtual duration.
     pub fn run(&mut self) -> f64 {
         self.cluster.run()
@@ -122,10 +129,26 @@ pub fn run_benchmark_with(
     device: DeviceModel,
     reqs: &[Request],
 ) -> ServiceMetrics {
+    run_benchmark_with_stats(model, variant, serving, device, reqs).0
+}
+
+/// Like [`run_benchmark_with`], but also returns the simulator's own
+/// throughput ([`SimStats`]) so speed benches can report events/sec
+/// alongside the service-level metrics. The stats ride outside
+/// `ServiceMetrics` deliberately: wall time is not deterministic and must
+/// never participate in bit-identity assertions.
+pub fn run_benchmark_with_stats(
+    model: ModelConfig,
+    variant: Variant,
+    serving: ServingConfig,
+    device: DeviceModel,
+    reqs: &[Request],
+) -> (ServiceMetrics, SimStats) {
     let mut eng = SimEngine::from_config(model, variant, serving, device);
     eng.submit(reqs);
     eng.run();
-    eng.cluster.metrics
+    let stats = eng.sim_stats();
+    (eng.cluster.metrics, stats)
 }
 
 #[cfg(test)]

@@ -93,7 +93,12 @@ impl PagePool {
         if need > self.free.len() {
             return false;
         }
-        let pages: Vec<PageId> = (0..need).map(|_| self.take_page()).collect();
+        let mut pages = Vec::with_capacity(need);
+        for _ in 0..need {
+            let p = self.free.pop().expect("pool exhausted (checked before)");
+            self.ref_count[p as usize] += 1;
+            pages.push(p);
+        }
         self.tables.insert(seq, pages);
         self.lens.insert(seq, tokens);
         self.epoch += 1;
@@ -107,19 +112,18 @@ impl PagePool {
         if need > self.free.len() {
             return false;
         }
+        // split field borrows: the table stays borrowed while pages come
+        // off the free list, so growth is one hash lookup, not `need`
+        let table = self.tables.get_mut(&seq).expect("liveness asserted above");
+        table.reserve(need);
         for _ in 0..need {
-            let p = self.take_page();
-            self.tables.get_mut(&seq).unwrap().push(p);
+            let p = self.free.pop().expect("pool exhausted (checked before)");
+            self.ref_count[p as usize] += 1;
+            table.push(p);
         }
         *self.lens.get_mut(&seq).unwrap() += tokens;
         self.epoch += 1;
         true
-    }
-
-    fn take_page(&mut self) -> PageId {
-        let p = self.free.pop().expect("pool exhausted (checked before)");
-        self.ref_count[p as usize] += 1;
-        p
     }
 
     /// Preempt a running sequence (scheduler eviction under pool pressure):

@@ -93,6 +93,44 @@ impl Summary {
     }
 }
 
+/// Simulator self-throughput for one run: how fast the discrete-event
+/// loop itself executed, independent of what it simulated. Kept *outside*
+/// [`ServiceMetrics`] on purpose — that struct's derived `PartialEq` is
+/// the bit-identity contract of the inertness suites, and wall-clock time
+/// is never deterministic. `events` counts clock stops of the event loop
+/// (each stop batches every step completion / link landing / arrival due
+/// at that instant), so it is identical across the calendar and min-scan
+/// loops on the same workload; `wall_s` is host seconds spent inside
+/// `Cluster::run`. The ratio of two runs' `events_per_sec` is therefore
+/// exactly their wall-time speedup.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SimStats {
+    /// discrete-event clock stops processed
+    pub events: u64,
+    /// host wall-clock seconds spent in the event loop
+    pub wall_s: f64,
+    /// requests completed by the run (`e2e` sample count)
+    pub requests: u64,
+}
+
+impl SimStats {
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.events as f64 / self.wall_s
+        }
+    }
+
+    pub fn requests_per_sec(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / self.wall_s
+        }
+    }
+}
+
 /// Full service-level report for one benchmark run (one table row).
 /// `PartialEq` compares every field (summaries as sample multisets) —
 /// the regression suites use `==` on whole structs to pin "this change
@@ -259,6 +297,16 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(m.migration_overlap_ratio(), 0.75);
+    }
+
+    #[test]
+    fn sim_stats_rates_guard_zero_wall_time() {
+        let s = SimStats::default();
+        assert_eq!(s.events_per_sec(), 0.0);
+        assert_eq!(s.requests_per_sec(), 0.0);
+        let s = SimStats { events: 1000, wall_s: 0.5, requests: 10 };
+        assert_eq!(s.events_per_sec(), 2000.0);
+        assert_eq!(s.requests_per_sec(), 20.0);
     }
 
     #[test]

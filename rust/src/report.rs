@@ -12,6 +12,8 @@
 use std::fs;
 use std::path::{Path, PathBuf};
 
+use crate::metrics::SimStats;
+
 /// One JSON scalar. Non-finite floats serialize as `null` (JSON has no
 /// NaN/inf) rather than producing an unparsable file.
 #[derive(Debug, Clone, PartialEq)]
@@ -74,6 +76,22 @@ impl BenchReport {
 
     pub fn n_rows(&self) -> usize {
         self.rows.len()
+    }
+
+    /// Append one simulator self-throughput row (see
+    /// [`crate::metrics::SimStats`]): how fast the event loop *itself*
+    /// ran, as opposed to what it simulated. `label` names the
+    /// configuration the stats came from; keys are stable across benches
+    /// so downstream tooling can chart events/sec over PRs.
+    pub fn push_sim_stats(&mut self, label: &str, stats: &SimStats) {
+        self.push_row(&[
+            ("sim", Val::s(label)),
+            ("events", Val::I(stats.events)),
+            ("requests", Val::I(stats.requests)),
+            ("wall_s", Val::F(stats.wall_s)),
+            ("events_per_sec", Val::F(stats.events_per_sec())),
+            ("requests_per_sec", Val::F(stats.requests_per_sec())),
+        ]);
     }
 
     /// Serialize to a JSON object string (stable field order).
@@ -143,6 +161,20 @@ mod tests {
              \"qps\": 0.5, \"migrations\": 96, \"stream\": true}, \
              {\"e2e_med_s\": 12.25}]}\n"
         );
+    }
+
+    #[test]
+    fn sim_stats_row_has_stable_keys() {
+        let mut r = BenchReport::new("speed");
+        let stats = SimStats { events: 100, wall_s: 0.5, requests: 10 };
+        r.push_sim_stats("calendar/8x", &stats);
+        let json = r.to_json();
+        assert!(json.contains("\"sim\": \"calendar/8x\""));
+        assert!(json.contains("\"events\": 100"));
+        assert!(json.contains("\"requests\": 10"));
+        assert!(json.contains("\"wall_s\": 0.5"));
+        assert!(json.contains("\"events_per_sec\": 200"));
+        assert!(json.contains("\"requests_per_sec\": 20"));
     }
 
     #[test]

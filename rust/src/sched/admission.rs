@@ -233,16 +233,29 @@ impl Scheduler {
         scope: AdmitScope,
         shared_pages: usize,
     ) -> bool {
-        let future: usize = self
-            .seqs
-            .iter()
-            .map(|s| {
-                let have = self.pool.table(s.req.id as u64).map_or(0, |t| t.len());
-                self.pool
-                    .pages_needed(scope.footprint_tokens(&s.req))
-                    .saturating_sub(have)
-            })
-            .sum();
+        // the future-pages sum is a pure function of the live sequence
+        // set and their stored pages — exactly what the epoch tracks —
+        // so the head-of-line re-check pays O(live seqs) once per state
+        // change, not once per pump (same discipline as the probe memo)
+        let key = (self.epoch(), scope);
+        let future = match self.future_cache.get() {
+            Some((ep, sc, v)) if (ep, sc) == key => v,
+            _ => {
+                let v: usize = self
+                    .seqs
+                    .iter()
+                    .map(|s| {
+                        let have =
+                            self.pool.table(s.req.id as u64).map_or(0, |t| t.len());
+                        self.pool
+                            .pages_needed(scope.footprint_tokens(&s.req))
+                            .saturating_sub(have)
+                    })
+                    .sum();
+                self.future_cache.set(Some((key.0, key.1, v)));
+                v
+            }
+        };
         let reserved = self.reserved_pages(req.id as u64);
         let need = self
             .pool

@@ -20,7 +20,7 @@
 //! already past the shared pages, so `chunk_of` naturally plans only the
 //! residual prompt.
 
-use super::{Phase, Scheduler};
+use super::{Phase, PlanScratch, Scheduler};
 
 /// What a replica chose to run for one engine step.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -105,23 +105,25 @@ impl Scheduler {
         if self.fusion {
             return self.plan_fused();
         }
-        let candidates: Vec<usize> = self
-            .seqs
-            .iter()
-            .enumerate()
-            .filter(|(i, s)| {
-                let Phase::Prefill { .. } = s.phase else { return false };
-                let chunk = self.chunk_of(*i);
-                let seq_id = s.req.id as u64;
-                if self.pool.table(seq_id).is_none() {
-                    self.pool.pages_needed(chunk) <= self.pool.pages_free()
-                } else {
-                    self.pool.can_grow(seq_id, chunk)
-                }
-            })
-            .map(|(i, _)| i)
-            .collect();
-        let prefill_idx = self.policy.pick_prefill(&self.seqs, &candidates);
+        // per-step hot path: the candidate list lives in reusable scratch
+        // (plan runs once per replica per clock stop)
+        let mut scratch = self.plan_scratch.borrow_mut();
+        let candidates = &mut scratch.candidates;
+        candidates.clear();
+        for (i, s) in self.seqs.iter().enumerate() {
+            let Phase::Prefill { .. } = s.phase else { continue };
+            let chunk = self.chunk_of(i);
+            let seq_id = s.req.id as u64;
+            let fits = if self.pool.table(seq_id).is_none() {
+                self.pool.pages_needed(chunk) <= self.pool.pages_free()
+            } else {
+                self.pool.can_grow(seq_id, chunk)
+            };
+            if fits {
+                candidates.push(i);
+            }
+        }
+        let prefill_idx = self.policy.pick_prefill(&self.seqs, candidates);
         let decode_idxs: Vec<usize> = self
             .seqs
             .iter()
@@ -168,24 +170,26 @@ impl Scheduler {
             .map(|&i| self.pool.pages_to_grow(self.seqs[i].req.id as u64, 1))
             .sum();
         let mut pages_left = self.pool.pages_free().saturating_sub(decode_new_pages);
-        let mut candidates: Vec<usize> = self
-            .seqs
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| matches!(s.phase, Phase::Prefill { .. }))
-            .map(|(i, _)| i)
-            .collect();
+        // candidate + fits lists live in reusable scratch (hot path);
+        // `prefill` is freshly allocated because it moves into the Work
+        let mut scratch = self.plan_scratch.borrow_mut();
+        let PlanScratch { candidates, fits } = &mut *scratch;
+        candidates.clear();
+        for (i, s) in self.seqs.iter().enumerate() {
+            if matches!(s.phase, Phase::Prefill { .. }) {
+                candidates.push(i);
+            }
+        }
         let mut prefill: Vec<(usize, usize)> = Vec::new();
         while tokens_left > 0 && !candidates.is_empty() {
-            let fits: Vec<usize> = candidates
-                .iter()
-                .copied()
-                .filter(|&i| {
-                    let chunk = self.budget_chunk(i, tokens_left);
-                    chunk > 0 && self.prefill_pages_needed(i, chunk) <= pages_left
-                })
-                .collect();
-            let Some(idx) = self.policy.pick_prefill(&self.seqs, &fits) else {
+            fits.clear();
+            for &i in candidates.iter() {
+                let chunk = self.budget_chunk(i, tokens_left);
+                if chunk > 0 && self.prefill_pages_needed(i, chunk) <= pages_left {
+                    fits.push(i);
+                }
+            }
+            let Some(idx) = self.policy.pick_prefill(&self.seqs, fits) else {
                 break;
             };
             let chunk = self.budget_chunk(idx, tokens_left);

@@ -27,7 +27,7 @@ pub use policy::{
     DecodePriority, Fcfs, PolicyKind, PriorityFirst, SchedPolicy, ShortestPromptFirst,
 };
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 
 use crate::kvcache::{PageId, PagePool, RadixIndex, SeqId};
 use crate::metrics::ServiceMetrics;
@@ -85,6 +85,19 @@ impl Role {
 /// Single-entry admission-probe memo: `(request id, scheduler epoch,
 /// probe result)` — see the `probe_cache` field on [`Scheduler`].
 type ProbeMemo = (u64, u64, Option<(SeqId, usize)>);
+
+/// Reusable plan-building buffers for the [`batcher`]: [`Scheduler::plan`]
+/// is `&self` on the per-step hot path, so the scratch lives behind a
+/// `RefCell` instead of allocating fresh `Vec`s every step. Purely an
+/// allocation cache — nothing observable ever survives in it across calls
+/// (each user clears before filling).
+#[derive(Debug, Default)]
+pub(crate) struct PlanScratch {
+    /// prefill candidates that pass the pool check, in seq-list order
+    pub(crate) candidates: Vec<usize>,
+    /// fused planner: candidates whose budget-clamped chunk fits this round
+    pub(crate) fits: Vec<usize>,
+}
 
 /// One admitted sequence: its request, phase and latency clocks.
 #[derive(Debug, Clone)]
@@ -169,6 +182,13 @@ pub struct Scheduler {
     /// stops paying O(prompt) per pump, and [`Scheduler::admit`] reuses
     /// the probe its `can_admit` check already ran
     probe_cache: Cell<Option<ProbeMemo>>,
+    /// single-entry memo of [`Scheduler::fits_residual`]'s future-pages
+    /// sum, keyed `(epoch, scope)`: the head-of-line admission walk
+    /// re-checks the same inequality every pump, and the O(live seqs)
+    /// sum only changes when the epoch moves
+    future_cache: Cell<Option<(u64, AdmitScope, usize)>>,
+    /// reusable plan-building buffers (see [`PlanScratch`])
+    plan_scratch: RefCell<PlanScratch>,
 }
 
 impl Scheduler {
@@ -194,6 +214,8 @@ impl Scheduler {
             seq_epoch: 0,
             probes: Cell::new(0),
             probe_cache: Cell::new(None),
+            future_cache: Cell::new(None),
+            plan_scratch: RefCell::new(PlanScratch::default()),
         }
     }
 

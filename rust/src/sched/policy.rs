@@ -14,6 +14,17 @@
 //!
 //! All policies are deterministic: identical policy + workload seed must
 //! reproduce identical virtual-time metrics (the benches assert this).
+//!
+//! Policies must also be *pure* — a decision may depend only on the
+//! arguments of the call, never on interior state mutated across calls.
+//! The cluster's event-calendar loop (see DESIGN.md "Event calendar &
+//! dirty-flag replanning") relies on this: it skips re-planning,
+//! re-admission and re-import whenever a replica's scheduler state did
+//! not change, which is only sound if calling a policy twice on the same
+//! inputs returns the same answer and has no side effects. A stateful
+//! policy (e.g. internal round-robin) would break bit-identity with the
+//! min-scan validator and must instead derive its rotation from the
+//! arguments it is given.
 
 use super::{Phase, SeqState};
 use crate::workload::Request;
