@@ -135,14 +135,11 @@ fn main() {
                     ("variant", Val::s(*variant)),
                     ("layout", Val::s(spec.label())),
                     ("qps", Val::F(qps)),
-                    ("e2e_med_s", Val::F(e)),
-                    ("ttft_med_s", Val::F(ttft)),
-                    ("itl_med_ms", Val::F(itl)),
-                    ("tok_per_s", Val::F(tput)),
                     ("migrations", Val::I(met.migrations)),
                     ("migrated_bytes", Val::I(met.migrated_bytes)),
                     ("migration_wait_med_s", Val::F(met.migration_wait.median())),
                 ]);
+                report.push_metrics(&format!("{variant}/{}@{qps}", spec.label()), &mut met);
             }
             println!();
         }
@@ -203,6 +200,7 @@ fn main() {
                     m.migration_hidden_bytes as f64 / 1e9,
                     m.migration_overlap_ratio(),
                 );
+                report.push_metrics(&format!("{variant}/{mode}@{qps}"), &mut m);
             }
             report.push_row(&[
                 ("part", Val::I(4)),

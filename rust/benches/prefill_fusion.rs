@@ -108,12 +108,8 @@ fn main() {
                     ("variant", Val::s(variant)),
                     ("qps", Val::F(qps)),
                     ("fusion", Val::B(mode == "on")),
-                    ("itl_p50_ms", Val::F(m.itl.median() * 1e3)),
-                    ("itl_p99_ms", Val::F(m.itl.p99() * 1e3)),
-                    ("itl_mean_ms", Val::F(m.itl.mean() * 1e3)),
-                    ("ttft_med_s", Val::F(m.ttft.median())),
-                    ("tok_per_s", Val::F(m.throughput())),
                 ]);
+                report.push_metrics(&format!("{variant}/{mode}@{qps}"), &mut m);
             }
             if pre_knee {
                 knee_qps = qps;

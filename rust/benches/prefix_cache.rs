@@ -123,12 +123,12 @@ fn main() {
                     ("variant", Val::s(variant)),
                     ("share", Val::s(label)),
                     ("qps", Val::F(qps)),
-                    ("ttft_mean_off_s", Val::F(off.ttft.mean())),
-                    ("ttft_mean_on_s", Val::F(on.ttft.mean())),
                     ("hit_rate", Val::F(on.prefix_hit_rate())),
                     ("prefill_tokens_skipped", Val::I(on.prefill_tokens_skipped)),
                     ("pages_shared", Val::I(on.pages_shared)),
                 ]);
+                report.push_metrics(&format!("{variant}/{label}@{qps}/off"), &mut off.clone());
+                report.push_metrics(&format!("{variant}/{label}@{qps}/on"), &mut on.clone());
                 assert_eq!(on.e2e.len(), N, "lost requests with radix on");
                 assert_eq!(off.e2e.len(), N, "lost requests with radix off");
                 assert_eq!(on.output_tokens, off.output_tokens);
@@ -257,8 +257,8 @@ fn main() {
                 ("prefill_tokens_skipped", Val::I(met.prefill_tokens_skipped)),
                 ("skipped_per_hit", Val::F(per_hit)),
                 ("pages_shared", Val::I(met.pages_shared)),
-                ("ttft_mean_s", Val::F(met.ttft.mean())),
             ]);
+            report.push_metrics(&format!("{variant}/ps{page_size}@2"), &mut met);
             assert!(
                 per_hit > prev_per_hit,
                 "{variant}: finer pages must share strictly more of the \

@@ -67,6 +67,7 @@ use crate::kvcache::PagePool;
 use crate::metrics::{ServiceMetrics, SimStats};
 use crate::parallel::CollectiveModel;
 use crate::sched::{AdmitScope, DriveMode, Phase, Role, SchedPolicy, Scheduler, WaitQueue, Work};
+use crate::trace::Tracer;
 use crate::workload::Request;
 
 /// Event kinds of the calendar loop, in tie-break order: at one instant
@@ -184,6 +185,12 @@ pub struct Cluster {
     /// simulator self-throughput counters (events = clock stops)
     sim: SimStats,
     pub metrics: ServiceMetrics,
+    /// sim-time lifecycle recorder, present only when `serving.trace` is
+    /// set. Strictly write-only from the event loops (every touch sits
+    /// behind an `is_some` guard and nothing reads it back), so tracing
+    /// can never perturb metrics or event counts — the property suite
+    /// pins that inertness.
+    tracer: Option<Tracer>,
 }
 
 impl Cluster {
@@ -244,6 +251,9 @@ impl Cluster {
             .collect();
         let all_unified = spec.roles.iter().all(|&r| r == Role::Unified);
         let lockstep = all_unified && serving.hybrid_barrier && replicas.len() > 1;
+        let tracer = serving
+            .trace
+            .then(|| Tracer::new(spec.roles.iter().map(|r| r.name().to_string()).collect()));
         Cluster {
             coll: CollectiveModel::nvlink(&device.gpu),
             fabric: LinkFabric::new(spec.link.model(&device.gpu), spec.fabric),
@@ -265,6 +275,7 @@ impl Cluster {
             lockstep,
             clock: 0.0,
             metrics: ServiceMetrics::default(),
+            tracer,
         }
     }
 
@@ -296,6 +307,18 @@ impl Cluster {
     /// deterministic and must not participate in bit-identity asserts.
     pub fn sim_stats(&self) -> SimStats {
         self.sim
+    }
+
+    /// The sim-time trace recorded so far (`None` unless
+    /// [`crate::config::ServingConfig::trace`] armed the tracer).
+    pub fn trace(&self) -> Option<&Tracer> {
+        self.tracer.as_ref()
+    }
+
+    /// Detach the tracer for post-run analysis/export (subsequent runs
+    /// on this cluster record nothing).
+    pub fn take_trace(&mut self) -> Option<Tracer> {
+        self.tracer.take()
     }
 
     /// Record that replica `ri`'s scheduler state changed: it must be
@@ -393,7 +416,24 @@ impl Cluster {
                 break; // head-of-line wait for pool space (policy's order)
             }
             let (req, send_t) = self.queue.remove(pick);
+            // snapshot the prefix counters around admission so the trace
+            // can tag the admit with fork detail (taken only when tracing)
+            let prefix_pre = self
+                .tracer
+                .as_ref()
+                .map(|_| (self.metrics.prefix_hits, self.metrics.prefill_tokens_skipped));
             self.replicas[ri].sched.admit(req, send_t, self.clock, &mut self.metrics);
+            if let (Some(tr), Some((hits, skipped))) = (self.tracer.as_mut(), prefix_pre) {
+                tr.admit(
+                    req.id as u64,
+                    req.arrival_t,
+                    send_t,
+                    self.clock,
+                    ri,
+                    self.metrics.prefix_hits > hits,
+                    self.metrics.prefill_tokens_skipped - skipped,
+                );
+            }
             self.router.note_admitted(ri, self.replicas.len());
             self.mark_dirty(ri);
             // streamed migration routes its destination AT ADMISSION when
@@ -514,23 +554,70 @@ impl Cluster {
             + self.device.step_overhead
     }
 
+    /// Close the step span for one completing unit of work (tracing on
+    /// only). The emitted-token count is recomputed from the *pre-step*
+    /// phase state — one first token per prefill whose chunk completes
+    /// the prompt, one token per decoded sequence — deliberately not read
+    /// back from `ServiceMetrics`, so the trace audit independently
+    /// cross-checks the scheduler's own accounting (preempted sequences
+    /// re-prefill and re-emit, which Σ `decode_len` would miss).
+    fn trace_step_end(&mut self, ri: usize, work: &Work, now: f64) {
+        let emitted = {
+            let seqs = self.replicas[ri].sched.seqs();
+            let completes = |idx: usize, chunk: usize| match seqs[idx].phase {
+                Phase::Prefill { done } => done + chunk >= seqs[idx].req.prompt_len,
+                _ => false,
+            };
+            match work {
+                Work::Idle => return,
+                Work::PrefillChunk { idx, chunk } => usize::from(completes(*idx, *chunk)),
+                Work::DecodeBatch { idxs } => idxs.len(),
+                Work::Mixed { decode, prefill } => {
+                    decode.len()
+                        + prefill.iter().filter(|&&(idx, c)| completes(idx, c)).count()
+                }
+            }
+        };
+        self.tracer.as_mut().expect("caller checked is_some").step_end(ri, now, emitted);
+    }
+
     /// Apply the outcome of one unit of work at virtual time `now`, then
     /// (prefill role) export every cache whose prompt just completed.
     fn apply(&mut self, ri: usize, work: Work, now: f64) {
         self.mark_dirty(ri);
+        if self.tracer.is_some() {
+            self.trace_step_end(ri, &work, now);
+        }
         let sched = &mut self.replicas[ri].sched;
         match work {
             Work::Idle => {}
             Work::PrefillChunk { idx, chunk } => {
                 // decode_len <= 1 retires at the epilogue (no migration)
-                let _ = sched.complete_prefill(idx, chunk, now, &mut self.metrics);
+                let fin = sched.complete_prefill(idx, chunk, now, &mut self.metrics);
+                if let (Some(tr), Some(f)) = (self.tracer.as_mut(), fin) {
+                    tr.retire_finished(ri, now, &f);
+                }
             }
             Work::DecodeBatch { idxs } => {
-                let _ = sched.complete_decode(&idxs, now, &mut self.metrics);
+                let fins = sched.complete_decode(&idxs, now, &mut self.metrics);
+                if let Some(tr) = self.tracer.as_mut() {
+                    for f in &fins {
+                        tr.retire_finished(ri, now, f);
+                    }
+                }
             }
             Work::Mixed { decode, prefill } => {
-                let _ = sched.complete_mixed(&decode, &prefill, now, &mut self.metrics);
+                let fins = sched.complete_mixed(&decode, &prefill, now, &mut self.metrics);
+                if let Some(tr) = self.tracer.as_mut() {
+                    for f in &fins {
+                        tr.retire_finished(ri, now, f);
+                    }
+                }
             }
+        }
+        if let Some(tr) = self.tracer.as_mut() {
+            let pool = self.replicas[ri].sched.pool();
+            tr.pool_sample(ri, now, pool.pages_total() - pool.pages_free(), pool.pages_total());
         }
         if self.replicas[ri].role == Role::Prefill {
             if self.serving.stream_migration {
@@ -575,11 +662,15 @@ impl Cluster {
             }
             route.shipped_tokens = done;
             let (src, dst) = (route.src, route.dst);
-            self.metrics.migration_hidden_bytes += wire_per_tok * delta as u64;
+            let chunk_bytes = wire_per_tok * delta as u64;
+            self.metrics.migration_hidden_bytes += chunk_bytes;
             let ready_t = self
                 .fabric
                 .send_chunk(src, dst, per_link_per_tok * delta as f64, now);
             self.note_landing(src, dst, ready_t);
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.ship_chunk(id, now, src, dst, chunk_bytes, ready_t);
+            }
         }
     }
 
@@ -599,6 +690,9 @@ impl Cluster {
             let req_id = self.replicas[ri].sched.seqs()[idx].req.id as u64;
             let (state, kv_tokens) =
                 self.replicas[ri].sched.export_seq(idx, &mut self.metrics);
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.export(req_id, now, ri, kv_tokens);
+            }
             let wire = self.wire_bytes_per_token() * kv_tokens as u64;
             let per_link_tok = self.per_link_bytes_per_token();
             if let Some(route) = self.streams.remove(&req_id) {
@@ -622,6 +716,9 @@ impl Cluster {
                     now,
                 );
                 self.note_landing(route.src, route.dst, ready_t);
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.ship_tail(req_id, now, route.src, route.dst, tail_bytes, ready_t);
+                }
             } else {
                 // epilogue path: the whole cache in one shipment. A
                 // per-pair fabric still needs a concrete wire destination
@@ -646,6 +743,9 @@ impl Cluster {
                     now,
                 );
                 self.note_landing(ri, wire_dst, ready_t);
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.ship_tail(req_id, now, ri, wire_dst, wire, ready_t);
+                }
             }
         }
     }
@@ -698,6 +798,9 @@ impl Cluster {
             let Some((i, d)) = hit else { break };
             let m = self.fabric.remove_arrived(i).expect("found above");
             self.metrics.migrated_bytes += m.bytes;
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.import(m.req_id(), self.clock, d, m.export_t, m.kv_tokens, m.bytes);
+            }
             self.replicas[d].sched.import_seq(
                 m.state,
                 m.kv_tokens,
@@ -760,6 +863,9 @@ impl Cluster {
             let Some(ri) = target else { break };
             let m = self.fabric.remove_arrived(pick).expect("picked above");
             self.metrics.migrated_bytes += m.bytes;
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.import(m.req_id(), self.clock, ri, m.export_t, m.kv_tokens, m.bytes);
+            }
             self.replicas[ri].sched.import_seq(
                 m.state,
                 m.kv_tokens,
@@ -781,6 +887,11 @@ impl Cluster {
             // min-scan loop re-checks unconditionally)
             self.admission_dirty = true;
             self.import_dirty = true;
+            if let Some(tr) = self.tracer.as_mut() {
+                for (req, _) in &evicted {
+                    tr.preempt(req.id as u64, self.clock, ri);
+                }
+            }
         }
         for (req, send_t) in evicted {
             self.queue.requeue_front(req, send_t);
@@ -834,6 +945,9 @@ impl Cluster {
                     continue;
                 }
                 let d = self.duration(ri, &work);
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.step_start(ri, self.clock, &work);
+                }
                 self.replicas[ri].in_flight = Some((work, self.clock + d));
             }
             let mut next: Option<f64> = None;
@@ -976,6 +1090,9 @@ impl Cluster {
                 }
                 let d = self.duration(ri, &work);
                 let done_t = self.clock + d;
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.step_start(ri, self.clock, &work);
+                }
                 self.replicas[ri].in_flight = Some((work, done_t));
                 self.calendar.push(Reverse(CalEvent {
                     time: done_t,
@@ -1108,6 +1225,13 @@ impl Cluster {
             );
             let step = attn_max + ffn + gather + self.device.step_overhead;
             self.sim.events += 1; // one barrier step == one clock stop
+            if let Some(tr) = self.tracer.as_mut() {
+                // every replica's span covers the whole barrier step
+                // (`Work::Idle` records nothing, matching `apply`)
+                for (ri, w) in works.iter().enumerate() {
+                    tr.step_start(ri, self.clock, w);
+                }
+            }
             self.clock += step;
             let now = self.clock;
             for (ri, w) in works.into_iter().enumerate() {

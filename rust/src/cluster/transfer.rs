@@ -62,6 +62,13 @@ pub struct Migration {
     pub dst: Option<usize>,
 }
 
+impl Migration {
+    /// Id of the request whose cache this is (the tracer's flow key).
+    pub fn req_id(&self) -> u64 {
+        self.state.req.id as u64
+    }
+}
+
 /// One unit of traffic on a link.
 #[derive(Debug, Clone)]
 enum Shipment {

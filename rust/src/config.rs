@@ -189,6 +189,14 @@ pub struct ServingConfig {
     /// bit-identical either way (`benches/sim_speed.rs` and the property
     /// suite pin it).
     pub sim_loop: SimLoop,
+    /// sim-time request tracing ([`crate::trace::Tracer`]): record every
+    /// lifecycle transition (arrival → queue → admit → step spans →
+    /// preempt/export/ship/import → retire) for the Chrome-trace
+    /// exporter, the utilization/latency analyzers, and the
+    /// trace-vs-metrics audit. Off by default; the tracer is write-only,
+    /// so a traced run is bit-identical to an untraced one (the property
+    /// suite pins that inertness).
+    pub trace: bool,
 }
 
 impl Default for ServingConfig {
@@ -210,6 +218,7 @@ impl Default for ServingConfig {
             chunk_align: false,
             stream_migration: false,
             sim_loop: SimLoop::Calendar,
+            trace: false,
         }
     }
 }
@@ -271,6 +280,12 @@ impl ServingConfig {
     /// calendar default is bit-identical and strictly faster).
     pub fn with_sim_loop(mut self, sim_loop: SimLoop) -> Self {
         self.sim_loop = sim_loop;
+        self
+    }
+
+    /// Arm the sim-time tracer (observability only; metrics-inert).
+    pub fn with_trace(mut self) -> Self {
+        self.trace = true;
         self
     }
 
@@ -408,6 +423,8 @@ mod tests {
         assert_eq!(c.sim_loop, SimLoop::Calendar, "calendar loop is the default");
         assert!(c.clone().with_chunk_alignment().chunk_align);
         assert!(c.clone().with_stream_migration().stream_migration);
+        assert!(!c.trace, "tracing must default off (metrics-inert observability)");
+        assert!(c.clone().with_trace().trace);
         assert_eq!(
             c.clone().with_sim_loop(SimLoop::MinScan).sim_loop,
             SimLoop::MinScan

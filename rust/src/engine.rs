@@ -97,6 +97,12 @@ impl SimEngine {
         self.cluster.sim_stats()
     }
 
+    /// Detach the sim-time trace recorded by the run (`None` unless
+    /// `serving.trace` armed the [`crate::trace::Tracer`]).
+    pub fn take_trace(&mut self) -> Option<crate::trace::Tracer> {
+        self.cluster.take_trace()
+    }
+
     /// Run the benchmark to completion; returns total virtual duration.
     pub fn run(&mut self) -> f64 {
         self.cluster.run()

@@ -12,6 +12,8 @@
 //! * [`workload`] — §B.6 request-length distributions + open-loop arrivals
 //! * [`metrics`] — service-level summaries (E2E/TTFT/ITL/throughput)
 //! * [`report`] — machine-readable `BENCH_*.json` emitter for CI artifacts
+//! * [`trace`] — opt-in sim-time request tracing: Chrome-trace (Perfetto)
+//!   export, utilization/latency analyzers, trace-vs-metrics audit
 //! * [`sched`] — the shared scheduling core: request lifecycle, paged-KV
 //!   admission, pluggable policies, preemption — executed by BOTH engines
 //! * [`cluster`] — cluster orchestration: heterogeneous replica roles
@@ -36,6 +38,7 @@ pub mod metrics;
 pub mod parallel;
 pub mod report;
 pub mod sched;
+pub mod trace;
 pub mod workload;
 
 #[cfg(feature = "pjrt")]

@@ -30,13 +30,25 @@
 //!                                (token-budget batcher) vs the alternating
 //!                                baseline under open-loop Poisson arrivals:
 //!                                ITL p50/p99, TTFT, throughput
+//!   trace  [rate] [n] [dir]      traced GQA-4 vs GLA-2 run on a 1P+2D
+//!                                disaggregated cluster: writes Chrome-
+//!                                trace `.trace.json` files (Perfetto-
+//!                                loadable) to `dir` (default
+//!                                `$TRACE_DIR` or `target/trace`), prints
+//!                                per-replica utilization breakdowns, the
+//!                                per-request E2E decomposition, and the
+//!                                trace-vs-metrics audit verdict
+//!
+//! Every sim-driving subcommand ends with a simulator self-throughput
+//! line (events, wall seconds, events/sec — `SimStats`).
 //!
 //! Run `make artifacts` first for `serve`/`train`.
 
 use gla_serve::cluster::{Cluster, RouterKind};
 use gla_serve::config::{ClusterSpec, ServingConfig, DSV2};
-use gla_serve::engine::{run_benchmark, run_benchmark_with};
+use gla_serve::engine::{run_benchmark_with_stats, SimEngine};
 use gla_serve::hardware::DeviceModel;
+use gla_serve::metrics::SimStats;
 use gla_serve::parallel::{paper_layouts, shard_plan, FabricSpec, LinkTier};
 use gla_serve::sched::{DriveMode, PolicyKind};
 use gla_serve::workload::{
@@ -71,6 +83,16 @@ fn router_arg(args: &[String], i: usize, default: RouterKind) -> RouterKind {
             })
         })
         .unwrap_or(default)
+}
+
+fn print_sim_stats(s: &SimStats) {
+    println!(
+        "  sim: {} events, {} requests in {:.3}s wall ({:.0} events/s)",
+        s.events,
+        s.requests,
+        s.wall_s,
+        s.events_per_sec(),
+    );
 }
 
 fn main() {
@@ -150,20 +172,23 @@ fn main() {
             let conc: usize = args.get(5).and_then(|s| s.parse().ok()).unwrap_or(64);
             let policy = policy_arg(&args, 6);
             let m = DSV2;
-            let mut met = run_benchmark(
+            let mut eng = SimEngine::new(
                 m,
                 m.variant(&variant),
                 ServingConfig::with_parallelism(tp, dp).with_policy(policy),
                 DeviceModel::h100_serving(),
-                &generate(LengthDist::Fixed { prompt: 8192, decode: 4096 }, 256, 42),
                 conc,
             );
-            let (e2e, ttft, itl, tput) = met.paper_row();
+            eng.submit(&generate(LengthDist::Fixed { prompt: 8192, decode: 4096 }, 256, 42));
+            eng.run();
+            let stats = eng.sim_stats();
+            let (e2e, ttft, itl, tput) = eng.cluster.metrics.paper_row();
             println!(
                 "{variant} TP{tp}xDP{dp} conc{conc} {}: e2e {e2e:.1}s ttft {ttft:.1}s \
                  itl {itl:.1}ms {tput:.0} tok/s",
                 policy.name()
             );
+            print_sim_stats(&stats);
         }
         "qps" => {
             let variant = args.get(2).cloned().unwrap_or_else(|| "gla8".into());
@@ -176,7 +201,7 @@ fn main() {
             }
             let policy = policy_arg(&args, 6);
             let m = DSV2;
-            let mut met = run_benchmark_with(
+            let (mut met, stats) = run_benchmark_with_stats(
                 m,
                 m.variant(&variant),
                 ServingConfig::with_parallelism(tp, dp).with_policy(policy).open_loop(),
@@ -190,6 +215,7 @@ fn main() {
                 policy.name(),
                 met.queue_wait.median(),
             );
+            print_sim_stats(&stats);
         }
         "disagg" => {
             let variant = args.get(2).cloned().unwrap_or_else(|| "gla2".into());
@@ -276,6 +302,7 @@ fn main() {
                 met.migration_wait.p99(),
                 met.preemptions,
             );
+            print_sim_stats(&cluster.sim_stats());
         }
         "prefix" => {
             let variant = args.get(2).cloned().unwrap_or_else(|| "gla2".into());
@@ -311,7 +338,7 @@ fn main() {
                 );
                 cluster.submit(&reqs);
                 cluster.run();
-                cluster.metrics
+                (cluster.metrics, cluster.sim_stats())
             };
             println!(
                 "{variant} TP{tp}xDP{dp} {rate:.2} req/s, {families} families x \
@@ -319,7 +346,7 @@ fn main() {
                 router.name()
             );
             for (label, on) in [("radix off", false), ("radix on ", true)] {
-                let mut met = run(on);
+                let (mut met, stats) = run(on);
                 let (e2e, ttft, itl, tput) = met.paper_row();
                 println!(
                     "  {label}: e2e {e2e:.1}s ttft {ttft:.2}s itl {itl:.1}ms \
@@ -329,6 +356,7 @@ fn main() {
                     met.prefill_tokens_skipped,
                     met.pages_shared,
                 );
+                print_sim_stats(&stats);
             }
         }
         "fusion" => {
@@ -353,7 +381,7 @@ fn main() {
                     .open_loop()
                     .with_step_budget(budget);
                 serving.fusion = fused;
-                run_benchmark_with(
+                run_benchmark_with_stats(
                     m,
                     m.variant(&variant),
                     serving,
@@ -366,7 +394,7 @@ fn main() {
                  step budget {budget} tokens:"
             );
             for (label, fused) in [("alternating", false), ("fused      ", true)] {
-                let mut met = run(fused);
+                let (mut met, stats) = run(fused);
                 println!(
                     "  {label}: ttft {:.2}s itl p50 {:.1}ms p99 {:.1}ms \
                      queue-wait {:.1}s {:.0} tok/s",
@@ -376,11 +404,122 @@ fn main() {
                     met.queue_wait.median(),
                     met.throughput(),
                 );
+                print_sim_stats(&stats);
+            }
+        }
+        "trace" => {
+            let rate: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(2.0);
+            if rate <= 0.0 || !rate.is_finite() {
+                eprintln!("rate must be a positive req/s value, got {rate}");
+                std::process::exit(2);
+            }
+            let n: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(96);
+            let out_dir = args
+                .get(4)
+                .cloned()
+                .or_else(|| std::env::var("TRACE_DIR").ok())
+                .unwrap_or_else(|| "target/trace".into());
+            let m = DSV2;
+            let spec = ClusterSpec::disagg(1, 2)
+                .with_link(LinkTier::Pcie)
+                .with_fabric(FabricSpec::per_pair());
+            let reqs =
+                generate_open(LengthDist::Fixed { prompt: 8192, decode: 512 }, n, 42, rate);
+            println!(
+                "trace — DSV2, GQA-4 vs GLA-2 on {} TP2 (PCIe pair fabric), \
+                 8K/512 open loop @{rate:.2} req/s, n {n}",
+                spec.label()
+            );
+            let mut decomps: Vec<(&str, gla_serve::trace::E2eDecomp)> = Vec::new();
+            for variant in ["gqa4", "gla2"] {
+                let mut cluster = Cluster::new(
+                    m,
+                    m.variant(variant),
+                    ServingConfig::with_parallelism(2, 1).with_trace(),
+                    DeviceModel::h100_serving(),
+                    &spec,
+                    RouterKind::RoleAware,
+                    DriveMode::Open,
+                );
+                cluster.submit(&reqs);
+                cluster.run();
+                let stats = cluster.sim_stats();
+                let duration = cluster.metrics.duration;
+                let tracer = cluster.take_trace().expect("with_trace arms the tracer");
+                match tracer.audit().check(&cluster.metrics) {
+                    Ok(()) => println!(
+                        "\n{variant}: audit OK — trace-derived aggregates == ServiceMetrics"
+                    ),
+                    Err(e) => {
+                        eprintln!("{variant}: TRACE AUDIT FAILED: {e}");
+                        std::process::exit(1);
+                    }
+                }
+                println!("  per-replica wall attribution over {duration:.1}s:");
+                println!(
+                    "  {:<4} {:<8} {:>9} {:>8} {:>7} {:>11} {:>6}",
+                    "rep", "role", "prefill%", "decode%", "mixed%", "migrating%", "idle%"
+                );
+                let labels = tracer.replica_labels().to_vec();
+                for (ri, u) in tracer.utilization(duration).iter().enumerate() {
+                    let pct = |x: f64| 100.0 * x / duration.max(1e-12);
+                    println!(
+                        "  r{ri:<3} {:<8} {:>8.1}% {:>7.1}% {:>6.1}% {:>10.1}% {:>5.1}%",
+                        labels[ri],
+                        pct(u.prefill_s),
+                        pct(u.decode_s),
+                        pct(u.mixed_s),
+                        pct(u.migrating_s),
+                        pct(u.idle_s),
+                    );
+                }
+                let peak_queue =
+                    tracer.queue_depth().iter().map(|&(_, d)| d).max().unwrap_or(0);
+                let peak_pool = (0..labels.len())
+                    .map(|ri| {
+                        tracer
+                            .pool_series(ri)
+                            .iter()
+                            .map(|&(_, used, _)| used)
+                            .max()
+                            .unwrap_or(0)
+                    })
+                    .max()
+                    .unwrap_or(0);
+                println!(
+                    "  peak queue depth {peak_queue}, peak pool occupancy \
+                     {peak_pool} pages"
+                );
+                decomps.push((variant, tracer.mean_decomp()));
+                if let Err(e) = std::fs::create_dir_all(&out_dir) {
+                    eprintln!("cannot create {out_dir}: {e}");
+                    std::process::exit(1);
+                }
+                let path = format!("{out_dir}/{variant}_1p2d.trace.json");
+                let label = format!("{variant} 1P+2D TP2 @{rate} req/s");
+                if let Err(e) = std::fs::write(&path, tracer.to_chrome_json(&label)) {
+                    eprintln!("cannot write {path}: {e}");
+                    std::process::exit(1);
+                }
+                println!("  wrote {path} (load in https://ui.perfetto.dev)");
+                print_sim_stats(&stats);
+            }
+            println!("\nmean E2E decomposition, GQA-4 vs GLA-2 (seconds):");
+            println!(
+                "{:<8} {:>7} {:>9} {:>11} {:>8} {:>8}",
+                "variant", "queue", "prefill", "migr stall", "decode", "e2e"
+            );
+            for (variant, d) in &decomps {
+                println!(
+                    "{variant:<8} {:>7.2} {:>9.2} {:>11.3} {:>8.2} {:>8.2}",
+                    d.queue_s, d.prefill_s, d.stall_s, d.decode_s, d.e2e_s
+                );
             }
         }
         other => {
             eprintln!(
-                "unknown command `{other}` (try: info serve train sim qps disagg prefix fusion)"
+                "unknown command `{other}` (try: info serve train sim qps disagg prefix \
+                 fusion trace)"
             );
             std::process::exit(2);
         }

@@ -12,7 +12,7 @@
 use std::fs;
 use std::path::{Path, PathBuf};
 
-use crate::metrics::SimStats;
+use crate::metrics::{ServiceMetrics, SimStats};
 
 /// One JSON scalar. Non-finite floats serialize as `null` (JSON has no
 /// NaN/inf) rather than producing an unparsable file.
@@ -92,6 +92,37 @@ impl BenchReport {
             ("events_per_sec", Val::F(stats.events_per_sec())),
             ("requests_per_sec", Val::F(stats.requests_per_sec())),
         ]);
+    }
+
+    /// Append one standardized service-metrics row: the same key schema
+    /// for every bench (med/mean/p95/p99 of the four latency summaries,
+    /// in seconds, plus token throughput), so downstream JSON diffing
+    /// reads one shape instead of per-bench ad-hoc keys. `label` names
+    /// the configuration the metrics came from. Takes `&mut` because
+    /// quantile reads sort the summaries lazily.
+    pub fn push_metrics(&mut self, label: &str, m: &mut ServiceMetrics) {
+        let mut fields: Vec<(&str, Val)> = vec![("metrics", Val::s(label))];
+        let mut quads: Vec<(&str, [f64; 4])> = Vec::new();
+        for (name, s) in [
+            ("e2e", &mut m.e2e),
+            ("ttft", &mut m.ttft),
+            ("itl", &mut m.itl),
+            ("queue_wait", &mut m.queue_wait),
+        ] {
+            quads.push((name, [s.median(), s.mean(), s.p95(), s.p99()]));
+        }
+        let keyed: Vec<(String, f64)> = quads
+            .iter()
+            .flat_map(|(name, q)| {
+                [("med", q[0]), ("mean", q[1]), ("p95", q[2]), ("p99", q[3])]
+                    .map(|(stat, v)| (format!("{name}_{stat}_s"), v))
+            })
+            .collect();
+        for (k, v) in &keyed {
+            fields.push((k.as_str(), Val::F(*v)));
+        }
+        fields.push(("tok_per_s", Val::F(m.throughput())));
+        self.push_row(&fields);
     }
 
     /// Serialize to a JSON object string (stable field order).
@@ -175,6 +206,30 @@ mod tests {
         assert!(json.contains("\"wall_s\": 0.5"));
         assert!(json.contains("\"events_per_sec\": 200"));
         assert!(json.contains("\"requests_per_sec\": 20"));
+    }
+
+    #[test]
+    fn metrics_row_has_stable_keys() {
+        let mut m = ServiceMetrics::default();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            m.e2e.record(v);
+            m.ttft.record(v * 0.1);
+            m.itl.record(v * 0.01);
+            m.queue_wait.record(v * 0.5);
+        }
+        m.output_tokens = 100;
+        m.duration = 10.0;
+        let mut r = BenchReport::new("x");
+        r.push_metrics("gla2@1.0", &mut m);
+        let json = r.to_json();
+        assert!(json.contains("\"metrics\": \"gla2@1.0\""));
+        for base in ["e2e", "ttft", "itl", "queue_wait"] {
+            for stat in ["med", "mean", "p95", "p99"] {
+                assert!(json.contains(&format!("\"{base}_{stat}_s\": ")), "{base}_{stat}_s");
+            }
+        }
+        assert!(json.contains("\"e2e_mean_s\": 2.5"));
+        assert!(json.contains("\"tok_per_s\": 10"));
     }
 
     #[test]

@@ -56,6 +56,21 @@ impl Work {
             }
         }
     }
+
+    /// Decode tokens this step computes (one per stepped sequence); the
+    /// tracer tags step spans with this split.
+    pub fn decode_tokens(&self) -> usize {
+        match self {
+            Work::DecodeBatch { idxs } => idxs.len(),
+            Work::Mixed { decode, .. } => decode.len(),
+            Work::Idle | Work::PrefillChunk { .. } => 0,
+        }
+    }
+
+    /// Prefill tokens this step computes (planned chunk sizes summed).
+    pub fn prefill_tokens(&self) -> usize {
+        self.new_tokens() - self.decode_tokens()
+    }
 }
 
 impl Scheduler {

@@ -1,0 +1,881 @@
+//! Sim-time request tracing: an opt-in, zero-dependency [`Tracer`] that
+//! records the lifecycle of every request — arrival, queueing, admission
+//! (with prefix-fork detail), per-replica step spans, preemption, KV-cache
+//! shipment over the link fabric, import, retire — stamped with the
+//! *virtual* clock of the discrete-event loop.
+//!
+//! Armed by [`ServingConfig::trace`](crate::config::ServingConfig::trace)
+//! (default off). The tracer is **write-only**: the cluster appends events
+//! behind `if let Some(tr) = ...` guards and never reads them back, so a
+//! traced run is bit-identical to an untraced one (same `ServiceMetrics`,
+//! same `SimStats::events`) — `tests/properties.rs` pins that inertness
+//! contract, like every other off-by-default mechanism in this repo.
+//!
+//! Three consumers ride on the raw event list:
+//!
+//! 1. [`Tracer::to_chrome_json`] — a Chrome-trace-event-format exporter
+//!    (hand-rolled JSON in the `report.rs` style). Replicas and fabric
+//!    links are tracks, steps and shipments are complete (`"X"`) spans,
+//!    requests are async (`"b"`/`"e"`) flows, queue depth and pool
+//!    occupancy are counter (`"C"`) series. Load the file in Perfetto or
+//!    `chrome://tracing`.
+//! 2. Derived analyzers — [`Tracer::utilization`] (per-replica busy
+//!    fractions split prefill / decode / mixed / migrating / idle),
+//!    [`Tracer::queue_depth`] and [`Tracer::pool_series`] time series, and
+//!    [`Tracer::decompose`] (per-request E2E = queue → prefill →
+//!    migration stall → decode). The CLI `trace` subcommand prints these
+//!    as a GQA-4 vs GLA-2 comparison.
+//! 3. [`Tracer::audit`] — aggregates recomputed *purely from the trace*
+//!    ([`TraceAudit`]) that must equal the independently collected
+//!    [`ServiceMetrics`] exactly (E2E/TTFT sample multisets bit-for-bit,
+//!    output tokens, migrated bytes, migrations, preemptions). The tracer
+//!    doubles as a cross-checking correctness tool for the scheduler.
+//!
+//! The audit reproduces the scheduler's float expressions verbatim
+//! (`now - start_t`, `first_token_t.unwrap_or(now) - start_t`,
+//! `now - send_t`) on the same values, so `Summary`'s exact multiset
+//! equality holds with zero tolerance. Output tokens are counted from
+//! per-step emission events computed *before* the scheduler applies the
+//! step — deliberately not read back from `ServiceMetrics` — which is what
+//! makes the audit a real cross-check (it caught nothing being the goal).
+
+use crate::metrics::{ServiceMetrics, Summary};
+use crate::sched::{FinishedSeq, Work};
+
+/// What a replica step span spent its wall on. Derived from the planned
+/// [`Work`]; `Work::Idle` produces no span at all.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepKind {
+    Prefill,
+    Decode,
+    Mixed,
+}
+
+impl StepKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            StepKind::Prefill => "prefill",
+            StepKind::Decode => "decode",
+            StepKind::Mixed => "mixed",
+        }
+    }
+}
+
+/// One sim-time-stamped lifecycle event. Request-keyed events carry the
+/// request id; span-ish events carry the replica (or link endpoints).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// client send (open loop) or closed-loop release of request `id`
+    Arrival { id: u64, t: f64 },
+    /// the request entered the shared wait queue (same instant as
+    /// `Arrival` today; kept distinct so future admission-control work
+    /// can separate them)
+    Queued { id: u64, t: f64 },
+    /// a replica scheduler admitted the request; `queued_t` is the send
+    /// time the `queue_wait` sample was taken against, `prefix_hit` /
+    /// `prefill_skipped` record whether admission forked a resident
+    /// shared prefix and how many prompt tokens that skipped
+    Admit {
+        id: u64,
+        t: f64,
+        replica: usize,
+        queued_t: f64,
+        prefix_hit: bool,
+        prefill_skipped: u64,
+    },
+    /// a replica began executing one planned unit of work
+    StepStart {
+        replica: usize,
+        t: f64,
+        kind: StepKind,
+        prefill_tokens: usize,
+        decode_tokens: usize,
+    },
+    /// the matching completion; `emitted` is the number of output tokens
+    /// this step produced (first tokens from completing prefills plus one
+    /// per decoded sequence), recomputed from pre-step phase state
+    StepEnd { replica: usize, t: f64, emitted: usize },
+    /// pool occupancy snapshot taken after a step applied
+    PoolSample { replica: usize, t: f64, pages_used: usize, pages_total: usize },
+    /// the scheduler evicted a decoding sequence back to the wait queue
+    Preempt { id: u64, t: f64, replica: usize },
+    /// a prefill replica finished computing the cache and released it for
+    /// migration (`kv_tokens` of distinct KV content)
+    Export { id: u64, t: f64, src: usize, kv_tokens: usize },
+    /// a streamed-migration chunk entered the link; occupies the wire
+    /// from `t` to `ready_t`
+    ShipChunk { id: u64, t: f64, src: usize, dst: usize, bytes: u64, ready_t: f64 },
+    /// the epilogue shipment (whole cache, or the streamed remainder)
+    ShipTail { id: u64, t: f64, src: usize, dst: usize, bytes: u64, ready_t: f64 },
+    /// a decode replica adopted the migrated cache; `export_t` is when
+    /// the cache left the prefill replica (the `migration_wait` base)
+    Import {
+        id: u64,
+        t: f64,
+        replica: usize,
+        export_t: f64,
+        kv_tokens: usize,
+        bytes: u64,
+    },
+    /// the request completed; `e2e`/`ttft` reproduce the scheduler's own
+    /// sample expressions bit-for-bit (the audit depends on this)
+    Retire { id: u64, t: f64, replica: usize, e2e: f64, ttft: f64 },
+}
+
+impl TraceEvent {
+    fn replica(&self) -> Option<usize> {
+        match self {
+            TraceEvent::Admit { replica, .. }
+            | TraceEvent::StepStart { replica, .. }
+            | TraceEvent::StepEnd { replica, .. }
+            | TraceEvent::PoolSample { replica, .. }
+            | TraceEvent::Preempt { replica, .. }
+            | TraceEvent::Import { replica, .. }
+            | TraceEvent::Retire { replica, .. } => Some(*replica),
+            TraceEvent::Export { src, .. } => Some(*src),
+            _ => None,
+        }
+    }
+}
+
+/// Per-replica wall attribution over a run of `duration` seconds:
+/// the three busy kinds are summed from step spans; `migrating` is the
+/// part of the *non-busy* wall overlapped by in-flight shipments touching
+/// this replica (the disaggregation stall the paper's smaller GLA caches
+/// shrink); `idle` is the remainder.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ReplicaUtil {
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub mixed_s: f64,
+    pub migrating_s: f64,
+    pub idle_s: f64,
+}
+
+impl ReplicaUtil {
+    pub fn busy_s(&self) -> f64 {
+        self.prefill_s + self.decode_s + self.mixed_s
+    }
+}
+
+/// Per-request end-to-end decomposition, all in seconds:
+/// `e2e = queue + prefill + stall + decode`. `queue` is send → first
+/// admission, `prefill` is admission → first token, `stall` sums
+/// export → import gaps (transfer + link queueing + pool admission),
+/// and `decode` is the residual (which also absorbs re-queue time after
+/// a preemption, by construction).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct E2eDecomp {
+    pub queue_s: f64,
+    pub prefill_s: f64,
+    pub stall_s: f64,
+    pub decode_s: f64,
+    pub e2e_s: f64,
+}
+
+/// Aggregates recomputed purely from the trace; [`TraceAudit::check`]
+/// demands exact equality with [`ServiceMetrics`] (`Summary` comparison
+/// is multiset equality on the raw `f64` samples — no tolerance).
+#[derive(Debug, Clone, Default)]
+pub struct TraceAudit {
+    pub e2e: Summary,
+    pub ttft: Summary,
+    pub queue_wait: Summary,
+    pub output_tokens: u64,
+    pub migrations: u64,
+    pub migrated_bytes: u64,
+    pub preemptions: u64,
+}
+
+impl TraceAudit {
+    /// every mismatch, joined — `Ok(())` means the trace and the metrics
+    /// pipeline independently agree on what the run did
+    pub fn check(&self, m: &ServiceMetrics) -> Result<(), String> {
+        let mut errs: Vec<String> = Vec::new();
+        for (name, mine, theirs) in [
+            ("e2e", &self.e2e, &m.e2e),
+            ("ttft", &self.ttft, &m.ttft),
+            ("queue_wait", &self.queue_wait, &m.queue_wait),
+        ] {
+            if mine != theirs {
+                errs.push(format!(
+                    "{name} samples diverge (trace {} vs metrics {})",
+                    mine.len(),
+                    theirs.len()
+                ));
+            }
+        }
+        for (name, mine, theirs) in [
+            ("output_tokens", self.output_tokens, m.output_tokens),
+            ("migrations", self.migrations, m.migrations),
+            ("migrated_bytes", self.migrated_bytes, m.migrated_bytes),
+            ("preemptions", self.preemptions, m.preemptions),
+        ] {
+            if mine != theirs {
+                errs.push(format!("{name}: trace {mine} vs metrics {theirs}"));
+            }
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs.join("; "))
+        }
+    }
+}
+
+/// The recorder. Owned by `Cluster` as `Option<Tracer>` (present only
+/// when `ServingConfig::trace` is set) and retrieved after a run via
+/// `Cluster::take_trace` / `SimEngine::take_trace`.
+#[derive(Debug, Default)]
+pub struct Tracer {
+    /// replica track labels (`"prefill"` / `"decode"` / `"unified"`),
+    /// indexed by replica id
+    replicas: Vec<String>,
+    events: Vec<TraceEvent>,
+    /// ids whose `Arrival`/`Queued` pair was already emitted, so a
+    /// preempted-and-readmitted request doesn't arrive twice
+    seen: std::collections::HashSet<u64>,
+}
+
+impl Tracer {
+    pub fn new(replica_labels: Vec<String>) -> Self {
+        Tracer { replicas: replica_labels, ..Tracer::default() }
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn replica_labels(&self) -> &[String] {
+        &self.replicas
+    }
+
+    // ---- recording (called from the cluster hot paths) ----------------
+
+    pub fn admit(
+        &mut self,
+        id: u64,
+        arrival_t: f64,
+        queued_t: f64,
+        now: f64,
+        replica: usize,
+        prefix_hit: bool,
+        prefill_skipped: u64,
+    ) {
+        if self.seen.insert(id) {
+            self.events.push(TraceEvent::Arrival { id, t: arrival_t });
+            self.events.push(TraceEvent::Queued { id, t: queued_t });
+        }
+        self.events.push(TraceEvent::Admit {
+            id,
+            t: now,
+            replica,
+            queued_t,
+            prefix_hit,
+            prefill_skipped,
+        });
+    }
+
+    /// record the launch of one planned unit of work; `Work::Idle` is
+    /// not a span and records nothing (matching `trace_step_end`)
+    pub fn step_start(&mut self, replica: usize, t: f64, work: &Work) {
+        let kind = match work {
+            Work::Idle => return,
+            Work::PrefillChunk { .. } => StepKind::Prefill,
+            Work::DecodeBatch { .. } => StepKind::Decode,
+            Work::Mixed { .. } => StepKind::Mixed,
+        };
+        self.events.push(TraceEvent::StepStart {
+            replica,
+            t,
+            kind,
+            prefill_tokens: work.prefill_tokens(),
+            decode_tokens: work.decode_tokens(),
+        });
+    }
+
+    pub fn step_end(&mut self, replica: usize, t: f64, emitted: usize) {
+        self.events.push(TraceEvent::StepEnd { replica, t, emitted });
+    }
+
+    pub fn pool_sample(&mut self, replica: usize, t: f64, pages_used: usize, pages_total: usize) {
+        self.events.push(TraceEvent::PoolSample { replica, t, pages_used, pages_total });
+    }
+
+    pub fn preempt(&mut self, id: u64, t: f64, replica: usize) {
+        self.events.push(TraceEvent::Preempt { id, t, replica });
+    }
+
+    pub fn export(&mut self, id: u64, t: f64, src: usize, kv_tokens: usize) {
+        self.events.push(TraceEvent::Export { id, t, src, kv_tokens });
+    }
+
+    pub fn ship_chunk(
+        &mut self,
+        id: u64,
+        t: f64,
+        src: usize,
+        dst: usize,
+        bytes: u64,
+        ready_t: f64,
+    ) {
+        self.events.push(TraceEvent::ShipChunk { id, t, src, dst, bytes, ready_t });
+    }
+
+    pub fn ship_tail(&mut self, id: u64, t: f64, src: usize, dst: usize, bytes: u64, ready_t: f64) {
+        self.events.push(TraceEvent::ShipTail { id, t, src, dst, bytes, ready_t });
+    }
+
+    pub fn import(
+        &mut self,
+        id: u64,
+        t: f64,
+        replica: usize,
+        export_t: f64,
+        kv_tokens: usize,
+        bytes: u64,
+    ) {
+        self.events.push(TraceEvent::Import { id, t, replica, export_t, kv_tokens, bytes });
+    }
+
+    /// record a retirement from the scheduler's returned [`FinishedSeq`];
+    /// the sample expressions mirror `Scheduler::retire` exactly so the
+    /// audit's multiset comparison is bit-for-bit
+    pub fn retire_finished(&mut self, replica: usize, now: f64, fin: &FinishedSeq) {
+        let s = &fin.state;
+        self.events.push(TraceEvent::Retire {
+            id: s.req.id as u64,
+            t: now,
+            replica,
+            e2e: now - s.start_t,
+            ttft: s.first_token_t.unwrap_or(now) - s.start_t,
+        });
+    }
+
+    // ---- consumer 3: the trace-vs-metrics audit ------------------------
+
+    pub fn audit(&self) -> TraceAudit {
+        let mut a = TraceAudit::default();
+        for ev in &self.events {
+            match ev {
+                TraceEvent::Admit { t, queued_t, .. } => a.queue_wait.record(t - queued_t),
+                TraceEvent::StepEnd { emitted, .. } => a.output_tokens += *emitted as u64,
+                TraceEvent::Preempt { .. } => a.preemptions += 1,
+                TraceEvent::Import { bytes, .. } => {
+                    a.migrations += 1;
+                    a.migrated_bytes += bytes;
+                }
+                TraceEvent::Retire { e2e, ttft, .. } => {
+                    a.e2e.record(*e2e);
+                    a.ttft.record(*ttft);
+                }
+                _ => {}
+            }
+        }
+        a
+    }
+
+    // ---- consumer 2: derived analyzers --------------------------------
+
+    fn n_replicas(&self) -> usize {
+        let from_events =
+            self.events.iter().filter_map(TraceEvent::replica).map(|r| r + 1).max().unwrap_or(0);
+        self.replicas.len().max(from_events)
+    }
+
+    /// per-replica busy-fraction breakdown over `[0, duration]` seconds
+    /// (pass `ServiceMetrics::duration`)
+    pub fn utilization(&self, duration: f64) -> Vec<ReplicaUtil> {
+        let n = self.n_replicas();
+        let mut open: Vec<Option<(f64, StepKind)>> = vec![None; n];
+        let mut busy: Vec<Vec<(f64, f64)>> = vec![Vec::new(); n];
+        let mut ship: Vec<Vec<(f64, f64)>> = vec![Vec::new(); n];
+        let mut util = vec![ReplicaUtil::default(); n];
+        for ev in &self.events {
+            match *ev {
+                TraceEvent::StepStart { replica, t, kind, .. } => open[replica] = Some((t, kind)),
+                TraceEvent::StepEnd { replica, t, .. } => {
+                    if let Some((start, kind)) = open[replica].take() {
+                        let d = t - start;
+                        match kind {
+                            StepKind::Prefill => util[replica].prefill_s += d,
+                            StepKind::Decode => util[replica].decode_s += d,
+                            StepKind::Mixed => util[replica].mixed_s += d,
+                        }
+                        busy[replica].push((start, t));
+                    }
+                }
+                TraceEvent::ShipChunk { t, src, dst, ready_t, .. }
+                | TraceEvent::ShipTail { t, src, dst, ready_t, .. } => {
+                    let iv = (t, ready_t.min(duration));
+                    if iv.1 > iv.0 {
+                        ship[src].push(iv);
+                        if dst != src {
+                            ship[dst].push(iv);
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        for (r, u) in util.iter_mut().enumerate() {
+            let merged = merge_intervals(&mut ship[r]);
+            // walk the idle gaps between (chronological, non-overlapping)
+            // busy spans and attribute shipment-covered time to migrating
+            let mut idx = 0usize;
+            let mut cursor = 0.0f64;
+            let mut migrating = 0.0f64;
+            for &(a, b) in &busy[r] {
+                migrating += overlap_from(&merged, &mut idx, cursor, a);
+                cursor = cursor.max(b);
+            }
+            migrating += overlap_from(&merged, &mut idx, cursor, duration);
+            u.migrating_s = migrating;
+            u.idle_s = (duration - u.busy_s() - migrating).max(0.0);
+        }
+        util
+    }
+
+    /// wait-queue depth as a step series `(t, depth)`: +1 on first
+    /// queueing and on every preemption (the sequence re-enters the
+    /// queue), −1 on every admission
+    pub fn queue_depth(&self) -> Vec<(f64, i64)> {
+        let mut deltas: Vec<(f64, i64)> = Vec::new();
+        for ev in &self.events {
+            match ev {
+                TraceEvent::Queued { t, .. } | TraceEvent::Preempt { t, .. } => {
+                    deltas.push((*t, 1));
+                }
+                TraceEvent::Admit { t, .. } => deltas.push((*t, -1)),
+                _ => {}
+            }
+        }
+        // arrivals before admissions at the same instant so a zero-wait
+        // admit never dips the series negative
+        deltas.sort_by(|a, b| a.0.total_cmp(&b.0).then(b.1.cmp(&a.1)));
+        let mut depth = 0i64;
+        deltas
+            .into_iter()
+            .map(|(t, d)| {
+                depth += d;
+                (t, depth)
+            })
+            .collect()
+    }
+
+    /// `(t, pages_used, pages_total)` snapshots for one replica
+    pub fn pool_series(&self, replica: usize) -> Vec<(f64, usize, usize)> {
+        self.events
+            .iter()
+            .filter_map(|ev| match *ev {
+                TraceEvent::PoolSample { replica: r, t, pages_used, pages_total }
+                    if r == replica =>
+                {
+                    Some((t, pages_used, pages_total))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// per retired request `(id, decomposition)`, in retirement order
+    pub fn decompose(&self) -> Vec<(u64, E2eDecomp)> {
+        use std::collections::HashMap;
+        let mut first_admit: HashMap<u64, f64> = HashMap::new();
+        let mut stall: HashMap<u64, f64> = HashMap::new();
+        let mut out: Vec<(u64, E2eDecomp)> = Vec::new();
+        for ev in &self.events {
+            match *ev {
+                TraceEvent::Admit { id, t, .. } => {
+                    first_admit.entry(id).or_insert(t);
+                }
+                TraceEvent::Import { id, t, export_t, .. } => {
+                    *stall.entry(id).or_insert(0.0) += t - export_t;
+                }
+                TraceEvent::Retire { id, t, e2e, ttft, .. } => {
+                    let start = t - e2e;
+                    let queue = first_admit.get(&id).copied().unwrap_or(start) - start;
+                    let stall_s = stall.get(&id).copied().unwrap_or(0.0);
+                    out.push((
+                        id,
+                        E2eDecomp {
+                            queue_s: queue,
+                            prefill_s: ttft - queue,
+                            stall_s,
+                            decode_s: e2e - ttft - stall_s,
+                            e2e_s: e2e,
+                        },
+                    ));
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// mean of [`Tracer::decompose`] across retired requests
+    pub fn mean_decomp(&self) -> E2eDecomp {
+        let per_req = self.decompose();
+        let n = per_req.len().max(1) as f64;
+        let mut m = E2eDecomp::default();
+        for (_, d) in &per_req {
+            m.queue_s += d.queue_s / n;
+            m.prefill_s += d.prefill_s / n;
+            m.stall_s += d.stall_s / n;
+            m.decode_s += d.decode_s / n;
+            m.e2e_s += d.e2e_s / n;
+        }
+        m
+    }
+
+    // ---- consumer 1: Chrome trace event format ------------------------
+
+    /// serialize to the Chrome trace event format (JSON object form),
+    /// loadable in Perfetto (<https://ui.perfetto.dev>) or
+    /// `chrome://tracing`. Timestamps are microseconds of sim time.
+    pub fn to_chrome_json(&self, label: &str) -> String {
+        const US: f64 = 1e6;
+        let mut evs: Vec<String> = Vec::new();
+        // track metadata: pid 1 = replicas, pid 2 = fabric links
+        evs.push(meta_ev(1, None, "process_name", "replicas"));
+        let n = self.n_replicas();
+        for r in 0..n {
+            let fallback = format!("replica {r}");
+            let role = self.replicas.get(r).map(String::as_str).unwrap_or(&fallback);
+            evs.push(meta_ev(1, Some(r), "thread_name", &format!("r{r} {role}")));
+        }
+        // link tracks appear in first-traffic order
+        let mut links: Vec<(usize, usize)> = Vec::new();
+        for ev in &self.events {
+            if let TraceEvent::ShipChunk { src, dst, .. } | TraceEvent::ShipTail { src, dst, .. } =
+                ev
+            {
+                if !links.contains(&(*src, *dst)) {
+                    links.push((*src, *dst));
+                }
+            }
+        }
+        if !links.is_empty() {
+            evs.push(meta_ev(2, None, "process_name", "links"));
+            for (i, (s, d)) in links.iter().enumerate() {
+                evs.push(meta_ev(2, Some(i), "thread_name", &format!("link r{s}->r{d}")));
+            }
+        }
+        let link_tid = |s: usize, d: usize| links.iter().position(|&l| l == (s, d)).unwrap_or(0);
+        // request flows: open at first queueing, close at retirement
+        let mut admit_replica: std::collections::HashMap<u64, usize> =
+            std::collections::HashMap::new();
+        let mut queued_at: std::collections::HashMap<u64, f64> = std::collections::HashMap::new();
+        for ev in &self.events {
+            match ev {
+                TraceEvent::Queued { id, t } => {
+                    queued_at.entry(*id).or_insert(*t);
+                }
+                TraceEvent::Admit { id, replica, .. } => {
+                    admit_replica.entry(*id).or_insert(*replica);
+                }
+                _ => {}
+            }
+        }
+        let mut open: Vec<Option<(f64, StepKind, usize, usize)>> = vec![None; n];
+        for ev in &self.events {
+            match *ev {
+                TraceEvent::StepStart { replica, t, kind, prefill_tokens, decode_tokens } => {
+                    open[replica] = Some((t, kind, prefill_tokens, decode_tokens));
+                }
+                TraceEvent::StepEnd { replica, t, emitted } => {
+                    if let Some((start, kind, p, d)) = open[replica].take() {
+                        evs.push(format!(
+                            "{{\"ph\":\"X\",\"pid\":1,\"tid\":{replica},\"ts\":{},\"dur\":{},\
+                             \"cat\":\"step\",\"name\":{},\"args\":{{\"prefill_tokens\":{p},\
+                             \"decode_tokens\":{d},\"emitted\":{emitted}}}}}",
+                            start * US,
+                            (t - start) * US,
+                            esc(kind.name()),
+                        ));
+                    }
+                }
+                TraceEvent::ShipChunk { id, t, src, dst, bytes, ready_t }
+                | TraceEvent::ShipTail { id, t, src, dst, bytes, ready_t } => {
+                    let name = if matches!(ev, TraceEvent::ShipChunk { .. }) {
+                        format!("chunk req {id}")
+                    } else {
+                        format!("tail req {id}")
+                    };
+                    evs.push(format!(
+                        "{{\"ph\":\"X\",\"pid\":2,\"tid\":{},\"ts\":{},\"dur\":{},\
+                         \"cat\":\"ship\",\"name\":{},\"args\":{{\"bytes\":{bytes}}}}}",
+                        link_tid(src, dst),
+                        t * US,
+                        (ready_t - t) * US,
+                        esc(&name),
+                    ));
+                }
+                TraceEvent::Preempt { id, t, replica } => {
+                    evs.push(instant_ev(replica, t * US, &format!("preempt req {id}")));
+                }
+                TraceEvent::Export { id, t, src, .. } => {
+                    evs.push(instant_ev(src, t * US, &format!("export req {id}")));
+                }
+                TraceEvent::Import { id, t, replica, .. } => {
+                    evs.push(instant_ev(replica, t * US, &format!("import req {id}")));
+                }
+                TraceEvent::Retire { id, t, replica, .. } => {
+                    let b_tid = admit_replica.get(&id).copied().unwrap_or(replica);
+                    let b_ts = queued_at.get(&id).copied().unwrap_or(t);
+                    let name = esc(&format!("req {id}"));
+                    evs.push(format!(
+                        "{{\"ph\":\"b\",\"pid\":1,\"tid\":{b_tid},\"ts\":{},\
+                         \"cat\":\"req\",\"id\":{id},\"name\":{name}}}",
+                        b_ts * US,
+                    ));
+                    evs.push(format!(
+                        "{{\"ph\":\"e\",\"pid\":1,\"tid\":{replica},\"ts\":{},\
+                         \"cat\":\"req\",\"id\":{id},\"name\":{name}}}",
+                        t * US,
+                    ));
+                }
+                TraceEvent::PoolSample { replica, t, pages_used, .. } => {
+                    evs.push(format!(
+                        "{{\"ph\":\"C\",\"pid\":1,\"tid\":{replica},\"ts\":{},\
+                         \"name\":{},\"args\":{{\"pages\":{pages_used}}}}}",
+                        t * US,
+                        esc(&format!("pool r{replica}")),
+                    ));
+                }
+                _ => {}
+            }
+        }
+        for (t, depth) in self.queue_depth() {
+            evs.push(format!(
+                "{{\"ph\":\"C\",\"pid\":1,\"tid\":0,\"ts\":{},\"name\":\"queue depth\",\
+                 \"args\":{{\"waiting\":{depth}}}}}",
+                t * US,
+            ));
+        }
+        format!(
+            "{{\"displayTimeUnit\":\"ms\",\"otherData\":{{\"label\":{}}},\"traceEvents\":[{}]}}\n",
+            esc(label),
+            evs.join(",")
+        )
+    }
+}
+
+fn meta_ev(pid: usize, tid: Option<usize>, name: &str, value: &str) -> String {
+    let tid = tid.map(|t| format!("\"tid\":{t},")).unwrap_or_default();
+    format!(
+        "{{\"ph\":\"M\",\"pid\":{pid},{tid}\"name\":{},\"args\":{{\"name\":{}}}}}",
+        esc(name),
+        esc(value)
+    )
+}
+
+fn instant_ev(tid: usize, ts: f64, name: &str) -> String {
+    format!(
+        "{{\"ph\":\"i\",\"pid\":1,\"tid\":{tid},\"ts\":{ts},\"s\":\"t\",\"name\":{}}}",
+        esc(name)
+    )
+}
+
+/// JSON string literal with the same escaping rules as `report::Val`
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// sort + coalesce possibly-overlapping intervals in place, returning
+/// the merged list
+fn merge_intervals(ivs: &mut [(f64, f64)]) -> Vec<(f64, f64)> {
+    ivs.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut merged: Vec<(f64, f64)> = Vec::with_capacity(ivs.len());
+    for &(a, b) in ivs.iter() {
+        match merged.last_mut() {
+            Some(last) if a <= last.1 => last.1 = last.1.max(b),
+            _ => merged.push((a, b)),
+        }
+    }
+    merged
+}
+
+/// total overlap of `merged` (sorted, disjoint) with `[lo, hi)`; `idx`
+/// is a monotone cursor so a left-to-right gap walk stays linear
+fn overlap_from(merged: &[(f64, f64)], idx: &mut usize, lo: f64, hi: f64) -> f64 {
+    if hi <= lo {
+        return 0.0;
+    }
+    while *idx < merged.len() && merged[*idx].1 <= lo {
+        *idx += 1;
+    }
+    let mut j = *idx;
+    let mut s = 0.0;
+    while j < merged.len() && merged[j].0 < hi {
+        s += (merged[j].1.min(hi) - merged[j].0.max(lo)).max(0.0);
+        j += 1;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_tracer() -> Tracer {
+        // two replicas: r0 prefills req 1 (0..2s), ships its cache
+        // (2..3s), r1 decodes it (3..5s, 4 tokens); a second request is
+        // preempted once
+        let mut tr = Tracer::new(vec!["prefill".into(), "decode".into()]);
+        tr.admit(1, 0.0, 0.0, 0.5, 0, false, 0);
+        tr.step_start(0, 0.5, &Work::PrefillChunk { idx: 0, chunk: 1024 });
+        tr.step_end(0, 2.0, 1);
+        tr.export(1, 2.0, 0, 1024);
+        tr.ship_tail(1, 2.0, 0, 1, 4096, 3.0);
+        tr.import(1, 3.0, 1, 2.0, 1024, 4096);
+        tr.step_start(1, 3.0, &Work::DecodeBatch { idxs: vec![0] });
+        tr.step_end(1, 5.0, 1);
+        let fin = FinishedSeq {
+            state: crate::sched::SeqState {
+                req: crate::workload::Request {
+                    id: 1,
+                    prompt_len: 1024,
+                    decode_len: 2,
+                    arrival_t: 0.0,
+                    priority: 0,
+                    family: 0,
+                    shared_len: 0,
+                },
+                phase: crate::sched::Phase::Decode { produced: 2 },
+                start_t: 0.0,
+                first_token_t: Some(2.0),
+                last_token_t: 5.0,
+            },
+            pages: Vec::new(),
+        };
+        tr.retire_finished(1, 5.0, &fin);
+        tr.admit(2, 0.2, 0.2, 0.6, 1, true, 512);
+        tr.preempt(2, 1.0, 1);
+        tr.admit(2, 0.2, 0.2, 4.0, 1, false, 0);
+        tr
+    }
+
+    #[test]
+    fn audit_recomputes_the_toy_run() {
+        let a = toy_tracer().audit();
+        assert_eq!(a.output_tokens, 2);
+        assert_eq!(a.migrations, 1);
+        assert_eq!(a.migrated_bytes, 4096);
+        assert_eq!(a.preemptions, 1);
+        assert_eq!(a.e2e.len(), 1);
+        assert_eq!(a.queue_wait.len(), 3, "re-admission samples queue_wait again");
+        let mut m = ServiceMetrics::default();
+        m.e2e.record(5.0);
+        m.ttft.record(2.0);
+        for w in [0.5, 0.4, 3.8] {
+            m.queue_wait.record(w);
+        }
+        m.output_tokens = 2;
+        m.migrations = 1;
+        m.migrated_bytes = 4096;
+        m.preemptions = 1;
+        a.check(&m).unwrap();
+        m.output_tokens = 3;
+        assert!(a.check(&m).unwrap_err().contains("output_tokens"));
+    }
+
+    #[test]
+    fn utilization_attributes_busy_migrating_idle() {
+        let u = toy_tracer().utilization(5.0);
+        assert_eq!(u.len(), 2);
+        // r0: prefill 0.5..2.0, its own tail ship 2..3 overlaps idle wall
+        assert!((u[0].prefill_s - 1.5).abs() < 1e-12);
+        assert!((u[0].migrating_s - 1.0).abs() < 1e-12);
+        assert!((u[0].idle_s - 2.5).abs() < 1e-12);
+        // r1: decode 3..5, the inbound ship 2..3 is pre-decode stall
+        assert!((u[1].decode_s - 2.0).abs() < 1e-12);
+        assert!((u[1].migrating_s - 1.0).abs() < 1e-12);
+        let total: f64 = u.iter().map(|r| r.busy_s() + r.migrating_s + r.idle_s).sum();
+        assert!((total - 10.0).abs() < 1e-9, "attribution covers both walls exactly");
+    }
+
+    #[test]
+    fn queue_depth_balances_and_never_dips_negative() {
+        let series = toy_tracer().queue_depth();
+        assert!(series.iter().all(|&(_, d)| d >= 0));
+        assert_eq!(series.last().unwrap().1, 0, "drained run ends empty");
+        assert_eq!(series.iter().map(|&(_, d)| d).max(), Some(2));
+    }
+
+    #[test]
+    fn decomposition_sums_to_e2e() {
+        let per_req = toy_tracer().decompose();
+        assert_eq!(per_req.len(), 1);
+        let (id, d) = per_req[0];
+        assert_eq!(id, 1);
+        assert!((d.queue_s - 0.5).abs() < 1e-12);
+        assert!((d.prefill_s - 1.5).abs() < 1e-12);
+        assert!((d.stall_s - 1.0).abs() < 1e-12);
+        assert!((d.decode_s - 2.0).abs() < 1e-12);
+        assert!((d.queue_s + d.prefill_s + d.stall_s + d.decode_s - d.e2e_s).abs() < 1e-12);
+        let m = toy_tracer().mean_decomp();
+        assert!((m.e2e_s - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chrome_json_is_wellformed_and_names_tracks() {
+        let json = toy_tracer().to_chrome_json("toy \"label\"");
+        assert!(json.starts_with("{\"displayTimeUnit\":\"ms\""));
+        assert!(json.contains("\\\"label\\\""), "label is escaped");
+        assert!(json.contains("\"r0 prefill\"") && json.contains("\"r1 decode\""));
+        assert!(json.contains("\"link r0->r1\""));
+        assert!(json.contains("\"ph\":\"X\"") && json.contains("\"ph\":\"b\""));
+        assert!(json.contains("\"queue depth\""));
+        // balanced braces/brackets outside string literals is a cheap
+        // well-formedness proxy (CI runs a real json.load over the file)
+        let (mut depth, mut in_str, mut escaped) = (0i64, false, false);
+        for c in json.chars() {
+            if in_str {
+                match (escaped, c) {
+                    (true, _) => escaped = false,
+                    (false, '\\') => escaped = true,
+                    (false, '"') => in_str = false,
+                    _ => {}
+                }
+            } else {
+                match c {
+                    '"' => in_str = true,
+                    '{' | '[' => depth += 1,
+                    '}' | ']' => depth -= 1,
+                    _ => {}
+                }
+                assert!(depth >= 0);
+            }
+        }
+        assert_eq!(depth, 0);
+        assert!(!in_str);
+    }
+
+    #[test]
+    fn step_start_skips_idle_and_splits_tokens() {
+        let mut tr = Tracer::new(vec!["unified".into()]);
+        tr.step_start(0, 0.0, &Work::Idle);
+        assert!(tr.events().is_empty());
+        tr.step_start(0, 0.0, &Work::Mixed { decode: vec![0, 1], prefill: vec![(2, 512)] });
+        match tr.events()[0] {
+            TraceEvent::StepStart { kind, prefill_tokens, decode_tokens, .. } => {
+                assert_eq!(kind, StepKind::Mixed);
+                assert_eq!(prefill_tokens, 512);
+                assert_eq!(decode_tokens, 2);
+            }
+            ref ev => panic!("unexpected event {ev:?}"),
+        }
+    }
+}

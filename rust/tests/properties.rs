@@ -995,3 +995,214 @@ fn prop_sim_benchmark_conserves_requests_and_tokens() {
         assert!(met.throughput().is_finite() && met.throughput() > 0.0);
     }
 }
+
+#[test]
+fn prop_tracing_is_inert_for_metrics_and_event_counts() {
+    // The tracing contract (DESIGN.md §Tracing): the tracer is write-only
+    // observability, so arming `ServingConfig::trace` changes neither a
+    // single `ServiceMetrics` field (bit-identical, `Summary` multiset
+    // equality included) nor the number of clock stops the event loop
+    // visits — across random streaming/fusion/prefix/fabric/layout
+    // configurations and BOTH async loops.
+    use gla_serve::config::SimLoop;
+    use gla_serve::parallel::FabricSpec;
+    let mut rng = Rng::new(0x7AACE1);
+    for case in 0..8 {
+        let m = DSV2;
+        let variant = m.variant(["gla2", "gqa4"][rng.range(0, 1)]);
+        let page_size = [16usize, 64][rng.range(0, 1)];
+        let chunk = [256usize, 512, 1024][rng.range(0, 2)];
+        let stream = rng.range(0, 1) == 1;
+        let fusion = rng.range(0, 1) == 1;
+        let prefix = rng.range(0, 1) == 1;
+        let fabric = [
+            FabricSpec::shared(),
+            FabricSpec::per_pair(),
+            FabricSpec::per_pair_capped(1),
+        ][rng.range(0, 2)];
+        let spec = if rng.range(0, 1) == 0 {
+            ClusterSpec::unified(rng.range(2, 3))
+        } else {
+            ClusterSpec::disagg(rng.range(1, 2), rng.range(1, 2))
+        };
+        let router = RouterKind::all()[rng.range(0, RouterKind::all().len() - 1)];
+        let n = rng.range(6, 16);
+        let (reqs, max_prompt, max_decode) = if prefix {
+            let pspec = SharedPrefixSpec {
+                n_families: rng.range(1, 3),
+                prefix_len: page_size * rng.range(1, 6),
+                max_suffix: rng.range(1, 512),
+                decode: rng.range(2, 48),
+            };
+            let mut reqs = generate_shared_prefix(pspec, n, case as u64 + 101);
+            stamp_poisson_arrivals(&mut reqs, case as u64 + 101, 2.0);
+            (reqs, pspec.prefix_len + pspec.max_suffix, pspec.decode)
+        } else {
+            let dist =
+                LengthDist::RandomRatio { max_prompt: 4096, max_decode: 128, ratio: 0.1 };
+            (generate_open(dist, n, case as u64 + 101, 2.0), 4096, 128)
+        };
+        let drive = if rng.range(0, 1) == 0 {
+            DriveMode::Closed { concurrency: rng.range(2, 8) }
+        } else {
+            DriveMode::Open
+        };
+        let footprint_pages = (max_prompt + max_decode).div_ceil(page_size);
+        let n_pages = footprint_pages * rng.range(1, 3);
+        let kv_per_token = variant.kv_bytes_per_token_per_device(2, m.dtype_bytes) as u64
+            * m.n_layers as u64;
+        let run = |sim_loop: SimLoop, trace: bool| {
+            let mut serving =
+                ServingConfig::with_parallelism(2, 1).with_sim_loop(sim_loop);
+            serving.page_size = page_size;
+            serving.prefill_chunk = chunk;
+            serving.stream_migration = stream;
+            serving.prefix_cache = prefix;
+            serving.fusion = fusion;
+            serving.trace = trace;
+            serving.kv_hbm_budget = kv_per_token * (page_size * n_pages) as u64;
+            let mut c = Cluster::new(
+                m,
+                variant,
+                serving,
+                DeviceModel::h100_serving(),
+                &spec.clone().with_fabric(fabric),
+                router,
+                drive,
+            );
+            c.submit(&reqs);
+            c.run();
+            let stats = c.sim_stats();
+            let tracer = c.take_trace();
+            (c.metrics, stats, tracer)
+        };
+        for sim_loop in [SimLoop::Calendar, SimLoop::MinScan] {
+            let (off_m, off_s, off_t) = run(sim_loop, false);
+            let (on_m, on_s, on_t) = run(sim_loop, true);
+            assert!(off_t.is_none(), "case {case}: tracer must not exist when off");
+            let tracer = on_t.expect("trace flag arms the tracer");
+            assert!(!tracer.events().is_empty(), "case {case}: traced run recorded nothing");
+            assert_eq!(
+                on_m, off_m,
+                "case {case} ({sim_loop:?}): tracing perturbed ServiceMetrics \
+                 (stream={stream} fusion={fusion} prefix={prefix})"
+            );
+            assert_eq!(
+                on_s.events, off_s.events,
+                "case {case} ({sim_loop:?}): tracing changed the clock stops"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_trace_audit_matches_service_metrics() {
+    // The audit contract: aggregates recomputed purely from the trace —
+    // per-request E2E/TTFT sample multisets, queue-wait samples, output
+    // tokens counted from per-step emission events, migrated bytes,
+    // migrations, preemptions — exactly equal the independently collected
+    // `ServiceMetrics`. Output tokens are the sharp edge: preempted
+    // sequences re-prefill and re-emit, so the trace must count emissions
+    // per step, not per retirement.
+    use gla_serve::config::SimLoop;
+    use gla_serve::engine::SimEngine;
+    use gla_serve::parallel::FabricSpec;
+    let mut rng = Rng::new(0xA0D17);
+    let mut preempting = 0u64;
+    let mut migrating = 0u64;
+    for case in 0..10 {
+        let m = DSV2;
+        let variant = m.variant(["gla2", "gqa4"][rng.range(0, 1)]);
+        let page_size = [16usize, 64][rng.range(0, 1)];
+        let stream = rng.range(0, 1) == 1;
+        let prefix = rng.range(0, 1) == 1;
+        let fusion = rng.range(0, 1) == 1;
+        let fabric =
+            [FabricSpec::shared(), FabricSpec::per_pair()][rng.range(0, 1)];
+        let spec = if rng.range(0, 1) == 0 {
+            ClusterSpec::unified(rng.range(2, 3))
+        } else {
+            ClusterSpec::disagg(rng.range(1, 2), rng.range(1, 2))
+        };
+        let sim_loop = [SimLoop::Calendar, SimLoop::MinScan][rng.range(0, 1)];
+        let n = rng.range(6, 16);
+        let (reqs, max_prompt, max_decode) = if prefix {
+            let pspec = SharedPrefixSpec {
+                n_families: rng.range(1, 3),
+                prefix_len: page_size * rng.range(1, 6),
+                max_suffix: rng.range(1, 512),
+                decode: rng.range(2, 48),
+            };
+            let mut reqs = generate_shared_prefix(pspec, n, case as u64 + 201);
+            stamp_poisson_arrivals(&mut reqs, case as u64 + 201, 2.0);
+            (reqs, pspec.prefix_len + pspec.max_suffix, pspec.decode)
+        } else {
+            let dist =
+                LengthDist::RandomRatio { max_prompt: 4096, max_decode: 128, ratio: 0.1 };
+            (generate_open(dist, n, case as u64 + 201, 2.0), 4096, 128)
+        };
+        let footprint_pages = (max_prompt + max_decode).div_ceil(page_size);
+        let n_pages = footprint_pages * rng.range(1, 3);
+        let kv_per_token = variant.kv_bytes_per_token_per_device(2, m.dtype_bytes) as u64
+            * m.n_layers as u64;
+        let mut serving = ServingConfig::with_parallelism(2, 1)
+            .with_sim_loop(sim_loop)
+            .with_trace();
+        serving.page_size = page_size;
+        serving.prefill_chunk = 512;
+        serving.stream_migration = stream;
+        serving.prefix_cache = prefix;
+        serving.fusion = fusion;
+        serving.kv_hbm_budget = kv_per_token * (page_size * n_pages) as u64;
+        let mut c = Cluster::new(
+            m,
+            variant,
+            serving,
+            DeviceModel::h100_serving(),
+            &spec.clone().with_fabric(fabric),
+            RouterKind::all()[rng.range(0, RouterKind::all().len() - 1)],
+            DriveMode::Open,
+        );
+        c.submit(&reqs);
+        c.run();
+        let tracer = c.take_trace().expect("armed");
+        let audit = tracer.audit();
+        audit
+            .check(&c.metrics)
+            .unwrap_or_else(|e| panic!("case {case}: trace audit diverged: {e}"));
+        assert_eq!(audit.e2e.len(), n, "case {case}: audit lost retirements");
+        // the decomposition must tile each request's E2E exactly
+        for (id, d) in tracer.decompose() {
+            let residual = d.queue_s + d.prefill_s + d.stall_s + d.decode_s - d.e2e_s;
+            assert!(
+                residual.abs() < 1e-9,
+                "case {case} req {id}: decomposition leaks {residual:.3e}s"
+            );
+        }
+        preempting += u64::from(c.metrics.preemptions > 0);
+        migrating += u64::from(c.metrics.migrations > 0);
+    }
+    println!("trace-audit: {preempting}/10 preempting runs, {migrating}/10 migrating runs");
+    // the lockstep (hybrid-barrier) discipline audits too: all-unified
+    // DP>1 closed-loop through the engine wrapper
+    let m = DSV2;
+    let mut eng = SimEngine::new(
+        m,
+        m.variant("gla8"),
+        ServingConfig::with_parallelism(4, 2).with_trace(),
+        DeviceModel::h100_serving(),
+        8,
+    );
+    eng.submit(&generate(
+        LengthDist::RandomRatio { max_prompt: 8192, max_decode: 256, ratio: 0.1 },
+        24,
+        7,
+    ));
+    eng.run();
+    let tracer = eng.take_trace().expect("armed");
+    tracer
+        .audit()
+        .check(&eng.cluster.metrics)
+        .unwrap_or_else(|e| panic!("lockstep trace audit diverged: {e}"));
+    assert_eq!(tracer.audit().e2e.len(), 24);
+}
