@@ -1,0 +1,210 @@
+//! Speculative (draft+verify) serving: accept-rate x verify-width sweep
+//! over GQA-4 and GLA-2 on a shared, deliberately tight KV budget.
+//!
+//! Why GLA should *widen* its lead as the verify width grows (§4/§5 of
+//! the paper): a verify step amortizes the per-step weight streaming and
+//! decode KV reads over `q` query tokens per sequence, so the win from a
+//! verify burst scales with how many sequences the pool lets decode
+//! concurrently. The KV budget here fits exactly 16 GQA-4 request
+//! footprints (2K prompt + 1K decode) but all 24 concurrent GLA-2 ones —
+//! GLA's halved per-token cache turns the same HBM into more verify
+//! lanes, and the concave MoE weight-stream coverage rewards the larger
+//! token batch superlinearly at small `q`.
+//!
+//! What the bench asserts on every run (the recorded contract):
+//! * part 1 — the dead-knob config (`with_spec(1, 1.0, 0.0)`) is
+//!   byte-identical (full metrics struct, `==`) to the spec-off baseline
+//!   for both variants;
+//! * part 2 — at fixed verify width, throughput strictly increases with
+//!   the acceptance rate for both variants; requests/tokens are conserved
+//!   and the verify-token ledger reconciles at every swept point;
+//! * part 3 — the GLA-2 : GQA-4 throughput ratio at q=4 (accept 0.8)
+//!   strictly exceeds the ratio at q=1 (spec off) — speculation is worth
+//!   *more* on the hardware-efficient variant;
+//! * part 4 — speculative runs reproduce bit-identically from the seed.
+//!
+//!     cargo bench --bench spec_decode
+
+use gla_serve::config::{ServingConfig, DSV2};
+use gla_serve::engine::SimEngine;
+use gla_serve::hardware::DeviceModel;
+use gla_serve::metrics::{ServiceMetrics, SimStats};
+use gla_serve::report::{BenchReport, Val};
+use gla_serve::workload::{generate, LengthDist};
+
+const N: usize = 96;
+const SEED: u64 = 42;
+const CONC: usize = 24;
+const TP: usize = 2;
+const PROMPT: usize = 2048;
+const DECODE: usize = 1024;
+/// 10% of a verify step's decode-attention time goes to the draft model
+const DRAFT_COST: f64 = 0.1;
+/// exactly 16 GQA-4 footprints of 3072 tokens at TP2 (61,440 B/token all
+/// layers), but >= 24 GLA-2 footprints (38,400 B/token) — the pool is the
+/// channel through which the cache savings become verify lanes
+const KV_BUDGET: u64 = 3_019_898_880;
+
+fn run(variant: &str, spec: Option<(usize, f64, f64)>) -> (ServiceMetrics, SimStats) {
+    let m = DSV2;
+    let mut serving = ServingConfig::with_parallelism(TP, 1);
+    serving.kv_hbm_budget = KV_BUDGET;
+    if let Some((q, p, f)) = spec {
+        serving = serving.with_spec(q, p, f);
+    }
+    let mut eng = SimEngine::new(
+        m,
+        m.variant(variant),
+        serving,
+        DeviceModel::h100_serving(),
+        CONC,
+    );
+    eng.submit(&generate(LengthDist::Fixed { prompt: PROMPT, decode: DECODE }, N, SEED));
+    eng.run();
+    let stats = eng.sim_stats();
+    (eng.cluster.metrics, stats)
+}
+
+/// Conservation at one swept point: nothing lost, the verify ledger
+/// covers every non-epilogue token.
+fn check_conservation(label: &str, met: &ServiceMetrics, spec_on: bool) {
+    assert_eq!(met.e2e.len(), N, "{label}: lost requests");
+    let want = (N * DECODE) as u64 + met.preemptions;
+    assert_eq!(
+        met.output_tokens, want,
+        "{label}: output tokens diverged from the decode budgets"
+    );
+    if spec_on {
+        let epilogues = N as u64 + met.preemptions;
+        assert_eq!(
+            met.accepted_tokens + epilogues,
+            met.output_tokens,
+            "{label}: verify ledger does not reconcile"
+        );
+        assert!(met.verify_steps > 0, "{label}: speculative run never verified");
+    } else {
+        assert_eq!(met.accepted_tokens, 0, "{label}: spec-off run touched the ledger");
+        assert_eq!(met.verify_steps, 0, "{label}: spec-off run counted verify steps");
+    }
+}
+
+fn main() {
+    let mut report = BenchReport::new("spec_decode");
+    println!(
+        "spec_decode — DSV2 (236B/21B FP8), 2xH100, {PROMPT}/{DECODE} closed loop, \
+         conc {CONC}, n {N}, shared KV budget {:.2} GB",
+        KV_BUDGET as f64 / 1e9
+    );
+
+    println!("\n[1] inertness: verify width 1 == spec off, byte for byte");
+    let mut base: Vec<(&str, ServiceMetrics)> = Vec::new();
+    for variant in ["gqa4", "gla2"] {
+        let (off, off_stats) = run(variant, None);
+        report.push_sim_stats(&format!("{variant}/off"), &off_stats);
+        let (dead, _) = run(variant, Some((1, 1.0, 0.0)));
+        assert_eq!(
+            dead, off,
+            "{variant}: width-1 spec config drifted from the plain decode path"
+        );
+        check_conservation(&format!("{variant}/off"), &off, false);
+        base.push((variant, off));
+    }
+    println!("dead-knob config is byte-identical to spec off for both variants ✓");
+
+    println!("\n[2] accept-rate x verify-width sweep (draft cost {DRAFT_COST})");
+    println!(
+        "{:<6} {:>3} {:>6} {:>10} {:>12} {:>12} {:>12}",
+        "var", "q", "accept", "tok/s", "mean acc", "verify steps", "preempt"
+    );
+    let mut at_q4_p08: Vec<(&str, f64)> = Vec::new();
+    for (variant, off) in &base {
+        println!(
+            "{variant:<6} {:>3} {:>6} {:>10.0} {:>12} {:>12} {:>12}",
+            1,
+            "-",
+            off.throughput(),
+            "-",
+            "-",
+            off.preemptions,
+        );
+        report.push_row(&[
+            ("variant", Val::s(variant)),
+            ("q", Val::I(1)),
+            ("accept_rate", Val::F(1.0)),
+            ("tok_s", Val::F(off.throughput())),
+            ("mean_accepted", Val::F(0.0)),
+        ]);
+        report.push_metrics(&format!("{variant}/q1"), &mut off.clone());
+        for q in [2usize, 4] {
+            let mut prev: Option<f64> = None;
+            for p in [0.2f64, 0.5, 0.8] {
+                let (met, stats) = run(variant, Some((q, p, DRAFT_COST)));
+                let label = format!("{variant}/q{q}@p{p}");
+                check_conservation(&label, &met, true);
+                let tput = met.throughput();
+                println!(
+                    "{variant:<6} {q:>3} {p:>6.2} {tput:>10.0} {:>12.2} {:>12} {:>12}",
+                    met.mean_accepted_per_step(),
+                    met.verify_steps,
+                    met.preemptions,
+                );
+                if let Some(lo) = prev {
+                    assert!(
+                        tput > lo,
+                        "{label}: throughput must strictly rise with the accept \
+                         rate at fixed width ({lo:.0} -> {tput:.0} tok/s)"
+                    );
+                }
+                prev = Some(tput);
+                report.push_row(&[
+                    ("variant", Val::s(variant)),
+                    ("q", Val::I(q as u64)),
+                    ("accept_rate", Val::F(p)),
+                    ("tok_s", Val::F(tput)),
+                    ("mean_accepted", Val::F(met.mean_accepted_per_step())),
+                ]);
+                report.push_metrics(&label, &mut met.clone());
+                report.push_sim_stats(&label, &stats);
+                if q == 4 && p == 0.8 {
+                    at_q4_p08.push((variant, tput));
+                }
+            }
+        }
+    }
+    println!("throughput strictly rises with the accept rate at fixed width ✓");
+
+    println!("\n[3] the GLA edge widens with the verify width");
+    let tput_of = |rows: &[(&str, f64)], v: &str| {
+        rows.iter().find(|(name, _)| *name == v).expect("both variants swept").1
+    };
+    let ratio_q1 = base
+        .iter()
+        .find(|(v, _)| *v == "gla2")
+        .map(|(_, m)| m.throughput())
+        .unwrap()
+        / base
+            .iter()
+            .find(|(v, _)| *v == "gqa4")
+            .map(|(_, m)| m.throughput())
+            .unwrap();
+    let ratio_q4 = tput_of(&at_q4_p08, "gla2") / tput_of(&at_q4_p08, "gqa4");
+    println!("GLA-2 : GQA-4 tok/s ratio — q=1 {ratio_q1:.3}, q=4@0.8 {ratio_q4:.3}");
+    assert!(
+        ratio_q4 > ratio_q1,
+        "speculation must widen GLA's lead: ratio {ratio_q1:.3} at q=1 vs \
+         {ratio_q4:.3} at q=4"
+    );
+    report.push_row(&[
+        ("part", Val::I(3)),
+        ("ratio_q1", Val::F(ratio_q1)),
+        ("ratio_q4", Val::F(ratio_q4)),
+    ]);
+
+    println!("\n[4] determinism: gla2 q=4 accept 0.8 run twice (seed {SEED})");
+    let (x, _) = run("gla2", Some((4, 0.8, DRAFT_COST)));
+    let (y, _) = run("gla2", Some((4, 0.8, DRAFT_COST)));
+    assert_eq!(x, y, "speculative schedule drifted between identical runs");
+    println!("same seed reproduced bit-identically ✓");
+
+    report.emit();
+}

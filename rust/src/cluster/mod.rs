@@ -246,6 +246,12 @@ impl Cluster {
                 if serving.chunk_align {
                     sched = sched.with_chunk_alignment();
                 }
+                if let Some(sp) = serving.spec {
+                    // width 1 arms nothing observable: the scheduler's
+                    // emission/packing expressions reduce to the legacy
+                    // ones exactly (the inertness suite pins it)
+                    sched = sched.with_spec_decode(sp.verify_width, sp.accept_rate);
+                }
                 ClusterReplica::new(role, sched)
             })
             .collect();
@@ -478,6 +484,16 @@ impl Cluster {
         true
     }
 
+    /// Effective verify width q of this cluster's decode steps (1 = off).
+    fn spec_width(&self) -> usize {
+        self.serving.spec_width()
+    }
+
+    /// Draft-model overhead fraction (0.0 unless speculation is armed).
+    fn draft_cost_frac(&self) -> f64 {
+        self.serving.spec.map(|s| s.draft_cost_frac).unwrap_or(0.0)
+    }
+
     /// Per-replica (attention + TP-comm) time of one unit of work, plus
     /// its new-token count (the lockstep barrier shares the FFN side).
     fn attn_part(&self, ri: usize, work: &Work) -> (f64, usize) {
@@ -496,14 +512,29 @@ impl Cluster {
                 (t, *chunk)
             }
             Work::DecodeBatch { idxs } => {
+                // speculative verify pricing: the KV-cache read (the
+                // memory-bound side) is paid once regardless of q, while
+                // attention FLOPs, the TP collective and (in `duration`)
+                // the FFN pass scale with the q query tokens — the
+                // roofline climb of §3 that the paper's q>1 kernel
+                // result banks on. q == 1 is the legacy expression.
+                let q = self.spec_width();
                 let lens: Vec<usize> = idxs.iter().map(|&i| seqs[i].ctx_len()).collect();
-                let t = self
+                let mut attn = self
                     .device
-                    .attn_decode_time(&self.model, &self.variant, &lens, 1, tp)
-                    + self
-                        .coll
-                        .tp_step_time(self.model.n_layers, idxs.len(), self.model.d_model, 2, tp);
-                (t, idxs.len())
+                    .attn_decode_time(&self.model, &self.variant, &lens, q, tp);
+                if q > 1 {
+                    attn *= 1.0 + self.draft_cost_frac();
+                }
+                let t = attn
+                    + self.coll.tp_step_time(
+                        self.model.n_layers,
+                        idxs.len() * q,
+                        self.model.d_model,
+                        2,
+                        tp,
+                    );
+                (t, idxs.len() * q)
             }
             Work::Mixed { decode, prefill } => {
                 // fused-step pricing: the prefill tile is compute-bound
@@ -523,15 +554,23 @@ impl Cluster {
                             .prefill_attn_time(&self.model, &self.variant, chunk, ctx, tp)
                     })
                     .sum();
+                let q = self.spec_width();
                 let decode_t = if decode.is_empty() {
                     0.0
                 } else {
                     let lens: Vec<usize> =
                         decode.iter().map(|&i| seqs[i].ctx_len()).collect();
-                    self.device
-                        .attn_decode_time(&self.model, &self.variant, &lens, 1, tp)
+                    let mut t = self
+                        .device
+                        .attn_decode_time(&self.model, &self.variant, &lens, q, tp);
+                    if q > 1 {
+                        t *= 1.0 + self.draft_cost_frac();
+                    }
+                    t
                 };
-                let tokens = work.new_tokens();
+                // the fused step's verify half computes q query tokens
+                // per decode sequence through the collective and FFN
+                let tokens = work.prefill_tokens() + work.decode_tokens() * q;
                 let t = prefill_t.max(decode_t)
                     + self
                         .coll
@@ -562,23 +601,48 @@ impl Cluster {
     /// cross-checks the scheduler's own accounting (preempted sequences
     /// re-prefill and re-emit, which Σ `decode_len` would miss).
     fn trace_step_end(&mut self, ri: usize, work: &Work, now: f64) {
-        let emitted = {
-            let seqs = self.replicas[ri].sched.seqs();
+        let q = self.spec_width();
+        let (emitted, verify_seqs, verify_emitted) = {
+            let sched = &self.replicas[ri].sched;
+            let seqs = sched.seqs();
             let completes = |idx: usize, chunk: usize| match seqs[idx].phase {
                 Phase::Prefill { done } => done + chunk >= seqs[idx].req.prompt_len,
                 _ => false,
             };
+            // pre-step emission per decoding sequence: 1 in plain decode,
+            // the deterministic acceptance sample under speculation —
+            // `decode_emission` is pure in (request id, produced), so the
+            // tracer sees exactly what `complete_decode` will account
+            let decode_emit =
+                |idxs: &[usize]| idxs.iter().map(|&i| sched.decode_emission(i)).sum::<usize>();
             match work {
                 Work::Idle => return,
-                Work::PrefillChunk { idx, chunk } => usize::from(completes(*idx, *chunk)),
-                Work::DecodeBatch { idxs } => idxs.len(),
+                Work::PrefillChunk { idx, chunk } => {
+                    (usize::from(completes(*idx, *chunk)), 0, 0)
+                }
+                Work::DecodeBatch { idxs } => {
+                    let d = decode_emit(idxs);
+                    if q > 1 {
+                        (d, idxs.len(), d)
+                    } else {
+                        (d, 0, 0)
+                    }
+                }
                 Work::Mixed { decode, prefill } => {
-                    decode.len()
-                        + prefill.iter().filter(|&&(idx, c)| completes(idx, c)).count()
+                    let d = decode_emit(decode);
+                    let first = prefill.iter().filter(|&&(idx, c)| completes(idx, c)).count();
+                    if q > 1 {
+                        (d + first, decode.len(), d)
+                    } else {
+                        (d + first, 0, 0)
+                    }
                 }
             }
         };
-        self.tracer.as_mut().expect("caller checked is_some").step_end(ri, now, emitted);
+        self.tracer
+            .as_mut()
+            .expect("caller checked is_some")
+            .step_end(ri, now, emitted, verify_seqs, verify_emitted);
     }
 
     /// Apply the outcome of one unit of work at virtual time `now`, then
@@ -945,8 +1009,9 @@ impl Cluster {
                     continue;
                 }
                 let d = self.duration(ri, &work);
+                let q = self.serving.spec_width();
                 if let Some(tr) = self.tracer.as_mut() {
-                    tr.step_start(ri, self.clock, &work);
+                    tr.step_start(ri, self.clock, &work, q);
                 }
                 self.replicas[ri].in_flight = Some((work, self.clock + d));
             }
@@ -1090,8 +1155,9 @@ impl Cluster {
                 }
                 let d = self.duration(ri, &work);
                 let done_t = self.clock + d;
+                let q = self.serving.spec_width();
                 if let Some(tr) = self.tracer.as_mut() {
-                    tr.step_start(ri, self.clock, &work);
+                    tr.step_start(ri, self.clock, &work, q);
                 }
                 self.replicas[ri].in_flight = Some((work, done_t));
                 self.calendar.push(Reverse(CalEvent {
@@ -1225,11 +1291,12 @@ impl Cluster {
             );
             let step = attn_max + ffn + gather + self.device.step_overhead;
             self.sim.events += 1; // one barrier step == one clock stop
+            let q = self.serving.spec_width();
             if let Some(tr) = self.tracer.as_mut() {
                 // every replica's span covers the whole barrier step
                 // (`Work::Idle` records nothing, matching `apply`)
                 for (ri, w) in works.iter().enumerate() {
-                    tr.step_start(ri, self.clock, w);
+                    tr.step_start(ri, self.clock, w, q);
                 }
             }
             self.clock += step;

@@ -30,6 +30,32 @@ pub enum SimLoop {
     MinScan,
 }
 
+/// Draft+verify speculative decoding knobs (the q>1 regime of the
+/// paper's Fig. 4: the optimized GLA kernel is up to 2× faster than
+/// FlashMLA when the query length exceeds one). Each decode step of a
+/// speculative run is a *verify* step: a draft model proposes
+/// `verify_width - 1` tokens, the target verifies all of them plus one
+/// fresh position in a single query-length-q attention call, and the
+/// step emits between 1 token (first draft rejected) and `verify_width`
+/// tokens (all drafts accepted + the bonus token from the verifier's
+/// own head). KV-cache reads amortize over the q query tokens while
+/// attention FLOPs and the FFN pass scale with q — exactly the
+/// arithmetic-intensity lever of §3.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpecConfig {
+    /// verify width q: query tokens per verify step (1 == plain decode;
+    /// the whole mode is structurally inert at width 1).
+    pub verify_width: usize,
+    /// per-position draft acceptance probability p. Acceptance is
+    /// sampled deterministically per (request, token ordinal) — see
+    /// `workload::spec_accepted` — so emitted streams are reproducible
+    /// and schedule-independent.
+    pub accept_rate: f64,
+    /// draft-model overhead as a fraction of the verify step's decode
+    /// attention time (0.0 == free drafts).
+    pub draft_cost_frac: f64,
+}
+
 /// Transformer shapes relevant to the performance models.
 #[derive(Debug, Clone, Copy)]
 pub struct ModelConfig {
@@ -197,6 +223,12 @@ pub struct ServingConfig {
     /// so a traced run is bit-identical to an untraced one (the property
     /// suite pins that inertness).
     pub trace: bool,
+    /// speculative draft+verify decoding (see [`SpecConfig`]). `None`
+    /// (the default) and `Some` with `verify_width <= 1` are both
+    /// bit-identical to plain decode — the property suite pins that
+    /// inertness, including the dead knobs (`accept_rate`,
+    /// `draft_cost_frac` are never read at width 1).
+    pub spec: Option<SpecConfig>,
 }
 
 impl Default for ServingConfig {
@@ -219,6 +251,7 @@ impl Default for ServingConfig {
             stream_migration: false,
             sim_loop: SimLoop::Calendar,
             trace: false,
+            spec: None,
         }
     }
 }
@@ -287,6 +320,29 @@ impl ServingConfig {
     pub fn with_trace(mut self) -> Self {
         self.trace = true;
         self
+    }
+
+    /// Enable speculative draft+verify decoding with verify width q and
+    /// per-position acceptance probability p. Width is floored at 1 and
+    /// the rate clamped to [0, 1]; width 1 is bit-identical to plain
+    /// decode regardless of the other knobs.
+    pub fn with_spec(
+        mut self,
+        verify_width: usize,
+        accept_rate: f64,
+        draft_cost_frac: f64,
+    ) -> Self {
+        self.spec = Some(SpecConfig {
+            verify_width: verify_width.max(1),
+            accept_rate: accept_rate.clamp(0.0, 1.0),
+            draft_cost_frac: draft_cost_frac.max(0.0),
+        });
+        self
+    }
+
+    /// Effective verify width: q of the armed [`SpecConfig`], else 1.
+    pub fn spec_width(&self) -> usize {
+        self.spec.map(|s| s.verify_width.max(1)).unwrap_or(1)
     }
 
     pub fn total_gpus(&self) -> usize {
@@ -429,6 +485,19 @@ mod tests {
             c.clone().with_sim_loop(SimLoop::MinScan).sim_loop,
             SimLoop::MinScan
         );
+        assert!(c.spec.is_none(), "speculative decoding must default off");
+        assert_eq!(c.spec_width(), 1);
+        let sp = c.clone().with_spec(4, 0.8, 0.1);
+        assert_eq!(
+            sp.spec,
+            Some(SpecConfig { verify_width: 4, accept_rate: 0.8, draft_cost_frac: 0.1 })
+        );
+        assert_eq!(sp.spec_width(), 4);
+        // the builder sanitizes degenerate knobs
+        let sane = c.clone().with_spec(0, 7.0, -1.0).spec.unwrap();
+        assert_eq!(sane.verify_width, 1);
+        assert_eq!(sane.accept_rate, 1.0);
+        assert_eq!(sane.draft_cost_frac, 0.0);
         let fused = c.with_fusion().with_step_budget(4096);
         assert!(fused.fusion);
         assert_eq!(fused.max_step_tokens, 4096);

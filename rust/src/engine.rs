@@ -371,6 +371,46 @@ mod tests {
     }
 
     #[test]
+    fn spec_decode_shortens_runs_and_conserves_tokens() {
+        // draft+verify at width 4 / accept 0.8 retires the same tokens in
+        // fewer verify steps: every request still emits exactly decode_len,
+        // the verify counters reconcile with the epilogue tokens, and the
+        // run gets strictly shorter despite the 10% draft overhead
+        let m = DSV2;
+        let (n, decode) = (24usize, 256usize);
+        let reqs = generate(LengthDist::Fixed { prompt: 2048, decode }, n, 11);
+        let run = |spec: bool| {
+            let mut serving = ServingConfig::with_parallelism(2, 1);
+            if spec {
+                serving = serving.with_spec(4, 0.8, 0.1);
+            }
+            run_benchmark(m, m.variant("gla2"), serving, DeviceModel::h100_serving(), &reqs, 8)
+        };
+        let off = run(false);
+        let on = run(true);
+        let again = run(true);
+        assert_eq!(on, again, "speculative runs must reproduce bit-identically");
+        assert_eq!(off.e2e.len(), n);
+        assert_eq!(on.e2e.len(), n);
+        assert_eq!(off.output_tokens, (n * decode) as u64);
+        assert_eq!(on.output_tokens, off.output_tokens, "spec changes when, not how many");
+        assert_eq!(off.accepted_tokens, 0);
+        assert_eq!(off.verify_steps, 0);
+        assert_eq!(on.preemptions, 0, "roomy pool: no evictions to confound the ledger");
+        // every admission emits one prefill-epilogue token; the rest come
+        // from verify bursts
+        assert_eq!(on.accepted_tokens + n as u64, on.output_tokens);
+        let mean = on.mean_accepted_per_step();
+        assert!(mean > 1.0 && mean <= 4.0, "mean accepted/step {mean:.3} out of [1, q]");
+        assert!(
+            on.duration < off.duration,
+            "verify bursts must shorten the run: {:.2}s spec vs {:.2}s plain",
+            on.duration,
+            off.duration
+        );
+    }
+
+    #[test]
     fn open_loop_drive_completes_and_is_rate_sensitive() {
         let m = DSV2;
         let dist = LengthDist::Fixed { prompt: 8192, decode: 512 };

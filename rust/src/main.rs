@@ -30,6 +30,15 @@
 //!                                (token-budget batcher) vs the alternating
 //!                                baseline under open-loop Poisson arrivals:
 //!                                ITL p50/p99, TTFT, throughput
+//!   spec   [variant] [q] [rate] [conc]
+//!                                speculative (draft+verify) serving mode:
+//!                                closed-loop TP2 run with verify width
+//!                                `q` at acceptance rate `rate` vs the
+//!                                plain decode baseline; gated on the
+//!                                conservation ledger (width-1 runs must
+//!                                be bit-identical to spec off, token
+//!                                totals must reconcile with the verify
+//!                                counters) — exits 1 on any violation
 //!   trace  [rate] [n] [dir]      traced GQA-4 vs GLA-2 run on a 1P+2D
 //!                                disaggregated cluster: writes Chrome-
 //!                                trace `.trace.json` files (Perfetto-
@@ -407,6 +416,91 @@ fn main() {
                 print_sim_stats(&stats);
             }
         }
+        "spec" => {
+            let variant = args.get(2).cloned().unwrap_or_else(|| "gla2".into());
+            let q: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(4);
+            let rate: f64 = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(0.8);
+            if !(0.0..=1.0).contains(&rate) {
+                eprintln!("accept rate must be in [0, 1], got {rate}");
+                std::process::exit(2);
+            }
+            let conc: usize = args.get(5).and_then(|s| s.parse().ok()).unwrap_or(24);
+            let m = DSV2;
+            let (n, decode) = (96usize, 512usize);
+            let reqs = generate(LengthDist::Fixed { prompt: 2048, decode }, n, 42);
+            let run = |spec: Option<(usize, f64, f64)>| {
+                let mut serving = ServingConfig::with_parallelism(2, 1);
+                if let Some((w, p, f)) = spec {
+                    serving = serving.with_spec(w, p, f);
+                }
+                let mut eng = SimEngine::new(
+                    m,
+                    m.variant(&variant),
+                    serving,
+                    DeviceModel::h100_serving(),
+                    conc,
+                );
+                eng.submit(&reqs);
+                eng.run();
+                let stats = eng.sim_stats();
+                (eng.cluster.metrics, stats)
+            };
+            let (base, base_stats) = run(None);
+            // gate 1: width 1 makes every spec knob dead — bit-identical
+            let (dead, _) = run(Some((1, 1.0, 0.0)));
+            if dead != base {
+                eprintln!(
+                    "CONSERVATION FAILED: verify width 1 must be bit-identical to spec off"
+                );
+                std::process::exit(1);
+            }
+            let (spec, spec_stats) = run(Some((q, rate, 0.1)));
+            // gate 2: speculation changes when tokens appear, never how
+            // many — every request still emits exactly its decode budget
+            // (plus one fresh epilogue per preemption re-prefill)
+            for (label, met) in [("spec off", &base), ("spec on", &spec)] {
+                let want = (n * decode) as u64 + met.preemptions;
+                if met.output_tokens != want {
+                    eprintln!(
+                        "CONSERVATION FAILED ({label}): {} output tokens, expected {want}",
+                        met.output_tokens
+                    );
+                    std::process::exit(1);
+                }
+            }
+            // gate 3: the verify ledger covers everything but epilogues
+            let epilogues = n as u64 + spec.preemptions;
+            if spec.accepted_tokens + epilogues != spec.output_tokens {
+                eprintln!(
+                    "CONSERVATION FAILED: accepted {} + epilogues {epilogues} != output {}",
+                    spec.accepted_tokens, spec.output_tokens
+                );
+                std::process::exit(1);
+            }
+            let expect = if rate >= 1.0 {
+                q as f64
+            } else {
+                (1.0 - rate.powi(q as i32)) / (1.0 - rate)
+            };
+            println!(
+                "{variant} TP2 conc{conc}, 2K/{decode} closed loop, verify width {q} @ \
+                 accept {rate:.2} (draft cost 10%):"
+            );
+            println!("  spec off: {:.0} tok/s", base.throughput());
+            print_sim_stats(&base_stats);
+            println!(
+                "  spec on : {:.0} tok/s ({:.2}x) | mean accepted/step {:.2} \
+                 (E[a] {expect:.2}) | {} verify steps",
+                spec.throughput(),
+                spec.throughput() / base.throughput().max(1e-12),
+                spec.mean_accepted_per_step(),
+                spec.verify_steps,
+            );
+            print_sim_stats(&spec_stats);
+            println!(
+                "  conservation OK — width-1 bit-identity, token totals, verify ledger"
+            );
+        }
         "trace" => {
             let rate: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(2.0);
             if rate <= 0.0 || !rate.is_finite() {
@@ -519,7 +613,7 @@ fn main() {
         other => {
             eprintln!(
                 "unknown command `{other}` (try: info serve train sim qps disagg prefix \
-                 fusion trace)"
+                 fusion spec trace)"
             );
             std::process::exit(2);
         }

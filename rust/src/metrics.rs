@@ -186,6 +186,15 @@ pub struct ServiceMetrics {
     /// distinct from `prefix_lookups`, which counts admissions that
     /// *consulted* the cache (memoized or not).
     pub admission_probes: u64,
+    /// speculative decoding: output tokens emitted by verify steps (the
+    /// always-emitted verified token + accepted drafts + bonus tokens).
+    /// 0 unless the replica runs with an effective verify width > 1 —
+    /// plain decode never touches it, which keeps spec-off runs
+    /// bit-identical under the derived `PartialEq`.
+    pub accepted_tokens: u64,
+    /// speculative decoding: verify steps completed (one per decoding
+    /// sequence per formed step at verify width > 1); 0 otherwise
+    pub verify_steps: u64,
 }
 
 impl ServiceMetrics {
@@ -194,6 +203,18 @@ impl ServiceMetrics {
             0.0
         } else {
             self.output_tokens as f64 / self.duration
+        }
+    }
+
+    /// Mean output tokens per verify step — the speculative-decoding
+    /// speedup factor, in [1, verify_width] and approaching
+    /// (1 - p^q) / (1 - p) for acceptance rate p (0 when the run never
+    /// took a verify step).
+    pub fn mean_accepted_per_step(&self) -> f64 {
+        if self.verify_steps == 0 {
+            0.0
+        } else {
+            self.accepted_tokens as f64 / self.verify_steps as f64
         }
     }
 
@@ -307,6 +328,14 @@ mod tests {
         let s = SimStats { events: 1000, wall_s: 0.5, requests: 10 };
         assert_eq!(s.events_per_sec(), 2000.0);
         assert_eq!(s.requests_per_sec(), 20.0);
+    }
+
+    #[test]
+    fn mean_accepted_guards_zero_verify_steps() {
+        let m = ServiceMetrics::default();
+        assert_eq!(m.mean_accepted_per_step(), 0.0);
+        let m = ServiceMetrics { accepted_tokens: 30, verify_steps: 12, ..Default::default() };
+        assert_eq!(m.mean_accepted_per_step(), 2.5);
     }
 
     #[test]

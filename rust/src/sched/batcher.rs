@@ -159,30 +159,49 @@ impl Scheduler {
     }
 
     /// The fused token-budget planner: the decode batch packs first (each
-    /// decoding sequence contributes one token), then prefill chunks fill
-    /// the remaining budget in policy order, each clamped to the budget
+    /// decoding sequence contributes one token — `spec_q` query tokens
+    /// under speculative decoding), then prefill chunks fill the
+    /// remaining budget in policy order, each clamped to the budget
     /// and admitted only while its fresh pages fit the free list
     /// *cumulatively* — several chunks planned into one step must not
     /// overdraw the pool between them.
     fn plan_fused(&self) -> StepPlan {
+        // a verify step computes q query tokens per decode sequence, so
+        // the batch clamps to budget/q; the .max(1) keeps a single
+        // sequence stepping when q alone exceeds the budget (livelock
+        // guard — the same rule that lets one oversized prefill chunk
+        // through). At q == 1 this is exactly the legacy clamp.
+        let decode_take = self.max_batch.min((self.max_step_tokens / self.spec_q).max(1));
         let decode: Vec<usize> = self
             .seqs
             .iter()
             .enumerate()
             .filter(|(_, s)| matches!(s.phase, Phase::Decode { .. }))
             .map(|(i, _)| i)
-            .take(self.max_batch.min(self.max_step_tokens))
+            .take(decode_take)
             .collect();
-        let mut tokens_left = self.max_step_tokens - decode.len();
+        let mut tokens_left = self
+            .max_step_tokens
+            .saturating_sub(decode.len() * self.spec_q);
         // reserve the decode half's own page needs before budgeting
         // prefill: a decoding sequence sitting exactly at a page boundary
-        // takes a fresh page for its next token (the same accounting
-        // preempt_for_decode frees for), and handing that page to a
+        // takes a fresh page for its next token(s) — up to min(q,
+        // remaining budget) of them per verify step — the same accounting
+        // preempt_for_decode frees for, and handing those pages to a
         // prefill chunk in the same step would make the decode-side grow
         // fail silently under deliberate overcommit
         let decode_new_pages: usize = decode
             .iter()
-            .map(|&i| self.pool.pages_to_grow(self.seqs[i].req.id as u64, 1))
+            .map(|&i| {
+                let s = &self.seqs[i];
+                let grow = match s.phase {
+                    Phase::Decode { produced } => self
+                        .spec_q
+                        .min(s.req.decode_len.saturating_sub(produced).max(1)),
+                    _ => 1,
+                };
+                self.pool.pages_to_grow(s.req.id as u64, grow)
+            })
             .sum();
         let mut pages_left = self.pool.pages_free().saturating_sub(decode_new_pages);
         // candidate + fits lists live in reusable scratch (hot path);
@@ -299,6 +318,33 @@ mod tests {
         match s.plan() {
             Work::DecodeBatch { idxs } => assert_eq!(idxs, vec![0, 1]),
             w => panic!("expected a clamped decode batch, got {w:?}"),
+        }
+    }
+
+    #[test]
+    fn fused_decode_batch_accounts_verify_width_against_the_budget() {
+        let mut m = ServiceMetrics::default();
+        // 4 decoding seqs, budget 8, q = 4: only 2 verify steps fit the
+        // budget (2 × 4 query tokens), prefill gets nothing
+        let mut s = fused(64, 4, 8, 8).with_spec_decode(4, 1.0);
+        for id in 1..=4 {
+            s.admit(Request::new(id, 4, 8), 0.0, 0.0, &mut m);
+        }
+        for i in 0..4 {
+            let _ = s.complete_prefill(i, 4, 1.0, &mut m);
+        }
+        match s.plan() {
+            Work::DecodeBatch { idxs } => assert_eq!(idxs, vec![0, 1]),
+            w => panic!("expected a q-clamped decode batch, got {w:?}"),
+        }
+        // q exceeding the whole budget still steps one sequence — the
+        // livelock guard, mirroring the oversized-prefill rule
+        let mut t = fused(64, 4, 8, 2).with_spec_decode(4, 1.0);
+        t.admit(Request::new(9, 4, 8), 0.0, 0.0, &mut m);
+        let _ = t.complete_prefill(0, 4, 1.0, &mut m);
+        match t.plan() {
+            Work::DecodeBatch { idxs } => assert_eq!(idxs, vec![0]),
+            w => panic!("expected the livelock guard, got {w:?}"),
         }
     }
 

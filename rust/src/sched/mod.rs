@@ -31,7 +31,7 @@ use std::cell::{Cell, RefCell};
 
 use crate::kvcache::{PageId, PagePool, RadixIndex, SeqId};
 use crate::metrics::ServiceMetrics;
-use crate::workload::Request;
+use crate::workload::{spec_accepted, Request};
 
 /// Where a sequence is in its lifecycle. This is the single definition in
 /// the codebase — `engine`, `server` and `cluster` all consume it from here.
@@ -162,6 +162,15 @@ pub struct Scheduler {
     /// shave doesn't strand a straggler tail chunk. Off = the exact
     /// PR 4 budget math, bit for bit.
     pub(crate) align_chunks: bool,
+    /// speculative verify width q ([`Scheduler::with_spec_decode`]): each
+    /// decode step is a draft+verify step emitting 1..=q tokens per
+    /// sequence. 1 = plain decode, bit for bit (the acceptance sampler is
+    /// never consulted and the q-aware packing reduces to the legacy
+    /// expressions).
+    pub(crate) spec_q: usize,
+    /// per-position draft acceptance probability; only read when
+    /// `spec_q > 1`
+    pub(crate) accept_rate: f64,
     /// destination-side reservations for in-flight streamed migrations:
     /// `(seq id, full-lifetime footprint tokens)` promised to caches that
     /// have not landed yet. Counted by [`Scheduler::fits_residual`] next
@@ -210,6 +219,8 @@ impl Scheduler {
             fusion: false,
             max_step_tokens: 0,
             align_chunks: false,
+            spec_q: 1,
+            accept_rate: 1.0,
             reserved: Vec::new(),
             seq_epoch: 0,
             probes: Cell::new(0),
@@ -233,6 +244,43 @@ impl Scheduler {
 
     pub fn fusion_enabled(&self) -> bool {
         self.fusion
+    }
+
+    /// Enable speculative draft+verify decoding: every decode step
+    /// becomes a verify step of `verify_width` query tokens per
+    /// sequence, emitting 1..=`verify_width` output tokens according to
+    /// the deterministic acceptance sampler
+    /// ([`crate::workload::spec_accepted`] keyed by request id and token
+    /// ordinal, so emitted streams are schedule-independent). Width 1 is
+    /// the plain decode path, bit for bit, regardless of `accept_rate`.
+    pub fn with_spec_decode(mut self, verify_width: usize, accept_rate: f64) -> Self {
+        self.spec_q = verify_width.max(1);
+        self.accept_rate = accept_rate.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Effective verify width of this scheduler's decode steps.
+    pub fn spec_width(&self) -> usize {
+        self.spec_q
+    }
+
+    /// Tokens the sequence at `idx` will emit at its next decode step:
+    /// always 1 in plain decode; under speculative decoding the sampled
+    /// acceptance count, clamped so a request never exceeds its decode
+    /// budget. Pure in the scheduler state — the cluster's tracer calls
+    /// it before the step completes and [`Scheduler::complete_decode`]
+    /// after, and both must see the same number.
+    pub fn decode_emission(&self, idx: usize) -> usize {
+        if self.spec_q <= 1 {
+            return 1;
+        }
+        let s = &self.seqs[idx];
+        let produced = match s.phase {
+            Phase::Decode { produced } => produced,
+            p => unreachable!("decode emission for a sequence in {p:?}"),
+        };
+        let remaining = s.req.decode_len.saturating_sub(produced).max(1);
+        spec_accepted(s.req.id, produced, self.spec_q, self.accept_rate).min(remaining)
     }
 
     /// Enable decode-aware chunk alignment in the fused planner: a
@@ -501,9 +549,16 @@ impl Scheduler {
     }
 
     /// Account one decode step for the sequences at `idxs` at time `now`:
-    /// each grows its cache by the generated token, records ITL, and
+    /// each grows its cache by the generated token(s), records ITL, and
     /// retires when its decode budget is spent. Finished sequences are
     /// released from the pool and returned (metrics already recorded).
+    ///
+    /// Under speculative decoding (`spec_q > 1`) the step is a verify
+    /// step: each sequence emits [`Scheduler::decode_emission`] tokens
+    /// (1..=q, budget-clamped), its cache grows by exactly that count,
+    /// and the `accepted_tokens`/`verify_steps` counters advance. ITL
+    /// records one sample per verify step per sequence — accepted tokens
+    /// land as a burst at the step boundary.
     ///
     /// If the pool is exhausted a token still computes (activations) but
     /// the cache cannot grow — finish-at-budget policy, the engine must
@@ -517,20 +572,27 @@ impl Scheduler {
         self.prefer_decode = false;
         let mut finished_idx: Vec<usize> = Vec::new();
         for &i in idxs {
+            let emit = self.decode_emission(i);
             let seq_id = self.seqs[i].req.id as u64;
-            let _grew = self.pool.grow(seq_id, 1);
+            let _grew = self.pool.grow(seq_id, emit);
             let s = &mut self.seqs[i];
             let produced = match s.phase {
-                Phase::Decode { produced } => produced + 1,
+                Phase::Decode { produced } => produced + emit,
                 _ => unreachable!("decode step on non-decoding seq"),
             };
             metrics.itl.record(now - s.last_token_t);
             s.last_token_t = now;
-            metrics.output_tokens += 1;
+            metrics.output_tokens += emit as u64;
+            if self.spec_q > 1 {
+                metrics.accepted_tokens += emit as u64;
+                metrics.verify_steps += 1;
+            }
+            // stamped even on the retiring step, so a FinishedSeq carries
+            // its exact final emission count (the conservation property
+            // asserts produced == decode_len there)
+            s.phase = Phase::Decode { produced };
             if produced >= s.req.decode_len {
                 finished_idx.push(i);
-            } else {
-                s.phase = Phase::Decode { produced };
             }
         }
         // retire finished sequences (release pages, record metrics);
@@ -544,24 +606,43 @@ impl Scheduler {
     }
 
     /// Pool pressure relief before a decode step: the next step appends one
-    /// token per decoding sequence, and sequences sitting exactly at a page
-    /// boundary need a fresh page. While the pool cannot supply them, evict
-    /// the youngest decoding sequence (vLLM-style preemption; it will
-    /// re-prefill from scratch). Returns the evicted requests with their
-    /// original send times so the caller can requeue them at the front.
+    /// token per decoding sequence (up to `spec_q` under speculative
+    /// decoding), and sequences sitting exactly at a page boundary need a
+    /// fresh page. While the pool cannot supply them, evict the youngest
+    /// decoding sequence (vLLM-style preemption; it will re-prefill from
+    /// scratch). Returns the evicted requests with their original send
+    /// times so the caller can requeue them at the front.
     pub fn preempt_for_decode(&mut self, metrics: &mut ServiceMetrics) -> Vec<(Request, f64)> {
         let mut evicted = Vec::new();
         loop {
             let ps = self.pool.page_size;
-            let new_pages_needed = self
-                .seqs
-                .iter()
-                .filter(|s| s.is_decoding())
-                .filter(|s| {
-                    let stored = self.pool.len_of(s.req.id as u64);
-                    stored > 0 && stored % ps == 0
-                })
-                .count();
+            let new_pages_needed = if self.spec_q > 1 {
+                // worst-case growth: a verify step may append up to
+                // min(q, remaining budget) tokens per sequence
+                self.seqs
+                    .iter()
+                    .filter(|s| s.is_decoding())
+                    .map(|s| {
+                        let produced = match s.phase {
+                            Phase::Decode { produced } => produced,
+                            _ => 0,
+                        };
+                        let grow = self
+                            .spec_q
+                            .min(s.req.decode_len.saturating_sub(produced).max(1));
+                        self.pool.pages_to_grow(s.req.id as u64, grow)
+                    })
+                    .sum()
+            } else {
+                self.seqs
+                    .iter()
+                    .filter(|s| s.is_decoding())
+                    .filter(|s| {
+                        let stored = self.pool.len_of(s.req.id as u64);
+                        stored > 0 && stored % ps == 0
+                    })
+                    .count()
+            };
             let n_decoding = self.seqs.iter().filter(|s| s.is_decoding()).count();
             if new_pages_needed <= self.pool.pages_free() || n_decoding <= 1 {
                 return evicted;
@@ -1141,6 +1222,52 @@ mod tests {
         let e0 = s.epoch();
         s.reserve_import(&Request::new(2, 8, 2));
         assert_ne!(s.epoch(), e0, "a new promise must move the epoch");
+    }
+
+    #[test]
+    fn verify_steps_emit_bursts_and_clamp_at_the_budget() {
+        let mut m = ServiceMetrics::default();
+        let mut s = sched(8, 16, 32).with_spec_decode(4, 1.0);
+        s.admit(Request::new(1, 16, 6), 0.0, 0.0, &mut m);
+        let _ = s.complete_prefill(0, 16, 1.0, &mut m); // epilogue token
+        assert_eq!(m.output_tokens, 1);
+        assert_eq!(m.verify_steps, 0, "the epilogue is not a verify step");
+        // full acceptance: the verify step emits q = 4 tokens as a burst
+        assert_eq!(s.decode_emission(0), 4);
+        assert!(s.complete_decode(&[0], 2.0, &mut m).is_empty());
+        assert_eq!(s.seqs()[0].phase, Phase::Decode { produced: 5 });
+        assert_eq!(m.output_tokens, 5);
+        assert_eq!(m.accepted_tokens, 4);
+        assert_eq!(m.verify_steps, 1);
+        assert_eq!(m.itl.len(), 1, "one ITL sample per verify step");
+        // the final step clamps to the single remaining budget token
+        assert_eq!(s.decode_emission(0), 1);
+        let fin = s.complete_decode(&[0], 3.0, &mut m);
+        assert_eq!(fin.len(), 1);
+        assert_eq!(fin[0].state.phase, Phase::Decode { produced: 6 });
+        assert_eq!(m.output_tokens, 6, "exactly decode_len, never beyond");
+        assert_eq!(m.accepted_tokens, 5);
+        assert_eq!(m.verify_steps, 2);
+        assert!((m.mean_accepted_per_step() - 2.5).abs() < 1e-12);
+        assert_eq!(s.pool().pages_free(), s.pool().pages_total());
+        s.pool().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn spec_width_one_is_plain_decode() {
+        // the dead-knob inertness at the scheduler level: width 1 never
+        // consults the sampler and never touches the spec counters
+        let mut m = ServiceMetrics::default();
+        let mut s = sched(8, 16, 32).with_spec_decode(1, 0.37);
+        s.admit(Request::new(1, 16, 3), 0.0, 0.0, &mut m);
+        let _ = s.complete_prefill(0, 16, 1.0, &mut m);
+        assert_eq!(s.decode_emission(0), 1);
+        s.complete_decode(&[0], 2.0, &mut m);
+        let fin = s.complete_decode(&[0], 3.0, &mut m);
+        assert_eq!(fin.len(), 1);
+        assert_eq!(m.output_tokens, 3);
+        assert_eq!(m.accepted_tokens, 0);
+        assert_eq!(m.verify_steps, 0);
     }
 
     #[test]

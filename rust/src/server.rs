@@ -83,6 +83,16 @@ pub trait StepModel {
         tokens: &[i32],
         lens: &[i32],
     ) -> EngineResult<(HostTensor, HostTensor, HostTensor)>;
+
+    /// Draft proposal for the token that will follow `last` — the
+    /// stand-in draft model of the speculative serving mode
+    /// ([`RealEngine::speculative`]). The default mirrors the toy draft
+    /// of `examples/speculative_decode.rs`; backends with a real draft
+    /// model override it. Must be pure: the engine calls it before the
+    /// verify pass and compares against the verified emission.
+    fn draft_token(&self, last: i32) -> i32 {
+        (last + 1).rem_euclid(self.vocab().max(1) as i32)
+    }
 }
 
 /// Copy batch-row `src_b` of `src` into row `dst_b` of `dst` for a cache
@@ -131,6 +141,14 @@ pub struct RealEngine<M: StepModel> {
     /// live counterpart of the simulator's alternating batcher — kept so
     /// the fused-vs-alternating comparison runs on real tokens too.
     fusion: bool,
+    /// draft+verify decoding ([`RealEngine::speculative`]): each iteration
+    /// drafts one token per decoding sequence via
+    /// [`StepModel::draft_token`], verifies the whole batch with the
+    /// target model, and grants sequences whose draft matched a bonus
+    /// decode in the same iteration. Greedy verification: acceptance
+    /// changes *when* tokens are produced, never *which* — transcripts are
+    /// identical to the plain path by construction.
+    speculative: bool,
     /// record per-request output-token transcripts into `emitted`. Opt-in
     /// ([`RealEngine::with_transcripts`]) because the map retains every
     /// token of every request for the engine's lifetime — fine for a
@@ -164,6 +182,7 @@ impl<M: StepModel> RealEngine<M> {
             cache_main,
             cache_aux,
             fusion: true,
+            speculative: false,
             record_transcripts: false,
             emitted: HashMap::new(),
             model,
@@ -184,6 +203,13 @@ impl<M: StepModel> RealEngine<M> {
     /// `record_transcripts` field for why this is opt-in).
     pub fn with_transcripts(mut self) -> Self {
         self.record_transcripts = true;
+        self
+    }
+
+    /// Enable draft+verify decoding (see the `speculative` field). Off by
+    /// default; the plain path is byte-for-byte the engine as it was.
+    pub fn speculative(mut self) -> Self {
+        self.speculative = true;
         self
     }
 
@@ -304,14 +330,14 @@ impl<M: StepModel> RealEngine<M> {
         Ok(true)
     }
 
-    /// One engine iteration: refill slots, then one fused decode step.
-    /// In alternating mode an iteration that prefilled does *not* decode
-    /// — the live analogue of the simulator's alternating batcher.
-    pub fn step(&mut self) -> EngineResult<()> {
-        let prefilled = self.refill()?;
-        if !self.fusion && prefilled {
-            return Ok(());
-        }
+    /// One full-batch decode over every decoding sequence, committing the
+    /// emission of the subset in `commit` (`None` = everyone, the plain
+    /// path). Non-committed live slots still ride in the batch — they
+    /// recompute their current position with the same input token at the
+    /// same cache length, which is idempotent — so the kernel always runs
+    /// at its fixed batch shape. Returns the committed `(req_id, token)`
+    /// pairs in batch order.
+    fn decode_pass(&mut self, commit: Option<&[usize]>) -> EngineResult<Vec<(usize, i32)>> {
         let dec: Vec<usize> = self
             .sched
             .seqs()
@@ -321,7 +347,7 @@ impl<M: StepModel> RealEngine<M> {
             .map(|(i, _)| i)
             .collect();
         if dec.is_empty() {
-            return Ok(());
+            return Ok(Vec::new());
         }
         let b = self.model.batch();
         let mut tokens = vec![0i32; b];
@@ -342,22 +368,93 @@ impl<M: StepModel> RealEngine<M> {
         self.cache_aux = na;
         self.steps += 1;
         let now = self.now();
-        let ids: Vec<usize> = dec.iter().map(|&i| self.sched.seqs()[i].req.id).collect();
-        let finished = self.sched.complete_decode(&dec, now, &mut self.metrics);
+        let committed: Vec<usize> = dec
+            .iter()
+            .copied()
+            .filter(|&i| {
+                commit.is_none_or(|ids| ids.contains(&self.sched.seqs()[i].req.id))
+            })
+            .collect();
+        if committed.is_empty() {
+            return Ok(Vec::new());
+        }
+        let ids: Vec<usize> =
+            committed.iter().map(|&i| self.sched.seqs()[i].req.id).collect();
+        let finished = self.sched.complete_decode(&committed, now, &mut self.metrics);
         let freed: Vec<usize> = finished.iter().map(|f| f.pages[0] as usize).collect();
         let vocab = self.model.vocab();
-        for (&i, &id) in dec.iter().zip(&ids) {
+        let mut out = Vec::with_capacity(committed.len());
+        for (&i, &id) in committed.iter().zip(&ids) {
             let slot = slot_of_idx[i];
             let tok = argmax(&logits.data[slot * vocab..(slot + 1) * vocab]);
-            // every decode step emits its token (a finished sequence's
-            // final token included); only live slots feed it back
+            // every committed emission yields its token (a finished
+            // sequence's final token included); only live slots feed back
             if self.record_transcripts {
                 self.emitted.entry(id).or_default().push(tok);
             }
             if !freed.contains(&slot) {
                 self.next_token[slot] = tok;
             }
+            out.push((id, tok));
         }
+        Ok(out)
+    }
+
+    /// One engine iteration: refill slots, then one fused decode step.
+    /// In alternating mode an iteration that prefilled does *not* decode
+    /// — the live analogue of the simulator's alternating batcher. With
+    /// [`RealEngine::speculative`] on, a decode iteration is a verify
+    /// step: draft one token per sequence, verify the whole batch, then
+    /// run a bonus decode committing only the sequences whose draft
+    /// matched.
+    pub fn step(&mut self) -> EngineResult<()> {
+        let prefilled = self.refill()?;
+        if !self.fusion && prefilled {
+            return Ok(());
+        }
+        if !self.speculative {
+            self.decode_pass(None)?;
+            return Ok(());
+        }
+        // draft phase: propose the next token of every decoding sequence
+        // from its last committed token (the one the verify pass will
+        // actually feed)
+        let drafts: HashMap<usize, i32> = self
+            .sched
+            .seqs()
+            .iter()
+            .filter(|s| s.is_decoding())
+            .map(|s| {
+                let slot = self.slot_of(s.req.id as u64);
+                (s.req.id, self.model.draft_token(self.next_token[slot]))
+            })
+            .collect();
+        // verify pass: the target model commits every decoding sequence
+        let verified = self.decode_pass(None)?;
+        if verified.is_empty() {
+            return Ok(());
+        }
+        self.metrics.verify_steps += verified.len() as u64;
+        self.metrics.accepted_tokens += verified.len() as u64;
+        // a sequence whose draft matched its verified emission — and that
+        // still has budget left — earned a bonus decode this iteration
+        let accepted: Vec<usize> = verified
+            .iter()
+            .filter(|(id, tok)| {
+                drafts.get(id) == Some(tok)
+                    && self
+                        .sched
+                        .seqs()
+                        .iter()
+                        .any(|s| s.req.id == *id && s.is_decoding())
+            })
+            .map(|(id, _)| *id)
+            .collect();
+        if accepted.is_empty() {
+            return Ok(());
+        }
+        let bonus = self.decode_pass(Some(&accepted))?;
+        self.metrics.accepted_tokens += bonus.len() as u64;
         Ok(())
     }
 
@@ -811,6 +908,19 @@ mod tests {
                 na,
             ))
         }
+
+        /// Draft rule wired to the mock's argmax transition: an even
+        /// input token drafts the true next token (always accepted), an
+        /// odd one drafts a wrong token (always rejected) — acceptance
+        /// depends only on sequence content, never on scheduling.
+        fn draft_token(&self, last: i32) -> i32 {
+            let truth = argmax(&self.logit_row(last));
+            if last % 2 == 0 {
+                truth
+            } else {
+                (truth + 1).rem_euclid(self.vocab as i32)
+            }
+        }
     }
 
     #[test]
@@ -889,6 +999,49 @@ mod tests {
         }
         // both engines drain their pools completely
         for eng in [&fused, &alt] {
+            eng.sched.pool().check_invariants().unwrap();
+            assert_eq!(eng.sched.pool().pages_free(), eng.sched.pool().pages_total());
+        }
+    }
+
+    #[test]
+    fn speculative_serving_preserves_transcripts_and_counts_verify_steps() {
+        // three content classes from the mock's argmax cycles: req 0's
+        // chain sits on the odd self-loop 5->5 (every draft wrong),
+        // req 1 walks 3->1->4->3 (accepts only after the even 4), req 3
+        // walks 6->0->2->6 (every draft right). Speculation must change
+        // only *when* tokens appear, never *which*.
+        let reqs: Vec<(usize, usize, usize)> = vec![(0, 4, 6), (1, 4, 6), (3, 5, 6)];
+        let run = |spec: bool| {
+            let mut eng = RealEngine::new(MockModel::new()).unwrap().with_transcripts();
+            if spec {
+                eng = eng.speculative();
+            }
+            for &(id, p, d) in &reqs {
+                eng.submit(Request::new(id, p, d));
+            }
+            eng.run_to_completion().unwrap();
+            eng
+        };
+        let plain = run(false);
+        let spec = run(true);
+        assert_eq!(plain.metrics.verify_steps, 0, "plain path never verifies");
+        assert_eq!(plain.metrics.accepted_tokens, 0);
+        assert_eq!(spec.metrics.e2e.len(), reqs.len());
+        assert_eq!(spec.metrics.output_tokens, plain.metrics.output_tokens);
+        for &(id, _, d) in &reqs {
+            let p = plain.transcript(id).expect("plain transcript");
+            let s = spec.transcript(id).expect("speculative transcript");
+            assert_eq!(s.len(), d, "request {id} must emit its decode budget");
+            assert_eq!(p, s, "request {id}: speculation altered the tokens");
+        }
+        // accounting: the always-accept request guarantees bonus tokens
+        // happened; the always-reject one guarantees not every verify
+        // step earned a bonus
+        assert!(spec.metrics.verify_steps > 0);
+        assert!(spec.metrics.accepted_tokens > spec.metrics.verify_steps);
+        assert!(spec.metrics.accepted_tokens < 2 * spec.metrics.verify_steps);
+        for eng in [&plain, &spec] {
             eng.sched.pool().check_invariants().unwrap();
             assert_eq!(eng.sched.pool().pages_free(), eng.sched.pool().pages_total());
         }

@@ -83,18 +83,32 @@ pub enum TraceEvent {
         prefix_hit: bool,
         prefill_skipped: u64,
     },
-    /// a replica began executing one planned unit of work
+    /// a replica began executing one planned unit of work;
+    /// `verify_width` is the speculative verify width the step was priced
+    /// at (1 == plain decode, draft+verify otherwise)
     StepStart {
         replica: usize,
         t: f64,
         kind: StepKind,
         prefill_tokens: usize,
         decode_tokens: usize,
+        verify_width: usize,
     },
     /// the matching completion; `emitted` is the number of output tokens
-    /// this step produced (first tokens from completing prefills plus one
-    /// per decoded sequence), recomputed from pre-step phase state
-    StepEnd { replica: usize, t: f64, emitted: usize },
+    /// this step produced (first tokens from completing prefills plus the
+    /// per-sequence decode emissions), recomputed from pre-step phase
+    /// state. At verify width > 1 the decode emissions are verify bursts:
+    /// `verify_seqs` counts the verify steps this span completed (one per
+    /// decoding sequence) and `verify_emitted` the tokens those bursts
+    /// produced (verified + accepted drafts + bonus); both stay 0 on the
+    /// plain path so spec-off traces are byte-identical to the seed's
+    StepEnd {
+        replica: usize,
+        t: f64,
+        emitted: usize,
+        verify_seqs: usize,
+        verify_emitted: usize,
+    },
     /// pool occupancy snapshot taken after a step applied
     PoolSample { replica: usize, t: f64, pages_used: usize, pages_total: usize },
     /// the scheduler evicted a decoding sequence back to the wait queue
@@ -185,6 +199,8 @@ pub struct TraceAudit {
     pub migrations: u64,
     pub migrated_bytes: u64,
     pub preemptions: u64,
+    pub accepted_tokens: u64,
+    pub verify_steps: u64,
 }
 
 impl TraceAudit {
@@ -210,6 +226,8 @@ impl TraceAudit {
             ("migrations", self.migrations, m.migrations),
             ("migrated_bytes", self.migrated_bytes, m.migrated_bytes),
             ("preemptions", self.preemptions, m.preemptions),
+            ("accepted_tokens", self.accepted_tokens, m.accepted_tokens),
+            ("verify_steps", self.verify_steps, m.verify_steps),
         ] {
             if mine != theirs {
                 errs.push(format!("{name}: trace {mine} vs metrics {theirs}"));
@@ -277,8 +295,10 @@ impl Tracer {
     }
 
     /// record the launch of one planned unit of work; `Work::Idle` is
-    /// not a span and records nothing (matching `trace_step_end`)
-    pub fn step_start(&mut self, replica: usize, t: f64, work: &Work) {
+    /// not a span and records nothing (matching `trace_step_end`).
+    /// `verify_width` is the speculative width the step is priced at
+    /// (pass 1 on the plain path).
+    pub fn step_start(&mut self, replica: usize, t: f64, work: &Work, verify_width: usize) {
         let kind = match work {
             Work::Idle => return,
             Work::PrefillChunk { .. } => StepKind::Prefill,
@@ -291,11 +311,25 @@ impl Tracer {
             kind,
             prefill_tokens: work.prefill_tokens(),
             decode_tokens: work.decode_tokens(),
+            verify_width,
         });
     }
 
-    pub fn step_end(&mut self, replica: usize, t: f64, emitted: usize) {
-        self.events.push(TraceEvent::StepEnd { replica, t, emitted });
+    pub fn step_end(
+        &mut self,
+        replica: usize,
+        t: f64,
+        emitted: usize,
+        verify_seqs: usize,
+        verify_emitted: usize,
+    ) {
+        self.events.push(TraceEvent::StepEnd {
+            replica,
+            t,
+            emitted,
+            verify_seqs,
+            verify_emitted,
+        });
     }
 
     pub fn pool_sample(&mut self, replica: usize, t: f64, pages_used: usize, pages_total: usize) {
@@ -359,7 +393,11 @@ impl Tracer {
         for ev in &self.events {
             match ev {
                 TraceEvent::Admit { t, queued_t, .. } => a.queue_wait.record(t - queued_t),
-                TraceEvent::StepEnd { emitted, .. } => a.output_tokens += *emitted as u64,
+                TraceEvent::StepEnd { emitted, verify_seqs, verify_emitted, .. } => {
+                    a.output_tokens += *emitted as u64;
+                    a.verify_steps += *verify_seqs as u64;
+                    a.accepted_tokens += *verify_emitted as u64;
+                }
                 TraceEvent::Preempt { .. } => a.preemptions += 1,
                 TraceEvent::Import { bytes, .. } => {
                     a.migrations += 1;
@@ -577,18 +615,27 @@ impl Tracer {
                 _ => {}
             }
         }
-        let mut open: Vec<Option<(f64, StepKind, usize, usize)>> = vec![None; n];
+        let mut open: Vec<Option<(f64, StepKind, usize, usize, usize)>> = vec![None; n];
         for ev in &self.events {
             match *ev {
-                TraceEvent::StepStart { replica, t, kind, prefill_tokens, decode_tokens } => {
-                    open[replica] = Some((t, kind, prefill_tokens, decode_tokens));
+                TraceEvent::StepStart {
+                    replica,
+                    t,
+                    kind,
+                    prefill_tokens,
+                    decode_tokens,
+                    verify_width,
+                } => {
+                    open[replica] = Some((t, kind, prefill_tokens, decode_tokens, verify_width));
                 }
-                TraceEvent::StepEnd { replica, t, emitted } => {
-                    if let Some((start, kind, p, d)) = open[replica].take() {
+                TraceEvent::StepEnd { replica, t, emitted, verify_seqs, verify_emitted } => {
+                    if let Some((start, kind, p, d, q)) = open[replica].take() {
                         evs.push(format!(
                             "{{\"ph\":\"X\",\"pid\":1,\"tid\":{replica},\"ts\":{},\"dur\":{},\
                              \"cat\":\"step\",\"name\":{},\"args\":{{\"prefill_tokens\":{p},\
-                             \"decode_tokens\":{d},\"emitted\":{emitted}}}}}",
+                             \"decode_tokens\":{d},\"emitted\":{emitted},\"verify_width\":{q},\
+                             \"verify_seqs\":{verify_seqs},\
+                             \"verify_emitted\":{verify_emitted}}}}}",
                             start * US,
                             (t - start) * US,
                             esc(kind.name()),
@@ -735,13 +782,13 @@ mod tests {
         // preempted once
         let mut tr = Tracer::new(vec!["prefill".into(), "decode".into()]);
         tr.admit(1, 0.0, 0.0, 0.5, 0, false, 0);
-        tr.step_start(0, 0.5, &Work::PrefillChunk { idx: 0, chunk: 1024 });
-        tr.step_end(0, 2.0, 1);
+        tr.step_start(0, 0.5, &Work::PrefillChunk { idx: 0, chunk: 1024 }, 1);
+        tr.step_end(0, 2.0, 1, 0, 0);
         tr.export(1, 2.0, 0, 1024);
         tr.ship_tail(1, 2.0, 0, 1, 4096, 3.0);
         tr.import(1, 3.0, 1, 2.0, 1024, 4096);
-        tr.step_start(1, 3.0, &Work::DecodeBatch { idxs: vec![0] });
-        tr.step_end(1, 5.0, 1);
+        tr.step_start(1, 3.0, &Work::DecodeBatch { idxs: vec![0] }, 1);
+        tr.step_end(1, 5.0, 1, 0, 0);
         let fin = FinishedSeq {
             state: crate::sched::SeqState {
                 req: crate::workload::Request {
@@ -866,16 +913,45 @@ mod tests {
     #[test]
     fn step_start_skips_idle_and_splits_tokens() {
         let mut tr = Tracer::new(vec!["unified".into()]);
-        tr.step_start(0, 0.0, &Work::Idle);
+        tr.step_start(0, 0.0, &Work::Idle, 4);
         assert!(tr.events().is_empty());
-        tr.step_start(0, 0.0, &Work::Mixed { decode: vec![0, 1], prefill: vec![(2, 512)] });
+        tr.step_start(0, 0.0, &Work::Mixed { decode: vec![0, 1], prefill: vec![(2, 512)] }, 4);
         match tr.events()[0] {
-            TraceEvent::StepStart { kind, prefill_tokens, decode_tokens, .. } => {
+            TraceEvent::StepStart { kind, prefill_tokens, decode_tokens, verify_width, .. } => {
                 assert_eq!(kind, StepKind::Mixed);
                 assert_eq!(prefill_tokens, 512);
                 assert_eq!(decode_tokens, 2);
+                assert_eq!(verify_width, 4);
             }
             ref ev => panic!("unexpected event {ev:?}"),
         }
+    }
+
+    #[test]
+    fn audit_accumulates_verify_bursts() {
+        // a two-seq verify step at width 4 emits 5 tokens (3 + 2); the
+        // audit must split them into verify_steps / accepted_tokens and
+        // still count them in output_tokens
+        let mut tr = Tracer::new(vec!["unified".into()]);
+        tr.step_start(0, 0.0, &Work::DecodeBatch { idxs: vec![0, 1] }, 4);
+        tr.step_end(0, 1.0, 5, 2, 5);
+        let a = tr.audit();
+        assert_eq!(a.output_tokens, 5);
+        assert_eq!(a.verify_steps, 2);
+        assert_eq!(a.accepted_tokens, 5);
+        let m = ServiceMetrics {
+            output_tokens: 5,
+            accepted_tokens: 5,
+            verify_steps: 2,
+            ..Default::default()
+        };
+        a.check(&m).unwrap();
+        let bad = ServiceMetrics { output_tokens: 5, ..Default::default() };
+        assert!(a.check(&bad).unwrap_err().contains("accepted_tokens"));
+        // the chrome exporter annotates the span with the verify fields
+        let json = tr.to_chrome_json("verify");
+        assert!(json.contains("\"verify_width\":4"));
+        assert!(json.contains("\"verify_seqs\":2"));
+        assert!(json.contains("\"verify_emitted\":5"));
     }
 }

@@ -76,6 +76,46 @@ pub struct Request {
 /// stream can never collide positionally even when `family == id`.
 const FAMILY_SALT: u64 = 0xA5A5_5A5A_0F0F_F0F0;
 const SUFFIX_SALT: u64 = 0x3C3C_C3C3_9696_6969;
+/// Salt for the speculative-acceptance stream (`spec_accepted`), so it
+/// can never collide with the prompt-token or arrival streams.
+const SPEC_SALT: u64 = 0x6969_9696_C3C3_3C3C;
+
+/// Tokens emitted by one draft+verify step: the sequence has already
+/// emitted `produced` tokens, the verifier scores `verify_width` query
+/// positions, and each draft position accepts independently with
+/// probability `accept_rate`. The count includes the step's one
+/// always-emitted verified token, each accepted draft after it, and the
+/// bonus token when every draft accepts — so it lands in
+/// `[1, verify_width]` with the truncated-geometric law
+/// P(a = 1+k) = p^k (1-p) for k < q-1, P(a = q) = p^(q-1), whose mean
+/// is (1 - p^q) / (1 - p).
+///
+/// Sampling is keyed by `(req_id, produced)` alone — not by schedule
+/// state — so a request's emitted-token stream is reproducible across
+/// sim loops, fused/alternating batchers, and preemption re-runs.
+pub fn spec_accepted(
+    req_id: usize,
+    produced: usize,
+    verify_width: usize,
+    accept_rate: f64,
+) -> usize {
+    if verify_width <= 1 {
+        return 1;
+    }
+    if accept_rate >= 1.0 {
+        return verify_width;
+    }
+    let seed = (req_id as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add((produced as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9))
+        ^ SPEC_SALT;
+    let mut rng = Rng::new(seed);
+    let mut accepted = 1;
+    while accepted < verify_width && rng.f64() < accept_rate {
+        accepted += 1;
+    }
+    accepted
+}
 
 impl Request {
     pub fn new(id: usize, prompt_len: usize, decode_len: usize) -> Self {
@@ -346,6 +386,32 @@ mod tests {
             prev = o.arrival_t;
             assert_eq!(o.prompt_len, r.prompt_len);
             assert_eq!(o.family, r.family);
+        }
+    }
+
+    #[test]
+    fn spec_accepted_is_bounded_deterministic_and_geometric() {
+        // width 1 is the plain-decode identity regardless of the rate
+        for p in [0.0, 0.3, 1.0] {
+            assert_eq!(spec_accepted(7, 3, 1, p), 1);
+        }
+        // degenerate rates pin the extremes
+        assert_eq!(spec_accepted(7, 3, 4, 1.0), 4);
+        assert_eq!(spec_accepted(7, 3, 4, 0.0), 1);
+        // keyed by (req, ordinal): reproducible, independent of call order
+        assert_eq!(spec_accepted(5, 11, 4, 0.6), spec_accepted(5, 11, 4, 0.6));
+        // bounded and mean-matching the truncated geometric
+        for (q, p) in [(2, 0.3), (4, 0.5), (6, 0.8)] {
+            let n = 20_000;
+            let mut sum = 0usize;
+            for i in 0..n {
+                let a = spec_accepted(i / 100, i % 100, q, p);
+                assert!((1..=q).contains(&a));
+                sum += a;
+            }
+            let mean = sum as f64 / n as f64;
+            let expect = (1.0 - p.powi(q as i32)) / (1.0 - p);
+            assert!((mean - expect).abs() < 0.05, "q={q} p={p}: {mean} vs {expect}");
         }
     }
 

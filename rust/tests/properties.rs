@@ -10,7 +10,7 @@ use gla_serve::engine::{run_benchmark, run_benchmark_with};
 use gla_serve::hardware::DeviceModel;
 use gla_serve::kvcache::{PagePool, PageStore, RadixIndex};
 use gla_serve::metrics::ServiceMetrics;
-use gla_serve::sched::{DriveMode, PolicyKind, Scheduler, Work};
+use gla_serve::sched::{DriveMode, Phase, PolicyKind, Scheduler, Work};
 use gla_serve::workload::{
     generate, generate_open, generate_shared_prefix, stamp_poisson_arrivals, LengthDist, Request,
     Rng, SharedPrefixSpec,
@@ -1103,7 +1103,9 @@ fn prop_trace_audit_matches_service_metrics() {
     // migrations, preemptions — exactly equal the independently collected
     // `ServiceMetrics`. Output tokens are the sharp edge: preempted
     // sequences re-prefill and re-emit, so the trace must count emissions
-    // per step, not per retirement.
+    // per step, not per retirement. Speculative decoding is coin-flipped
+    // in: verify bursts emit 1..=q tokens per step and the audit's
+    // accepted_tokens/verify_steps counters must reconcile too.
     use gla_serve::config::SimLoop;
     use gla_serve::engine::SimEngine;
     use gla_serve::parallel::FabricSpec;
@@ -1154,6 +1156,9 @@ fn prop_trace_audit_matches_service_metrics() {
         serving.prefix_cache = prefix;
         serving.fusion = fusion;
         serving.kv_hbm_budget = kv_per_token * (page_size * n_pages) as u64;
+        if rng.range(0, 1) == 1 {
+            serving = serving.with_spec(rng.range(2, 4), [0.3f64, 0.6, 0.9][rng.range(0, 2)], 0.1);
+        }
         let mut c = Cluster::new(
             m,
             variant,
@@ -1184,12 +1189,12 @@ fn prop_trace_audit_matches_service_metrics() {
     }
     println!("trace-audit: {preempting}/10 preempting runs, {migrating}/10 migrating runs");
     // the lockstep (hybrid-barrier) discipline audits too: all-unified
-    // DP>1 closed-loop through the engine wrapper
+    // DP>1 closed-loop through the engine wrapper, with verify bursts on
     let m = DSV2;
     let mut eng = SimEngine::new(
         m,
         m.variant("gla8"),
-        ServingConfig::with_parallelism(4, 2).with_trace(),
+        ServingConfig::with_parallelism(4, 2).with_trace().with_spec(3, 0.7, 0.1),
         DeviceModel::h100_serving(),
         8,
     );
@@ -1205,4 +1210,273 @@ fn prop_trace_audit_matches_service_metrics() {
         .check(&eng.cluster.metrics)
         .unwrap_or_else(|e| panic!("lockstep trace audit diverged: {e}"));
     assert_eq!(tracer.audit().e2e.len(), 24);
+}
+
+#[test]
+fn prop_spec_off_is_bit_identical() {
+    // The speculative-decoding inertness contract (DESIGN.md
+    // §Speculative serving): `spec: None`, the all-dead-knob
+    // `with_spec(1, 1.0, 0.0)`, and a width-1 config with *live*
+    // accept-rate/draft-cost knobs are the same serving system — full
+    // `ServiceMetrics` equality (`Summary` sample multisets included)
+    // and the same number of event-loop clock stops — across random
+    // stream/fusion/prefix/fabric/layout configurations and BOTH async
+    // loops. Width 1 must make every other spec knob structurally dead,
+    // not merely approximately inert.
+    use gla_serve::config::SimLoop;
+    use gla_serve::parallel::FabricSpec;
+    let mut rng = Rng::new(0x5BEC0FF);
+    for case in 0..6 {
+        let m = DSV2;
+        let variant = m.variant(["gla2", "gqa4"][rng.range(0, 1)]);
+        let page_size = [16usize, 64][rng.range(0, 1)];
+        let chunk = [256usize, 512, 1024][rng.range(0, 2)];
+        let stream = rng.range(0, 1) == 1;
+        let fusion = rng.range(0, 1) == 1;
+        let prefix = rng.range(0, 1) == 1;
+        let fabric = [
+            FabricSpec::shared(),
+            FabricSpec::per_pair(),
+            FabricSpec::per_pair_capped(1),
+        ][rng.range(0, 2)];
+        let spec = if rng.range(0, 1) == 0 {
+            ClusterSpec::unified(rng.range(2, 3))
+        } else {
+            ClusterSpec::disagg(rng.range(1, 2), rng.range(1, 2))
+        };
+        let router = RouterKind::all()[rng.range(0, RouterKind::all().len() - 1)];
+        let n = rng.range(6, 16);
+        let (reqs, max_prompt, max_decode) = if prefix {
+            let pspec = SharedPrefixSpec {
+                n_families: rng.range(1, 3),
+                prefix_len: page_size * rng.range(1, 6),
+                max_suffix: rng.range(1, 512),
+                decode: rng.range(2, 48),
+            };
+            let mut reqs = generate_shared_prefix(pspec, n, case as u64 + 401);
+            stamp_poisson_arrivals(&mut reqs, case as u64 + 401, 2.0);
+            (reqs, pspec.prefix_len + pspec.max_suffix, pspec.decode)
+        } else {
+            let dist =
+                LengthDist::RandomRatio { max_prompt: 4096, max_decode: 128, ratio: 0.1 };
+            (generate_open(dist, n, case as u64 + 401, 2.0), 4096, 128)
+        };
+        let drive = if rng.range(0, 1) == 0 {
+            DriveMode::Closed { concurrency: rng.range(2, 8) }
+        } else {
+            DriveMode::Open
+        };
+        // live knobs behind the dead width — any values must be inert
+        let live_rate = 0.25 * rng.range(0, 3) as f64;
+        let live_frac = 0.05 * rng.range(0, 4) as f64;
+        let footprint_pages = (max_prompt + max_decode).div_ceil(page_size);
+        let n_pages = footprint_pages * rng.range(1, 3);
+        let kv_per_token = variant.kv_bytes_per_token_per_device(2, m.dtype_bytes) as u64
+            * m.n_layers as u64;
+        let run = |sim_loop: SimLoop, spec_cfg: Option<(usize, f64, f64)>| {
+            let mut serving =
+                ServingConfig::with_parallelism(2, 1).with_sim_loop(sim_loop);
+            serving.page_size = page_size;
+            serving.prefill_chunk = chunk;
+            serving.stream_migration = stream;
+            serving.prefix_cache = prefix;
+            serving.fusion = fusion;
+            serving.kv_hbm_budget = kv_per_token * (page_size * n_pages) as u64;
+            if let Some((q, p, f)) = spec_cfg {
+                serving = serving.with_spec(q, p, f);
+            }
+            let mut c = Cluster::new(
+                m,
+                variant,
+                serving,
+                DeviceModel::h100_serving(),
+                &spec.clone().with_fabric(fabric),
+                router,
+                drive,
+            );
+            c.submit(&reqs);
+            c.run();
+            let stats = c.sim_stats();
+            (c.metrics, stats)
+        };
+        for sim_loop in [SimLoop::Calendar, SimLoop::MinScan] {
+            let (legacy_m, legacy_s) = run(sim_loop, None);
+            assert_eq!(legacy_m.accepted_tokens, 0, "case {case}: spec off touched the ledger");
+            assert_eq!(legacy_m.verify_steps, 0, "case {case}: spec off counted verify steps");
+            for (label, cfg) in [
+                ("dead knobs (1, 1.0, 0.0)", (1, 1.0, 0.0)),
+                ("live knobs behind width 1", (1, live_rate, live_frac)),
+            ] {
+                let (on_m, on_s) = run(sim_loop, Some(cfg));
+                assert_eq!(
+                    on_m, legacy_m,
+                    "case {case} ({sim_loop:?}): {label} drifted from spec=None \
+                     (stream={stream} fusion={fusion} prefix={prefix})"
+                );
+                assert_eq!(
+                    on_s.events, legacy_s.events,
+                    "case {case} ({sim_loop:?}): {label} changed the clock stops"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_spec_conserves_tokens_and_pages() {
+    // Conservation under verify bursts, at both layers of the stack.
+    //
+    // Part 1 — the scheduler under pool pressure: random verify widths
+    // over random interleavings (fusion and prefix caching coin-flipped,
+    // vLLM-style preemption live), the PagePool refcount/free-list
+    // invariants hold at every step boundary, every retirement carries
+    // exactly its decode budget (a burst never overshoots: the last
+    // verify step is clamped to the remaining budget), and the per-case
+    // verify ledger is boxed by `verify_steps <= accepted <= q * steps`.
+    let mut rng = Rng::new(0x5BECC0);
+    let mut burst_cases = 0u64;
+    for case in 0..20 {
+        let ps = [1usize, 4, 16][rng.range(0, 2)];
+        let n_pages = rng.range(18, 64); // >= any single request footprint
+        let q = rng.range(2, 5);
+        let rate = 0.25 * rng.range(0, 4) as f64;
+        let kind = PolicyKind::all()[rng.range(0, PolicyKind::all().len() - 1)];
+        let mut sched = Scheduler::new(
+            PagePool::new(n_pages, ps),
+            kind.build(),
+            rng.range(2, 12),
+            rng.range(1, 8),
+        )
+        .with_spec_decode(q, rate);
+        if rng.range(0, 1) == 1 {
+            sched = sched.with_fusion(rng.range(2, 48));
+        }
+        if rng.range(0, 1) == 1 {
+            sched = sched.with_prefix_cache();
+        }
+        let mut metrics = ServiceMetrics::default();
+        let pspec = SharedPrefixSpec {
+            n_families: rng.range(1, 3),
+            prefix_len: ps * rng.range(1, 3),
+            max_suffix: rng.range(1, 2 * ps + 6),
+            decode: rng.range(1, 12),
+        };
+        let mut reqs = generate_shared_prefix(pspec, 32, case as u64 + 501);
+        stamp_poisson_arrivals(&mut reqs, case as u64 + 501, 1.0);
+        let mut next = 0usize;
+        let mut t = 0.0f64;
+        let mut steps = 0usize;
+        let mut dropped = 0usize;
+        let mut finished = Vec::new();
+        while next < reqs.len() || !sched.is_idle() {
+            t += 1.0;
+            steps += 1;
+            assert!(steps < 30_000, "case {case}: livelocked");
+            while next < reqs.len()
+                && reqs[next].arrival_t <= t
+                && sched.can_admit(&reqs[next])
+            {
+                sched.admit(reqs[next], reqs[next].arrival_t, t, &mut metrics);
+                next += 1;
+            }
+            dropped += sched.preempt_for_decode(&mut metrics).len();
+            match sched.plan() {
+                Work::Idle => {
+                    if next < reqs.len() && sched.is_idle() {
+                        t = t.max(reqs[next].arrival_t);
+                    }
+                }
+                Work::PrefillChunk { idx, chunk } => {
+                    finished.extend(sched.complete_prefill(idx, chunk, t, &mut metrics));
+                }
+                Work::DecodeBatch { idxs } => {
+                    finished.extend(sched.complete_decode(&idxs, t, &mut metrics));
+                }
+                Work::Mixed { decode, prefill } => {
+                    finished.extend(sched.complete_mixed(&decode, &prefill, t, &mut metrics));
+                }
+            }
+            sched
+                .pool()
+                .check_invariants()
+                .unwrap_or_else(|e| panic!("case {case} step {steps}: {e}"));
+        }
+        assert_eq!(
+            sched.pool().pages_free(),
+            sched.pool().pages_total(),
+            "case {case}: leaked pages"
+        );
+        assert_eq!(
+            metrics.e2e.len() + dropped,
+            reqs.len(),
+            "case {case}: requests neither completed nor accounted as evicted"
+        );
+        for f in &finished {
+            let produced = match f.state.phase {
+                Phase::Decode { produced } => produced,
+                ref p => panic!("case {case}: retired in {p:?}"),
+            };
+            assert_eq!(
+                produced, f.state.req.decode_len,
+                "case {case} req {}: a verify burst over- or under-shot the budget",
+                f.state.req.id
+            );
+        }
+        assert!(
+            metrics.verify_steps <= metrics.accepted_tokens
+                && metrics.accepted_tokens <= q as u64 * metrics.verify_steps,
+            "case {case}: ledger out of the [steps, q*steps] box \
+             (steps={} accepted={} q={q})",
+            metrics.verify_steps,
+            metrics.accepted_tokens
+        );
+        burst_cases += u64::from(metrics.accepted_tokens > metrics.verify_steps);
+    }
+    assert!(burst_cases > 0, "no case ever accepted a draft token");
+
+    // Part 2 — the full cluster: same-seed determinism, the
+    // output-token ledger (`output == accepted + epilogues`, one
+    // prefill epilogue per admission and per re-admission after
+    // preemption), and the sampled mean acceptance tracking the
+    // truncated-geometric analytic mean E[a] = (1 - p^q) / (1 - p).
+    let m = DSV2;
+    for case in 0..6 {
+        let q = rng.range(2, 5);
+        let p = [0.2f64, 0.5, 0.8][rng.range(0, 2)];
+        let variant = ["gla2", "gqa4"][rng.range(0, 1)];
+        let n = 24usize;
+        let decode = 96usize;
+        let reqs = generate(LengthDist::Fixed { prompt: 1024, decode }, n, case as u64 + 601);
+        let run = || {
+            run_benchmark(
+                m,
+                m.variant(variant),
+                ServingConfig::with_parallelism(2, 1).with_spec(q, p, 0.1),
+                DeviceModel::h100_serving(),
+                &reqs,
+                8,
+            )
+        };
+        let met = run();
+        assert_eq!(met, run(), "case {case}: speculative run is not deterministic");
+        assert_eq!(met.e2e.len(), n, "case {case}: lost requests");
+        assert_eq!(
+            met.output_tokens,
+            (n * decode) as u64 + met.preemptions,
+            "case {case}: output tokens diverged from the decode budgets"
+        );
+        assert_eq!(
+            met.accepted_tokens + n as u64 + met.preemptions,
+            met.output_tokens,
+            "case {case}: verify ledger does not reconcile (q={q} p={p})"
+        );
+        assert!(met.verify_steps > 0, "case {case}: never verified");
+        let analytic = (1.0 - p.powi(q as i32)) / (1.0 - p);
+        let mean = met.mean_accepted_per_step();
+        assert!(
+            (mean - analytic).abs() < 0.12 * q as f64 + 0.3,
+            "case {case}: mean accepted/step {mean:.3} far from analytic \
+             {analytic:.3} (q={q} p={p})"
+        );
+    }
 }
