@@ -1,0 +1,217 @@
+//! SLO-aware goodput scheduling vs FCFS across the capacity knee, for
+//! GQA-4 and GLA-2 on a unified TP2 replica.
+//!
+//! The bench self-calibrates instead of hard-coding rates and budgets:
+//! a closed-loop run measures the replica's service capacity mu (req/s),
+//! then an open-loop FCFS run at 0.5 mu (comfortably pre-knee) measures
+//! the latency envelope the deadline budgets are derived from. That
+//! keeps every assertion meaningful if the device model or cost model
+//! shifts under this bench.
+//!
+//! What the bench asserts on every run (the recorded contract):
+//! * part 1 — pre-knee inertness: with a single generous deadline class
+//!   stamped and the full SLO config armed (EDF policy + shedding), the
+//!   run never sheds and is byte-identical to the unstamped FCFS run on
+//!   everything but the goodput counters themselves — and every request
+//!   meets its deadline;
+//! * part 2 — past the knee (3 mu and 6 mu), SLO-aware serving strictly
+//!   beats FCFS on goodput (deadline-meeting requests per second) at
+//!   every swept point for both variants, sheds at least one request,
+//!   and the shed ledger conserves: completed + shed == submitted;
+//! * part 3 — shed decisions and EDF ordering reproduce bit-identically
+//!   from the seed.
+//!
+//!     cargo bench --bench goodput
+
+use gla_serve::config::{ServingConfig, SloConfig, DSV2};
+use gla_serve::engine::{run_benchmark_with_stats, SimEngine};
+use gla_serve::hardware::DeviceModel;
+use gla_serve::metrics::{ServiceMetrics, SimStats};
+use gla_serve::report::{BenchReport, Val};
+use gla_serve::sched::PolicyKind;
+use gla_serve::workload::{
+    generate, generate_open, stamp_deadline_classes, DeadlineClass, LengthDist,
+};
+
+const N: usize = 48;
+const SEED: u64 = 42;
+const TP: usize = 2;
+const PROMPT: usize = 4096;
+const DECODE: usize = 256;
+
+/// Closed-loop service capacity of one TP2 replica on this workload
+/// shape, in requests/second — the knee the sweep is anchored to.
+fn capacity_qps(variant: &str) -> f64 {
+    let m = DSV2;
+    let mut eng = SimEngine::new(
+        m,
+        m.variant(variant),
+        ServingConfig::with_parallelism(TP, 1),
+        DeviceModel::h100_serving(),
+        16,
+    );
+    eng.submit(&generate(LengthDist::Fixed { prompt: PROMPT, decode: DECODE }, N, SEED));
+    let duration = eng.run();
+    N as f64 / duration
+}
+
+/// One open-loop run. `deadline = Some((ttft, itl))` stamps a single
+/// deadline class (same salt-seeded stream as the generators, so the
+/// workload itself is untouched); `slo = None` leaves every SLO knob
+/// dead.
+fn run(
+    variant: &str,
+    rate: f64,
+    policy: PolicyKind,
+    slo: Option<SloConfig>,
+    deadline: Option<(f64, f64)>,
+) -> (ServiceMetrics, SimStats) {
+    let m = DSV2;
+    let mut reqs =
+        generate_open(LengthDist::Fixed { prompt: PROMPT, decode: DECODE }, N, SEED, rate);
+    if let Some((ttft, itl)) = deadline {
+        stamp_deadline_classes(&mut reqs, &[DeadlineClass { ttft, itl, weight: 1.0 }], SEED);
+    }
+    let mut serving = ServingConfig::with_parallelism(TP, 1).open_loop().with_policy(policy);
+    if let Some(s) = slo {
+        serving = serving.with_slo(s);
+    }
+    run_benchmark_with_stats(m, m.variant(variant), serving, DeviceModel::h100_serving(), &reqs)
+}
+
+fn main() {
+    let mut report = BenchReport::new("goodput");
+    println!(
+        "goodput — DSV2 (236B/21B FP8), 2xH100, {PROMPT}/{DECODE} open loop, n {N}, \
+         FCFS vs EDF + shed across the capacity knee"
+    );
+
+    for variant in ["gqa4", "gla2"] {
+        let mu = capacity_qps(variant);
+        let preknee = 0.5 * mu;
+        println!("\n== {variant}: capacity {mu:.3} req/s, pre-knee probe at {preknee:.3} ==");
+        report.push_row(&[("variant", Val::s(variant)), ("capacity_qps", Val::F(mu))]);
+
+        // latency envelope at the pre-knee rate, FCFS, no SLO anywhere
+        let (mut plain, plain_stats) = run(variant, preknee, PolicyKind::Fcfs, None, None);
+        assert_eq!(plain.e2e.len(), N, "{variant}: pre-knee run lost requests");
+        let ttft_budget = 4.0 * plain.ttft.max();
+        let itl_budget = 10.0 * plain.itl.max();
+        report.push_sim_stats(&format!("{variant}/preknee-fcfs"), &plain_stats);
+
+        println!(
+            "[1] pre-knee inertness: SLO armed (EDF + shed, ttft {ttft_budget:.2}s / \
+             itl {itl_budget:.3}s budgets) vs plain FCFS"
+        );
+        let (armed, armed_stats) = run(
+            variant,
+            preknee,
+            PolicyKind::Goodput,
+            Some(SloConfig::default()),
+            Some((ttft_budget, itl_budget)),
+        );
+        assert_eq!(armed.shed_requests, 0, "{variant}: pre-knee run must never shed");
+        assert_eq!(
+            armed.met_deadline, N as u64,
+            "{variant}: every request must meet the 4x/10x envelope budgets"
+        );
+        assert_eq!(armed.met_ttft, N as u64);
+        assert_eq!(armed.met_itl, N as u64);
+        // byte-identical outside the goodput counters: a single deadline
+        // class makes EDF degenerate to FCFS, and the conservative shed
+        // predicate never fires under budgets this loose
+        let mut scrubbed = armed.clone();
+        scrubbed.met_ttft = 0;
+        scrubbed.met_itl = 0;
+        scrubbed.met_deadline = 0;
+        assert_eq!(
+            scrubbed, plain,
+            "{variant}: armed-but-idle SLO serving drifted from plain FCFS"
+        );
+        assert_eq!(
+            armed_stats.events, plain_stats.events,
+            "{variant}: arming SLO changed the clock-stop schedule pre-knee"
+        );
+        println!("armed pre-knee run is byte-identical to FCFS outside the counters ✓");
+
+        println!("[2] past-knee sweep: goodput (deadline-met req/s), FCFS vs EDF + shed");
+        println!(
+            "{:>6} {:>10} {:>10} {:>8} {:>8} {:>10} {:>10}",
+            "rate", "fcfs gp", "slo gp", "fcfs met", "slo met", "shed", "slo tok/s"
+        );
+        for mult in [3.0f64, 6.0] {
+            let rate = mult * mu;
+            // FCFS baseline with the accounting-only SLO config: the
+            // goodput counters run, the shed knob stays dead
+            let (fcfs, fcfs_stats) = run(
+                variant,
+                rate,
+                PolicyKind::Fcfs,
+                Some(SloConfig { shed: false, ..SloConfig::default() }),
+                Some((ttft_budget, itl_budget)),
+            );
+            assert_eq!(fcfs.e2e.len(), N, "{variant}@{mult}mu: fcfs must serve everything");
+            assert_eq!(fcfs.shed_requests, 0, "{variant}@{mult}mu: shed knob was dead");
+            let (slo, slo_stats) = run(
+                variant,
+                rate,
+                PolicyKind::Goodput,
+                Some(SloConfig::default()),
+                Some((ttft_budget, itl_budget)),
+            );
+            assert_eq!(
+                slo.e2e.len() as u64 + slo.shed_requests,
+                N as u64,
+                "{variant}@{mult}mu: shed ledger must conserve requests"
+            );
+            assert!(
+                slo.shed_requests > 0,
+                "{variant}@{mult}mu: an overloaded run must shed"
+            );
+            assert!(
+                slo.goodput() > fcfs.goodput(),
+                "{variant}@{mult}mu: SLO serving must strictly beat FCFS on goodput \
+                 ({:.4} vs {:.4} met/s)",
+                slo.goodput(),
+                fcfs.goodput()
+            );
+            println!(
+                "{:>5.1}x {:>10.4} {:>10.4} {:>8} {:>8} {:>10} {:>10.0}",
+                mult,
+                fcfs.goodput(),
+                slo.goodput(),
+                fcfs.met_deadline,
+                slo.met_deadline,
+                slo.shed_requests,
+                slo.throughput(),
+            );
+            report.push_row(&[
+                ("variant", Val::s(variant)),
+                ("rate_mult", Val::F(mult)),
+                ("rate_qps", Val::F(rate)),
+                ("fcfs_goodput", Val::F(fcfs.goodput())),
+                ("slo_goodput", Val::F(slo.goodput())),
+                ("fcfs_met", Val::I(fcfs.met_deadline)),
+                ("slo_met", Val::I(slo.met_deadline)),
+                ("shed", Val::I(slo.shed_requests)),
+            ]);
+            report.push_metrics(&format!("{variant}/{mult}mu-fcfs"), &mut fcfs.clone());
+            report.push_metrics(&format!("{variant}/{mult}mu-slo"), &mut slo.clone());
+            report.push_sim_stats(&format!("{variant}/{mult}mu-fcfs"), &fcfs_stats);
+            report.push_sim_stats(&format!("{variant}/{mult}mu-slo"), &slo_stats);
+        }
+        println!("SLO strictly beats FCFS on goodput at every past-knee point ✓");
+    }
+
+    println!("\n[3] determinism: gla2 at 6x capacity run twice (seed {SEED})");
+    let mu = capacity_qps("gla2");
+    let (mut probe, _) = run("gla2", 0.5 * mu, PolicyKind::Fcfs, None, None);
+    let budgets = Some((4.0 * probe.ttft.max(), 10.0 * probe.itl.max()));
+    let (x, xs) = run("gla2", 6.0 * mu, PolicyKind::Goodput, Some(SloConfig::default()), budgets);
+    let (y, ys) = run("gla2", 6.0 * mu, PolicyKind::Goodput, Some(SloConfig::default()), budgets);
+    assert_eq!(x, y, "shed decisions drifted between identical runs");
+    assert_eq!(xs.events, ys.events, "clock-stop schedule drifted between identical runs");
+    println!("same seed reproduced bit-identically ✓");
+
+    report.emit();
+}

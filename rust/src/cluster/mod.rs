@@ -252,14 +252,33 @@ impl Cluster {
                     // ones exactly (the inertness suite pins it)
                     sched = sched.with_spec_decode(sp.verify_width, sp.accept_rate);
                 }
+                if let Some(slo) = serving.slo {
+                    // the hard prefill-width cap exists to bound TTFT
+                    // jitter where prompts are prefilled in bulk — the
+                    // dedicated prefill replicas; elsewhere only the ITL
+                    // budget applies. Both are deadline-gated inside the
+                    // planner, so arming over an unstamped workload is
+                    // bit-identical to not arming (the inertness suite
+                    // pins it).
+                    let cap = if role == Role::Prefill { slo.prefill_cap } else { 0 };
+                    sched = sched.with_slo(slo.itl_prefill_budget, cap);
+                }
                 ClusterReplica::new(role, sched)
             })
             .collect();
         let all_unified = spec.roles.iter().all(|&r| r == Role::Unified);
         let lockstep = all_unified && serving.hybrid_barrier && replicas.len() > 1;
-        let tracer = serving
-            .trace
-            .then(|| Tracer::new(spec.roles.iter().map(|r| r.name().to_string()).collect()));
+        let tracer = serving.trace.then(|| {
+            let tr = Tracer::new(spec.roles.iter().map(|r| r.name().to_string()).collect());
+            // arm deadline verdicts on retire events (and shed events)
+            // only when the SLO subsystem is on, so traces of plain runs
+            // stay byte-identical
+            if serving.slo.is_some() {
+                tr.with_slo()
+            } else {
+                tr
+            }
+        });
         Cluster {
             coll: CollectiveModel::nvlink(&device.gpu),
             fabric: LinkFabric::new(spec.link.model(&device.gpu), spec.fabric),
@@ -384,14 +403,87 @@ impl Cluster {
             * self.model.n_layers as f64
     }
 
+    /// Lower bound on the time a request's prefill will compute once
+    /// admitted: every chunk priced exactly as the serving loop will
+    /// price it ([`Cluster::attn_part`]'s `PrefillChunk` arm plus
+    /// [`Cluster::duration`]'s FFN/overhead terms), run back to back
+    /// with nothing else on the replica. The shed predicate adds this to
+    /// the wait already accrued — both terms only ever under-estimate
+    /// the true TTFT (no queue ahead, no decode interleaving, no
+    /// preemption), so a request the predicate calls late is *certainly*
+    /// late. That one-sidedness is what makes pre-knee SLO runs
+    /// bit-identical to fcfs: nothing sheds unless it was already lost.
+    fn modeled_prefill_time(&self, req: &Request) -> f64 {
+        let tp = self.serving.tp;
+        let chunk_size = self.serving.prefill_chunk;
+        let mut t = 0.0;
+        let mut done = 0;
+        while done < req.prompt_len {
+            let chunk = (req.prompt_len - done).min(chunk_size);
+            let ctx = done + chunk;
+            t += self
+                .device
+                .prefill_attn_time(&self.model, &self.variant, chunk, ctx, tp)
+                + self
+                    .coll
+                    .tp_step_time(self.model.n_layers, chunk, self.model.d_model, 2, tp)
+                + self.device.ffn_step_time(&self.model, chunk, tp)
+                + self.device.step_overhead;
+            done += chunk;
+        }
+        t
+    }
+
+    /// Overload control (`SloConfig::shed`): drop every queued
+    /// deadline-stamped request whose accrued wait plus modeled prefill
+    /// time already exceeds `slack ×` its TTFT budget. Monotone in the
+    /// clock (wait only grows), so a request not shed now may shed at a
+    /// later stop but never the reverse — which keeps the decision
+    /// deterministic and loop-order-independent. Queued requests hold no
+    /// pages or reservations, so shedding is pure queue surgery plus
+    /// accounting; `completed + shed == submitted` is the conservation
+    /// law the property suite and the `goodput` CLI gate both assert.
+    fn shed_late(&mut self, slack: f64) {
+        let mut late: Vec<usize> = Vec::new();
+        for (i, (req, send_t)) in self.queue.queued().iter().enumerate() {
+            let Some(d) = req.deadline else { continue };
+            let wait = self.clock - send_t;
+            if wait + self.modeled_prefill_time(req) > slack * d.ttft {
+                late.push(i);
+            }
+        }
+        // descending removal keeps the collected indices valid
+        for &i in late.iter().rev() {
+            let (req, send_t) = self.queue.remove(i);
+            self.metrics.shed_requests += 1;
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.shed(
+                    req.id as u64,
+                    req.arrival_t,
+                    send_t,
+                    self.clock,
+                    req.deadline.map_or(0, |d| d.class),
+                );
+            }
+        }
+    }
+
     /// Two-stage admission with the role filter: the load generator puts
     /// requests on the wire (closed loop: concurrency cap counting
     /// migrating requests as in flight; open loop: arrival stamps), then
     /// the router places the policy-picked request on an
     /// admission-eligible replica while that replica's pool can hold the
     /// request's role-scoped footprint. Head-of-line on the policy order,
-    /// exactly like the pre-cluster engine.
+    /// exactly like the pre-cluster engine. With `ServingConfig::slo`
+    /// shedding armed, certainly-late queued requests are dropped first
+    /// — before this stop's releases join the queue, so a request always
+    /// survives at least one stop with its wait at zero.
     fn admit(&mut self) {
+        if let Some(slo) = self.serving.slo {
+            if slo.shed {
+                self.shed_late(slo.shed_slack);
+            }
+        }
         let live = self.live();
         self.queue.release(self.clock, live);
         loop {
@@ -1130,12 +1222,19 @@ impl Cluster {
                 }
             }
             // -- admission: state changed, or an arrival crossed the
-            //    clock while every admitting replica was busy --
+            //    clock while every admitting replica was busy. With SLO
+            //    shedding armed the shed predicate is *time*-dependent
+            //    (wait grows with the clock even when no replica state
+            //    changes), so any clock stop with a non-empty queue must
+            //    re-run `admit` — exactly as the min-scan loop does
+            //    unconditionally; inert when `slo` is off --
             let arrivals_crossed = self
                 .queue
                 .next_arrival()
                 .is_some_and(|t| t <= self.clock);
-            if self.admission_dirty || arrivals_crossed {
+            let shed_pending = self.serving.slo.is_some_and(|s| s.shed)
+                && self.queue.n_queued() > 0;
+            if self.admission_dirty || arrivals_crossed || shed_pending {
                 self.admission_dirty = false;
                 self.admit();
             }
@@ -1664,6 +1763,76 @@ mod tests {
         // it for the same reason); what IS guaranteed here is that
         // cache-aware routing finds reuse on its own merits
         assert!(aff.prefix_hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn slo_shed_drops_hopeless_requests_and_conserves() {
+        use crate::config::SloConfig;
+        use crate::workload::{generate_open, stamp_deadline_classes, DeadlineClass};
+        let m = DSV2;
+        let variant = m.variant("gla2");
+        // pool sized for exactly one full-lifetime footprint: the first
+        // request admits instantly, the burst behind it pool-blocks
+        let (prompt, decode) = (2048usize, 64usize); // 2112 = 33 pages of 64
+        let kv_per_token = variant.kv_bytes_per_token_per_device(2, m.dtype_bytes)
+            as u64
+            * m.n_layers as u64;
+        let mut reqs = generate_open(
+            LengthDist::Fixed { prompt, decode },
+            6,
+            2,
+            1000.0, // a back-to-back burst, far past the knee
+        );
+        // a TTFT budget no prefill can meet: every pool-blocked request
+        // is certainly late the moment it is examined
+        stamp_deadline_classes(
+            &mut reqs,
+            &[DeadlineClass { ttft: 1e-6, itl: 1.0, weight: 1.0 }],
+            7,
+        );
+        let run = |slo: Option<SloConfig>, sim_loop: SimLoop| {
+            let mut serving =
+                ServingConfig::with_parallelism(2, 1).with_sim_loop(sim_loop);
+            serving.page_size = 64;
+            serving.kv_hbm_budget = kv_per_token * (prompt + decode) as u64;
+            if let Some(s) = slo {
+                serving = serving.with_slo(s);
+            }
+            let mut c = Cluster::unified(
+                m,
+                variant,
+                serving,
+                DeviceModel::h100_serving(),
+                DriveMode::Open,
+            );
+            c.submit(&reqs);
+            c.run();
+            for r in c.replicas() {
+                r.sched.pool().check_invariants().unwrap();
+                assert_eq!(r.sched.pool().pages_free(), r.sched.pool().pages_total());
+                assert_eq!(r.sched.reserved_imports(), 0);
+            }
+            (c.metrics.clone(), c.sim_stats().events)
+        };
+        // slo off: the dead-knob baseline — stamps alone shed nothing
+        let (off, _) = run(None, SimLoop::Calendar);
+        assert_eq!(off.e2e.len(), 6);
+        assert_eq!(off.shed_requests, 0);
+        assert_eq!((off.met_ttft, off.met_itl, off.met_deadline), (0, 0, 0));
+        // shedding armed: whoever admits completes, the rest shed —
+        // and the count balances exactly (the conservation law)
+        let slo = SloConfig::default();
+        let (cal, cal_ev) = run(Some(slo), SimLoop::Calendar);
+        let (min, min_ev) = run(Some(slo), SimLoop::MinScan);
+        assert_eq!(cal, min, "shed decisions must be loop-independent");
+        assert_eq!(cal_ev, min_ev, "both loops must visit the same stops");
+        assert!(cal.shed_requests > 0, "overload must shed");
+        assert!(cal.e2e.len() > 0, "admitted requests still complete");
+        assert_eq!(cal.e2e.len() as u64 + cal.shed_requests, 6);
+        assert_eq!(cal.met_ttft, 0, "a 1 µs TTFT budget is unmeetable");
+        // deterministic across repeats
+        let (cal2, _) = run(Some(slo), SimLoop::Calendar);
+        assert_eq!(cal, cal2);
     }
 
     #[test]

@@ -384,6 +384,7 @@ mod tests {
             start_t: 0.0,
             first_token_t: Some(1.0),
             last_token_t: 1.0,
+            worst_itl: 0.0,
         }
     }
 

@@ -56,6 +56,50 @@ pub struct SpecConfig {
     pub draft_cost_frac: f64,
 }
 
+/// SLO-aware goodput scheduling and overload control knobs (ROADMAP
+/// item 1). Armed via [`ServingConfig::slo`] (default `None`): requests
+/// carry deadline classes ([`crate::workload::Deadline`], TTFT + ITL
+/// targets), the scheduler accounts per-request deadline attainment
+/// (`ServiceMetrics::{met_ttft, met_itl, met_deadline, goodput}`), and
+/// the knobs below shape admission and batching around those targets.
+/// Every knob is inert on requests without a deadline stamp, so an
+/// armed config over an unstamped workload is bit-identical to the
+/// plain run — the property suite pins that, like every other
+/// off-by-default mechanism here.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloConfig {
+    /// overload shedding: drop a queued deadline-stamped request the
+    /// moment its accrued queue wait plus its modeled prefill time
+    /// (priced by the cluster's step cost model, the same expressions
+    /// as `cluster::attn_part`) exceeds `shed_slack ×` its TTFT budget.
+    /// Such a request is already certain to miss its deadline, so
+    /// admitting it would only burn capacity that requests which can
+    /// still meet theirs need. Shed requests hold no pages or
+    /// reservations (they never left the wait queue).
+    pub shed: bool,
+    /// slack multiplier on the shed predicate's TTFT budget (1.0 =
+    /// shed exactly at the budget; larger sheds later). Floored at 0
+    /// by the builder.
+    pub shed_slack: f64,
+    /// fused-planner prefill token budget per step while any
+    /// deadline-stamped sequence is live on the replica (0 = no cap):
+    /// bounds mixed-step duration so decode ITL classes aren't starved
+    /// behind bulk prefill. Only read when `fusion` is on.
+    pub itl_prefill_budget: usize,
+    /// cap on fused prefill width (tokens per step) applied on
+    /// `Role::Prefill` replicas while any deadline-stamped sequence is
+    /// live (0 = uncapped): bounds TTFT jitter from oversized fused
+    /// prefill steps (the PR 4 follow-up). Only read when `fusion` is
+    /// on.
+    pub prefill_cap: usize,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig { shed: true, shed_slack: 1.0, itl_prefill_budget: 0, prefill_cap: 0 }
+    }
+}
+
 /// Transformer shapes relevant to the performance models.
 #[derive(Debug, Clone, Copy)]
 pub struct ModelConfig {
@@ -229,6 +273,12 @@ pub struct ServingConfig {
     /// inertness, including the dead knobs (`accept_rate`,
     /// `draft_cost_frac` are never read at width 1).
     pub spec: Option<SpecConfig>,
+    /// SLO-aware goodput scheduling and overload control (see
+    /// [`SloConfig`]). `None` (the default) never touches the goodput
+    /// counters or the shed path; `Some` over a workload with no
+    /// deadline stamps is equally bit-identical to the plain run.
+    /// Pair with `PolicyKind::Goodput` for EDF admission ordering.
+    pub slo: Option<SloConfig>,
 }
 
 impl Default for ServingConfig {
@@ -252,6 +302,7 @@ impl Default for ServingConfig {
             sim_loop: SimLoop::Calendar,
             trace: false,
             spec: None,
+            slo: None,
         }
     }
 }
@@ -337,6 +388,18 @@ impl ServingConfig {
             accept_rate: accept_rate.clamp(0.0, 1.0),
             draft_cost_frac: draft_cost_frac.max(0.0),
         });
+        self
+    }
+
+    /// Arm SLO-aware goodput scheduling and overload control. The
+    /// builder sanitizes the slack (floored at 0); the widths are plain
+    /// token counts where 0 already means "off". Deadline attainment
+    /// accounting turns on with the config; shedding additionally needs
+    /// `slo.shed` — so `shed: false` gives pure goodput *measurement*
+    /// with scheduling untouched (the fcfs baseline of the goodput
+    /// bench runs exactly that).
+    pub fn with_slo(mut self, slo: SloConfig) -> Self {
+        self.slo = Some(SloConfig { shed_slack: slo.shed_slack.max(0.0), ..slo });
         self
     }
 
@@ -498,6 +561,19 @@ mod tests {
         assert_eq!(sane.verify_width, 1);
         assert_eq!(sane.accept_rate, 1.0);
         assert_eq!(sane.draft_cost_frac, 0.0);
+        assert!(c.slo.is_none(), "SLO goodput scheduling must default off");
+        let slo = c.clone().with_slo(SloConfig::default());
+        assert_eq!(
+            slo.slo,
+            Some(SloConfig { shed: true, shed_slack: 1.0, itl_prefill_budget: 0, prefill_cap: 0 })
+        );
+        // the builder floors a degenerate slack
+        let sane = c
+            .clone()
+            .with_slo(SloConfig { shed_slack: -2.0, ..SloConfig::default() })
+            .slo
+            .unwrap();
+        assert_eq!(sane.shed_slack, 0.0);
         let fused = c.with_fusion().with_step_budget(4096);
         assert!(fused.fusion);
         assert_eq!(fused.max_step_tokens, 4096);

@@ -27,7 +27,11 @@
 //! prompts fork resident pages instead of re-prefilling
 //! (`benches/prefix_cache.rs`), and `ServingConfig::fusion` swaps the
 //! alternating batcher for fused chunked-prefill + decode steps
-//! (`benches/prefill_fusion.rs`).
+//! (`benches/prefill_fusion.rs`). SLO-aware goodput scheduling
+//! (`ServingConfig::slo` + deadline-stamped workloads) rides the same
+//! entry points: EDF admission ordering via `PolicyKind::Goodput`,
+//! overload shedding in the cluster's admission path, and per-class
+//! goodput counters in [`ServiceMetrics`] (`benches/goodput.rs`).
 
 use crate::attention::Variant;
 use crate::cluster::Cluster;
@@ -328,6 +332,43 @@ mod tests {
         assert_eq!(f.duration, p.duration);
         assert_eq!(f.ttft.median(), p.ttft.median());
         assert_eq!(f.output_tokens, p.output_tokens);
+    }
+
+    #[test]
+    fn goodput_without_stamps_is_bit_identical_to_fcfs() {
+        // satellite guarantee: EDF over unstamped requests degenerates to
+        // FCFS (every deadline key is +inf, so the first-index tiebreak
+        // wins), and deadline stamps with `slo: None` are a dead knob —
+        // the armed accounting never runs, so metrics match to the bit.
+        let m = DSV2;
+        let mut reqs = generate(
+            LengthDist::ImbalancedMix { short: 2048, long: 65_536, decode: 256, every: 3 },
+            24,
+            5,
+        );
+        let run = |k: PolicyKind, reqs: &[Request]| {
+            run_benchmark(
+                m,
+                m.variant("gla8"),
+                ServingConfig::with_parallelism(8, 1).with_policy(k),
+                DeviceModel::h100_optimized(),
+                reqs,
+                12,
+            )
+        };
+        let f = run(PolicyKind::Fcfs, &reqs);
+        let g = run(PolicyKind::Goodput, &reqs);
+        assert_eq!(f, g, "EDF without stamps must reduce to FCFS");
+        // stamps alone (slo config off) change nothing either
+        crate::workload::stamp_deadline_classes(
+            &mut reqs,
+            &[crate::workload::DeadlineClass { ttft: 5.0, itl: 0.5, weight: 1.0 }],
+            9,
+        );
+        let stamped = run(PolicyKind::Fcfs, &reqs);
+        assert_eq!(f, stamped, "deadline stamps are inert while slo is off");
+        assert_eq!(stamped.met_deadline, 0);
+        assert_eq!(stamped.shed_requests, 0);
     }
 
     #[test]

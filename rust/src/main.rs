@@ -39,6 +39,18 @@
 //!                                be bit-identical to spec off, token
 //!                                totals must reconcile with the verify
 //!                                counters) — exits 1 on any violation
+//!   goodput [variant] [tp] [rate] [n] [slack]
+//!                                SLO-aware serving under overload: a
+//!                                two-class deadline mix (interactive +
+//!                                batch) at `rate` req/s, FCFS with
+//!                                accounting-only SLO config vs EDF
+//!                                admission + overload shedding at
+//!                                `slack` x the TTFT budget; prints
+//!                                per-class goodput and is gated on the
+//!                                shed-conservation law (completed +
+//!                                shed == submitted), the trace-vs-
+//!                                metrics audit, and bit-exact
+//!                                determinism — exits 1 on any violation
 //!   trace  [rate] [n] [dir]      traced GQA-4 vs GLA-2 run on a 1P+2D
 //!                                disaggregated cluster: writes Chrome-
 //!                                trace `.trace.json` files (Perfetto-
@@ -54,14 +66,15 @@
 //! Run `make artifacts` first for `serve`/`train`.
 
 use gla_serve::cluster::{Cluster, RouterKind};
-use gla_serve::config::{ClusterSpec, ServingConfig, DSV2};
+use gla_serve::config::{ClusterSpec, ServingConfig, SloConfig, DSV2};
 use gla_serve::engine::{run_benchmark_with_stats, SimEngine};
 use gla_serve::hardware::DeviceModel;
 use gla_serve::metrics::SimStats;
 use gla_serve::parallel::{paper_layouts, shard_plan, FabricSpec, LinkTier};
 use gla_serve::sched::{DriveMode, PolicyKind};
 use gla_serve::workload::{
-    generate, generate_open, generate_shared_prefix_open, LengthDist, SharedPrefixSpec,
+    generate, generate_open, generate_open_slo, generate_shared_prefix_open, DeadlineClass,
+    LengthDist, SharedPrefixSpec,
 };
 
 #[cfg(feature = "pjrt")]
@@ -73,7 +86,9 @@ fn policy_arg(args: &[String], i: usize) -> PolicyKind {
     args.get(i)
         .map(|s| {
             PolicyKind::parse(s).unwrap_or_else(|| {
-                eprintln!("unknown policy `{s}` (try: fcfs spf decode-priority priority)");
+                eprintln!(
+                    "unknown policy `{s}` (try: fcfs spf decode-priority priority goodput)"
+                );
                 std::process::exit(2);
             })
         })
@@ -501,6 +516,127 @@ fn main() {
                 "  conservation OK — width-1 bit-identity, token totals, verify ledger"
             );
         }
+        "goodput" => {
+            let variant = args.get(2).cloned().unwrap_or_else(|| "gla2".into());
+            let tp: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(2);
+            let rate: f64 = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(6.0);
+            if rate <= 0.0 || !rate.is_finite() {
+                eprintln!("rate must be a positive req/s value, got {rate}");
+                std::process::exit(2);
+            }
+            let n: usize = args.get(5).and_then(|s| s.parse().ok()).unwrap_or(96);
+            let slack: f64 = args.get(6).and_then(|s| s.parse().ok()).unwrap_or(1.0);
+            if slack < 0.0 || !slack.is_finite() {
+                eprintln!("slack must be a non-negative multiplier, got {slack}");
+                std::process::exit(2);
+            }
+            let m = DSV2;
+            let class_names = ["interactive", "batch"];
+            let classes = [
+                DeadlineClass { ttft: 5.0, itl: 0.25, weight: 1.0 },
+                DeadlineClass { ttft: 60.0, itl: 2.0, weight: 1.0 },
+            ];
+            let reqs = generate_open_slo(
+                LengthDist::Fixed { prompt: 8192, decode: 512 },
+                n,
+                42,
+                rate,
+                &classes,
+            );
+            let run = |policy: PolicyKind, slo: SloConfig| {
+                let serving = ServingConfig::with_parallelism(tp, 1)
+                    .open_loop()
+                    .with_policy(policy)
+                    .with_slo(slo)
+                    .with_trace();
+                let mut eng = SimEngine::from_config(
+                    m,
+                    m.variant(&variant),
+                    serving,
+                    DeviceModel::h100_serving(),
+                );
+                eng.submit(&reqs);
+                eng.run();
+                let stats = eng.sim_stats();
+                let tracer = eng.take_trace().expect("with_trace arms the tracer");
+                (eng.cluster.metrics, tracer, stats)
+            };
+            let base_cfg = SloConfig { shed: false, ..SloConfig::default() };
+            let slo_cfg = SloConfig { shed_slack: slack, ..SloConfig::default() };
+            let (base, base_tr, base_stats) = run(PolicyKind::Fcfs, base_cfg);
+            let (slo, slo_tr, slo_stats) = run(PolicyKind::Goodput, slo_cfg);
+            // gate 1: the accounting-only baseline never sheds and
+            // completes the full workload
+            if base.shed_requests != 0 || base.e2e.len() != n {
+                eprintln!(
+                    "SHED CONSERVATION FAILED (fcfs): shed {} completed {} of {n} \
+                     with shedding disarmed",
+                    base.shed_requests,
+                    base.e2e.len()
+                );
+                std::process::exit(1);
+            }
+            // gate 2: the conservation law — every submitted request
+            // either retires or sheds, exactly once
+            if slo.e2e.len() as u64 + slo.shed_requests != n as u64 {
+                eprintln!(
+                    "SHED CONSERVATION FAILED (slo): completed {} + shed {} != {n}",
+                    slo.e2e.len(),
+                    slo.shed_requests
+                );
+                std::process::exit(1);
+            }
+            // gate 3: the trace-derived aggregates reconcile with the
+            // service metrics for both runs (shed counts + verdicts)
+            for (label, tr, met) in
+                [("fcfs", &base_tr, &base), ("slo", &slo_tr, &slo)]
+            {
+                if let Err(e) = tr.audit().check(met) {
+                    eprintln!("TRACE AUDIT FAILED ({label}): {e}");
+                    std::process::exit(1);
+                }
+            }
+            // gate 4: shed decisions are a pure function of the seed
+            let (again, _, _) = run(PolicyKind::Goodput, slo_cfg);
+            if again != slo {
+                eprintln!("DETERMINISM FAILED: repeated slo run diverged");
+                std::process::exit(1);
+            }
+            println!(
+                "{variant} TP{tp} {rate:.2} req/s, 8K/512 open loop, n {n}, \
+                 {} deadline classes, shed slack {slack:.2}:",
+                classes.len()
+            );
+            for (label, met, tr, stats) in [
+                ("fcfs", base, base_tr, base_stats),
+                ("slo ", slo, slo_tr, slo_stats),
+            ] {
+                let mut met = met;
+                println!(
+                    "  {label}: completed {} shed {} | goodput {:.3} req/s \
+                     ({}/{} deadlines met) | ttft p50 {:.2}s | itl p99 {:.1}ms",
+                    met.e2e.len(),
+                    met.shed_requests,
+                    met.goodput(),
+                    met.met_deadline,
+                    n,
+                    met.ttft.median(),
+                    met.itl.p99() * 1e3,
+                );
+                for (class, (met_both, retired)) in tr.audit().per_class {
+                    let name =
+                        class_names.get(class as usize).copied().unwrap_or("?");
+                    println!(
+                        "    class {class} ({name}): {met_both}/{retired} retired \
+                         met both targets"
+                    );
+                }
+                print_sim_stats(&stats);
+            }
+            println!(
+                "  conservation OK — shed ledger, trace audit, determinism"
+            );
+        }
         "trace" => {
             let rate: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(2.0);
             if rate <= 0.0 || !rate.is_finite() {
@@ -613,7 +749,7 @@ fn main() {
         other => {
             eprintln!(
                 "unknown command `{other}` (try: info serve train sim qps disagg prefix \
-                 fusion spec trace)"
+                 fusion spec goodput trace)"
             );
             std::process::exit(2);
         }

@@ -195,6 +195,23 @@ pub struct ServiceMetrics {
     /// speculative decoding: verify steps completed (one per decoding
     /// sequence per formed step at verify width > 1); 0 otherwise
     pub verify_steps: u64,
+    /// goodput accounting (all four stay 0 unless `ServingConfig::slo`
+    /// is armed *and* the workload stamps deadline classes — plain runs
+    /// never touch them, which keeps slo-off runs bit-identical under
+    /// the derived `PartialEq`): completed deadline-stamped requests
+    /// whose TTFT met its target
+    pub met_ttft: u64,
+    /// completed deadline-stamped requests whose worst inter-token gap
+    /// met the ITL target (vacuously met with a single output token)
+    pub met_itl: u64,
+    /// completed deadline-stamped requests that met both targets — the
+    /// numerator of [`ServiceMetrics::goodput`]
+    pub met_deadline: u64,
+    /// requests dropped by overload control while still queued: they
+    /// were never admitted at drop time, so they hold no pages or
+    /// reservations and contribute no latency samples. Conservation is
+    /// `completed + shed == submitted` (the property suite pins it).
+    pub shed_requests: u64,
 }
 
 impl ServiceMetrics {
@@ -215,6 +232,18 @@ impl ServiceMetrics {
             0.0
         } else {
             self.accepted_tokens as f64 / self.verify_steps as f64
+        }
+    }
+
+    /// Goodput: requests that met their full deadline (TTFT *and* ITL
+    /// targets) per second of run — the paper's online-serving
+    /// advantage restated as requests-meeting-deadlines. 0 with SLO
+    /// accounting off (no deadline-stamped completions).
+    pub fn goodput(&self) -> f64 {
+        if self.duration <= 0.0 {
+            0.0
+        } else {
+            self.met_deadline as f64 / self.duration
         }
     }
 
@@ -336,6 +365,23 @@ mod tests {
         assert_eq!(m.mean_accepted_per_step(), 0.0);
         let m = ServiceMetrics { accepted_tokens: 30, verify_steps: 12, ..Default::default() };
         assert_eq!(m.mean_accepted_per_step(), 2.5);
+    }
+
+    #[test]
+    fn goodput_guards_zero_duration_and_counts_full_deadlines() {
+        let m = ServiceMetrics::default();
+        assert_eq!(m.goodput(), 0.0);
+        let m = ServiceMetrics {
+            met_ttft: 9,
+            met_itl: 7,
+            met_deadline: 6,
+            shed_requests: 3,
+            duration: 2.0,
+            ..Default::default()
+        };
+        assert_eq!(m.goodput(), 3.0);
+        // the counters participate in the bit-identity contract
+        assert_ne!(m, ServiceMetrics { duration: 2.0, ..Default::default() });
     }
 
     #[test]

@@ -183,6 +183,25 @@ impl Scheduler {
         let mut tokens_left = self
             .max_step_tokens
             .saturating_sub(decode.len() * self.spec_q);
+        // SLO prefill caps (ServingConfig::slo): both are deadline-gated
+        // — an armed scheduler over a workload with no stamps must plan
+        // bit-identically to an un-armed one, so the caps only engage
+        // while a deadline-stamped sequence is actually live. The hard
+        // width cap (prefill replicas) engages on any stamped live seq;
+        // the ITL budget only while a stamped sequence is *decoding* —
+        // that is the stream whose inter-token gap bulk prefill would
+        // stretch past its Deadline::itl.
+        if self.slo_prefill_cap > 0 && self.seqs.iter().any(|s| s.req.deadline.is_some()) {
+            tokens_left = tokens_left.min(self.slo_prefill_cap);
+        }
+        if self.itl_prefill_budget > 0
+            && self
+                .seqs
+                .iter()
+                .any(|s| s.is_decoding() && s.req.deadline.is_some())
+        {
+            tokens_left = tokens_left.min(self.itl_prefill_budget);
+        }
         // reserve the decode half's own page needs before budgeting
         // prefill: a decoding sequence sitting exactly at a page boundary
         // takes a fresh page for its next token(s) — up to min(q,
@@ -437,6 +456,52 @@ mod tests {
         // seq 1 prefills in one chunk, then strict alternation with seq
         // 2's two chunks, then pure decode to drain
         assert_eq!(kinds, vec!['P', 'D', 'P', 'D', 'P', 'D', 'D']);
+    }
+
+    #[test]
+    fn slo_prefill_caps_engage_only_with_deadline_stamps() {
+        let mut m = ServiceMetrics::default();
+        // one decoding seq (stamped or not) + one 16-token prompt
+        let mk = |slo: Option<(usize, usize)>, stamp: bool| {
+            let mut s = fused(64, 4, 8, 16);
+            if let Some((itl_budget, cap)) = slo {
+                s = s.with_slo(itl_budget, cap);
+            }
+            let first = if stamp {
+                Request::new(1, 4, 4).with_deadline(0, 1.0, 0.05)
+            } else {
+                Request::new(1, 4, 4)
+            };
+            s.admit(first, 0.0, 0.0, &mut m);
+            let _ = s.complete_prefill(0, 4, 1.0, &mut m); // now decoding
+            s.admit(Request::new(2, 16, 2), 0.0, 1.0, &mut m);
+            s
+        };
+        let legacy = mk(None, false).plan();
+        assert_eq!(legacy, Work::Mixed { decode: vec![0], prefill: vec![(1, 8)] });
+        // armed + stamped decoding seq: the ITL budget clamps prefill
+        assert_eq!(
+            mk(Some((2, 0)), true).plan(),
+            Work::Mixed { decode: vec![0], prefill: vec![(1, 2)] }
+        );
+        // armed but nothing stamped: bit-identical to the legacy plan
+        assert_eq!(mk(Some((2, 0)), false).plan(), legacy);
+        // the hard width cap engages on any stamped live seq
+        assert_eq!(
+            mk(Some((0, 4)), true).plan(),
+            Work::Mixed { decode: vec![0], prefill: vec![(1, 4)] }
+        );
+        assert_eq!(mk(Some((0, 4)), false).plan(), legacy);
+        // the ITL budget needs a *decoding* stamped seq: a stamped
+        // prefill-only workload plans at full chunk width
+        let mut s = fused(64, 4, 8, 16).with_slo(2, 0);
+        s.admit(
+            Request::new(3, 16, 2).with_deadline(0, 1.0, 0.05),
+            0.0,
+            0.0,
+            &mut m,
+        );
+        assert_eq!(s.plan(), Work::PrefillChunk { idx: 0, chunk: 8 });
     }
 
     #[test]

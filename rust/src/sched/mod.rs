@@ -109,6 +109,16 @@ pub struct SeqState {
     pub start_t: f64,
     pub first_token_t: Option<f64>,
     pub last_token_t: f64,
+    /// worst (largest) inter-token gap seen so far, in seconds — the
+    /// same samples `ServiceMetrics::itl` records, folded to a running
+    /// max per sequence. Retire-time goodput accounting compares it to
+    /// `Deadline::itl`: an SLO cares about the worst stall a client
+    /// saw, not the mean. 0.0 until the second token (a single-token
+    /// budget trivially meets any ITL target). Travels with the state
+    /// across preemption re-prefill resets (preemption drops the state
+    /// entirely and re-admits, so the max restarts — matching the ITL
+    /// histogram, which also only sees post-readmission samples).
+    pub worst_itl: f64,
 }
 
 impl SeqState {
@@ -196,6 +206,20 @@ pub struct Scheduler {
     /// re-checks the same inequality every pump, and the O(live seqs)
     /// sum only changes when the epoch moves
     future_cache: Cell<Option<(u64, AdmitScope, usize)>>,
+    /// SLO accounting armed ([`Scheduler::with_slo`]): retire folds each
+    /// deadline-stamped sequence into the goodput counters
+    /// (`met_ttft`/`met_itl`/`met_deadline`). Off = those counters stay
+    /// 0 and retire is the bit-identical legacy path.
+    pub(crate) slo_armed: bool,
+    /// fused-planner prefill token cap while any *deadline-stamped*
+    /// sequence is decoding (`SloConfig::itl_prefill_budget`); 0 = off.
+    /// Only read when `fusion` is on — the alternating batcher already
+    /// strictly alternates, so decode can't be starved there.
+    pub(crate) itl_prefill_budget: usize,
+    /// hard fused-planner prefill-width cap (`SloConfig::prefill_cap`);
+    /// the cluster wires it only on `Role::Prefill` replicas. Gated on
+    /// any live deadline-stamped sequence, like the ITL budget; 0 = off.
+    pub(crate) slo_prefill_cap: usize,
     /// reusable plan-building buffers (see [`PlanScratch`])
     plan_scratch: RefCell<PlanScratch>,
 }
@@ -221,6 +245,9 @@ impl Scheduler {
             align_chunks: false,
             spec_q: 1,
             accept_rate: 1.0,
+            slo_armed: false,
+            itl_prefill_budget: 0,
+            slo_prefill_cap: 0,
             reserved: Vec::new(),
             seq_epoch: 0,
             probes: Cell::new(0),
@@ -281,6 +308,26 @@ impl Scheduler {
         };
         let remaining = s.req.decode_len.saturating_sub(produced).max(1);
         spec_accepted(s.req.id, produced, self.spec_q, self.accept_rate).min(remaining)
+    }
+
+    /// Arm SLO goodput accounting and (optionally) the SLO batcher caps:
+    /// retire folds every deadline-stamped sequence into
+    /// `ServiceMetrics::{met_ttft, met_itl, met_deadline}`, and the
+    /// fused planner honors the two prefill caps (both 0 = accounting
+    /// only). With no deadline stamped anywhere, every path this arms
+    /// is bit-identical to the un-armed scheduler — the caps are gated
+    /// on a live stamped sequence and the counters on a stamped retiree
+    /// (the SLO inertness property pins this).
+    pub fn with_slo(mut self, itl_prefill_budget: usize, prefill_cap: usize) -> Self {
+        self.slo_armed = true;
+        self.itl_prefill_budget = itl_prefill_budget;
+        self.slo_prefill_cap = prefill_cap;
+        self
+    }
+
+    /// Is SLO goodput accounting armed ([`Scheduler::with_slo`])?
+    pub fn slo_enabled(&self) -> bool {
+        self.slo_armed
     }
 
     /// Enable decode-aware chunk alignment in the fused planner: a
@@ -476,6 +523,7 @@ impl Scheduler {
             start_t,
             first_token_t: None,
             last_token_t: now,
+            worst_itl: 0.0,
         });
     }
 
@@ -542,9 +590,25 @@ impl Scheduler {
             radix.remove_seq(seq_id);
         }
         metrics.e2e.record(now - state.start_t);
-        metrics
-            .ttft
-            .record(state.first_token_t.unwrap_or(now) - state.start_t);
+        let ttft = state.first_token_t.unwrap_or(now) - state.start_t;
+        metrics.ttft.record(ttft);
+        // goodput accounting: only when armed AND stamped, so an armed
+        // scheduler over an unstamped workload leaves the counters at 0
+        if self.slo_armed {
+            if let Some(d) = state.req.deadline {
+                let ok_ttft = ttft <= d.ttft;
+                let ok_itl = state.worst_itl <= d.itl;
+                if ok_ttft {
+                    metrics.met_ttft += 1;
+                }
+                if ok_itl {
+                    metrics.met_itl += 1;
+                }
+                if ok_ttft && ok_itl {
+                    metrics.met_deadline += 1;
+                }
+            }
+        }
         FinishedSeq { state, pages }
     }
 
@@ -580,7 +644,11 @@ impl Scheduler {
                 Phase::Decode { produced } => produced + emit,
                 _ => unreachable!("decode step on non-decoding seq"),
             };
-            metrics.itl.record(now - s.last_token_t);
+            let gap = now - s.last_token_t;
+            metrics.itl.record(gap);
+            if gap > s.worst_itl {
+                s.worst_itl = gap;
+            }
             s.last_token_t = now;
             metrics.output_tokens += emit as u64;
             if self.spec_q > 1 {
@@ -1268,6 +1336,39 @@ mod tests {
         assert_eq!(m.output_tokens, 3);
         assert_eq!(m.accepted_tokens, 0);
         assert_eq!(m.verify_steps, 0);
+    }
+
+    #[test]
+    fn slo_accounting_tracks_worst_itl_and_folds_at_retire() {
+        let mut m = ServiceMetrics::default();
+        let mut s = sched(8, 16, 32).with_slo(0, 0);
+        // ttft budget 2.5 met (first token at 1.0); itl budget 1.5
+        // missed by the 2.0-second gap below
+        s.admit(Request::new(1, 16, 3).with_deadline(2, 2.5, 1.5), 0.0, 0.0, &mut m);
+        let _ = s.complete_prefill(0, 16, 1.0, &mut m); // first token at 1.0
+        s.complete_decode(&[0], 3.0, &mut m); // gap 2.0
+        assert_eq!(s.seqs()[0].worst_itl, 2.0);
+        let fin = s.complete_decode(&[0], 3.5, &mut m); // gap 0.5, retires
+        assert_eq!(fin.len(), 1);
+        assert_eq!(fin[0].state.worst_itl, 2.0, "running max, not the last gap");
+        assert_eq!((m.met_ttft, m.met_itl, m.met_deadline), (1, 0, 0));
+        // both budgets met: every counter advances
+        s.admit(Request::new(4, 16, 2).with_deadline(0, 10.0, 10.0), 6.0, 6.0, &mut m);
+        let _ = s.complete_prefill(0, 16, 7.0, &mut m);
+        assert_eq!(s.complete_decode(&[0], 7.5, &mut m).len(), 1);
+        assert_eq!((m.met_ttft, m.met_itl, m.met_deadline), (2, 1, 1));
+        // an unstamped request through the same armed scheduler: no fold
+        s.admit(Request::new(2, 16, 2), 8.0, 8.0, &mut m);
+        let _ = s.complete_prefill(0, 16, 9.0, &mut m);
+        assert_eq!(s.complete_decode(&[0], 9.5, &mut m).len(), 1);
+        assert_eq!((m.met_ttft, m.met_itl, m.met_deadline), (2, 1, 1));
+        // stamped but un-armed: the counters never move
+        let mut m2 = ServiceMetrics::default();
+        let mut u = sched(8, 16, 32);
+        u.admit(Request::new(3, 16, 1).with_deadline(0, 10.0, 10.0), 0.0, 0.0, &mut m2);
+        assert!(u.complete_prefill(0, 16, 1.0, &mut m2).is_some());
+        assert_eq!((m2.met_ttft, m2.met_itl, m2.met_deadline), (0, 0, 0));
+        assert!(!u.slo_enabled() && s.slo_enabled());
     }
 
     #[test]

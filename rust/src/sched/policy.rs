@@ -181,6 +181,67 @@ impl SchedPolicy for PriorityFirst {
     }
 }
 
+/// Goodput (earliest-deadline-first): admit the queued request whose
+/// absolute TTFT deadline (`send time + Deadline::ttft`) comes first,
+/// and prefill the live sequence whose deadline is nearest. Requests
+/// without a deadline stamp sort after every stamped one, ties go to
+/// the earliest queue/candidate position — so with nothing stamped
+/// every decision reduces to "take the first", which is exactly
+/// [`Fcfs`] (the inertness suite pins this, mirroring how
+/// [`PriorityFirst`] reduces at priority 0). EDF orders *who goes
+/// next*; dropping requests that can no longer meet their budget is
+/// the cluster's shed predicate (`ServingConfig::slo`), which composes
+/// with any policy.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GoodputPolicy;
+
+/// First index (queue/candidate order) with the strictly earliest
+/// absolute deadline (`f64::INFINITY` for unstamped entries).
+fn first_min_by_deadline(deadlines: impl Iterator<Item = f64>) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, d) in deadlines.enumerate() {
+        match best {
+            Some((_, bd)) if bd <= d => {}
+            _ => best = Some((i, d)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+impl SchedPolicy for GoodputPolicy {
+    fn name(&self) -> &'static str {
+        "goodput"
+    }
+
+    fn pick_waiting(&self, queued: &[QueuedReq]) -> Option<usize> {
+        first_min_by_deadline(
+            queued
+                .iter()
+                .map(|(r, send)| r.deadline.map_or(f64::INFINITY, |d| send + d.ttft)),
+        )
+    }
+
+    fn pick_prefill(&self, seqs: &[SeqState], candidates: &[usize]) -> Option<usize> {
+        first_min_by_deadline(candidates.iter().map(|&i| {
+            let s = &seqs[i];
+            s.req.deadline.map_or(f64::INFINITY, |d| s.start_t + d.ttft)
+        }))
+        .map(|k| candidates[k])
+    }
+
+    fn decode_first(&self, alternate: bool) -> bool {
+        alternate
+    }
+
+    fn pick_import(&self, arrived: &[&SeqState]) -> Option<usize> {
+        first_min_by_deadline(
+            arrived
+                .iter()
+                .map(|s| s.req.deadline.map_or(f64::INFINITY, |d| s.start_t + d.ttft)),
+        )
+    }
+}
+
 /// Decode-priority: whenever any sequence can decode, decode — prefill
 /// chunks only run on steps with no ready decode batch. Minimizes ITL
 /// (tokens already streaming never wait behind a prefill chunk) at the
@@ -218,6 +279,7 @@ pub enum PolicyKind {
     ShortestPromptFirst,
     DecodePriority,
     Priority,
+    Goodput,
 }
 
 impl PolicyKind {
@@ -227,6 +289,7 @@ impl PolicyKind {
             PolicyKind::ShortestPromptFirst => Box::new(ShortestPromptFirst),
             PolicyKind::DecodePriority => Box::new(DecodePriority),
             PolicyKind::Priority => Box::new(PriorityFirst),
+            PolicyKind::Goodput => Box::new(GoodputPolicy),
         }
     }
 
@@ -236,6 +299,7 @@ impl PolicyKind {
             PolicyKind::ShortestPromptFirst => "spf",
             PolicyKind::DecodePriority => "decode-priority",
             PolicyKind::Priority => "priority",
+            PolicyKind::Goodput => "goodput",
         }
     }
 
@@ -247,16 +311,18 @@ impl PolicyKind {
             }
             "decode-priority" | "decode" => Some(PolicyKind::DecodePriority),
             "priority" => Some(PolicyKind::Priority),
+            "goodput" | "edf" | "slo" => Some(PolicyKind::Goodput),
             _ => None,
         }
     }
 
-    pub fn all() -> [PolicyKind; 4] {
+    pub fn all() -> [PolicyKind; 5] {
         [
             PolicyKind::Fcfs,
             PolicyKind::ShortestPromptFirst,
             PolicyKind::DecodePriority,
             PolicyKind::Priority,
+            PolicyKind::Goodput,
         ]
     }
 }
@@ -291,6 +357,7 @@ mod tests {
             start_t: 0.0,
             first_token_t: None,
             last_token_t: 0.0,
+            worst_itl: 0.0,
         };
         // seq 0: 900 remaining; seq 1: 100 remaining; seq 2: 4000 remaining
         let seqs = vec![mk(0, 1000, 100), mk(1, 200, 100), mk(2, 4000, 0)];
@@ -337,6 +404,7 @@ mod tests {
             start_t: 0.0,
             first_token_t: None,
             last_token_t: 0.0,
+            worst_itl: 0.0,
         };
         let seqs = vec![mk(0, 0), mk(1, 3), mk(2, 3)];
         let cands = vec![0, 1, 2];
@@ -360,6 +428,7 @@ mod tests {
             start_t: 0.0,
             first_token_t: Some(1.0),
             last_token_t: 1.0,
+            worst_itl: 0.0,
         };
         let arrived_owned = vec![mk(0, 0), mk(1, 0), mk(2, 1)];
         let arrived: Vec<&SeqState> = arrived_owned.iter().collect();
@@ -376,6 +445,68 @@ mod tests {
         assert_eq!(PriorityFirst.pick_import(&flat), Some(0));
         assert_eq!(Fcfs.pick_import(&[]), None);
         assert_eq!(PriorityFirst.pick_import(&[]), None);
+    }
+
+    #[test]
+    fn goodput_is_edf_and_reduces_to_fcfs_unstamped() {
+        // absolute deadline = send + ttft budget: id 1 (5+1=6) beats
+        // id 0 (0+10=10) despite arriving later; unstamped id 2 is last
+        let q = vec![
+            (Request::new(0, 100, 16).with_deadline(0, 10.0, 1.0), 0.0),
+            (Request::new(1, 100, 16).with_deadline(1, 1.0, 1.0), 5.0),
+            (Request::new(2, 100, 16), 2.0),
+        ];
+        assert_eq!(GoodputPolicy.pick_waiting(&q), Some(1));
+        assert_eq!(GoodputPolicy.pick_waiting(&[]), None);
+        // equal deadlines tie to the earlier queue position
+        let tied = vec![
+            (Request::new(3, 10, 1).with_deadline(0, 2.0, 1.0), 1.0),
+            (Request::new(4, 10, 1).with_deadline(0, 2.0, 1.0), 1.0),
+        ];
+        assert_eq!(GoodputPolicy.pick_waiting(&tied), Some(0));
+        // nothing stamped -> identical decision to Fcfs
+        let flat = vec![
+            (Request::new(5, 10, 1), 0.5),
+            (Request::new(6, 10, 1), 1.5),
+        ];
+        assert_eq!(GoodputPolicy.pick_waiting(&flat), Fcfs.pick_waiting(&flat));
+        assert_eq!(GoodputPolicy.pick_waiting(&flat), Some(0));
+        assert!(!GoodputPolicy.decode_first(false));
+        assert!(GoodputPolicy.decode_first(true));
+    }
+
+    #[test]
+    fn goodput_prefill_and_import_follow_deadlines() {
+        let mk = |id: usize, start: f64, dl: Option<(f64, f64)>| SeqState {
+            req: match dl {
+                Some((ttft, itl)) => Request::new(id, 64, 8).with_deadline(0, ttft, itl),
+                None => Request::new(id, 64, 8),
+            },
+            phase: Phase::Prefill { done: 0 },
+            start_t: start,
+            first_token_t: None,
+            last_token_t: start,
+            worst_itl: 0.0,
+        };
+        // seq 0 unstamped, seq 1 deadline at 0+4, seq 2 deadline at 1+1
+        let seqs = vec![
+            mk(0, 0.0, None),
+            mk(1, 0.0, Some((4.0, 1.0))),
+            mk(2, 1.0, Some((1.0, 1.0))),
+        ];
+        let cands = vec![0, 1, 2];
+        assert_eq!(GoodputPolicy.pick_prefill(&seqs, &cands), Some(2));
+        // unstamped everywhere reduces to Fcfs's "first candidate"
+        let flat = vec![mk(7, 0.0, None), mk(8, 0.0, None)];
+        assert_eq!(
+            GoodputPolicy.pick_prefill(&flat, &[0, 1]),
+            Fcfs.pick_prefill(&flat, &[0, 1])
+        );
+        let arrived: Vec<&SeqState> = seqs.iter().collect();
+        assert_eq!(GoodputPolicy.pick_import(&arrived), Some(2));
+        let flat_refs: Vec<&SeqState> = flat.iter().collect();
+        assert_eq!(GoodputPolicy.pick_import(&flat_refs), Some(0));
+        assert_eq!(GoodputPolicy.pick_import(&[]), None);
     }
 
     #[test]

@@ -16,7 +16,10 @@
 //! slot index. The engine continuously refills free slots from the wait
 //! queue (prefill batch), splices the prefilled cache rows into the live
 //! decode cache, and runs one fused decode step per iteration — Python is
-//! never on this path.
+//! never on this path. Submission is closed-loop by default (`submit`
+//! stamps the wall clock); [`RealEngine::submit_open`] instead honors a
+//! pre-stamped open-loop arrival schedule — the live counterpart of the
+//! simulator's `DriveMode::Open` — replayed in real time.
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -157,6 +160,10 @@ pub struct RealEngine<M: StepModel> {
     /// output tokens per request id, in emission order — the completed-
     /// token streams the fusion inertness test compares across schedules
     emitted: HashMap<usize, Vec<i32>>,
+    /// request ids in the order the scheduler admitted them — the live
+    /// observable the open-loop parity test compares against a
+    /// virtual-time replay of the same arrival schedule
+    admitted_order: Vec<usize>,
     t0: Instant,
     pub metrics: ServiceMetrics,
     pub steps: u64,
@@ -185,6 +192,7 @@ impl<M: StepModel> RealEngine<M> {
             speculative: false,
             record_transcripts: false,
             emitted: HashMap::new(),
+            admitted_order: Vec::new(),
             model,
             t0: Instant::now(),
             metrics: ServiceMetrics::default(),
@@ -230,7 +238,27 @@ impl<M: StepModel> RealEngine<M> {
     /// the artifact's lowered shapes (prompt to `prefill_t`, total to
     /// `max_len`), matching what the fixed-shape kernels can execute.
     pub fn submit(&mut self, req: Request) {
-        let mut req = req;
+        let mut req = self.clamp(req);
+        req.arrival_t = self.now();
+        self.queue.submit(&[req]);
+    }
+
+    /// Open-loop submission: honor the request's pre-stamped `arrival_t`
+    /// (seconds relative to engine construction) instead of stamping the
+    /// wall clock — the live counterpart of the simulator's
+    /// `DriveMode::Open`. The wait queue holds the request until the wall
+    /// clock crosses its stamp, so a `workload::generate_open` schedule
+    /// replays here in real time with the exact arrival offsets the
+    /// simulator consumes in virtual time. Submit in arrival order
+    /// (generators emit it); lengths are clamped as in
+    /// [`RealEngine::submit`].
+    pub fn submit_open(&mut self, req: Request) {
+        let req = self.clamp(req);
+        self.queue.submit(&[req]);
+    }
+
+    /// Clamp a request's lengths to the model's lowered shapes.
+    fn clamp(&self, mut req: Request) -> Request {
         // the prompt must fit the prefill tile AND leave at least one
         // decode position of cache room (the lowered shapes guarantee
         // nothing about prefill_t vs max_len, so clamp against both)
@@ -242,8 +270,14 @@ impl<M: StepModel> RealEngine<M> {
         req.prompt_len = req.prompt_len.clamp(1, max_prompt);
         let decode_cap = (self.model.max_len() - 1).saturating_sub(req.prompt_len).max(1);
         req.decode_len = req.decode_len.clamp(1, decode_cap);
-        req.arrival_t = self.now();
-        self.queue.submit(&[req]);
+        req
+    }
+
+    /// Request ids in scheduler-admission order — what the open-loop
+    /// parity test compares against a virtual-time replay of the same
+    /// Poisson schedule.
+    pub fn admission_order(&self) -> &[usize] {
+        &self.admitted_order
     }
 
     pub fn idle(&self) -> bool {
@@ -278,6 +312,7 @@ impl<M: StepModel> RealEngine<M> {
                 break; // all slots occupied: head-of-line wait
             }
             self.queue.remove(0);
+            self.admitted_order.push(req.id);
             self.sched.admit(req, send_t, now, &mut self.metrics);
         }
         let pre: Vec<usize> = self
@@ -963,6 +998,54 @@ mod tests {
         eng.run_to_completion().unwrap();
         assert_eq!(eng.metrics.e2e.len(), 2);
         assert_eq!(eng.metrics.output_tokens, 1 + 3); // exactly the budgets
+        let pool = eng.sched.pool();
+        pool.check_invariants().unwrap();
+        assert_eq!(pool.pages_free(), pool.pages_total());
+    }
+
+    /// Open-loop parity with the simulator: [`RealEngine::submit_open`]
+    /// honors a `generate_open` Poisson schedule's pre-stamped arrivals,
+    /// so the live engine admits requests in exactly the order a
+    /// virtual-time replay of the same seed's schedule admits them. The
+    /// comparison is on admission *order*, which both sides derive purely
+    /// from the stamps (the wait queue releases arrivals in stamp order
+    /// and admission is head-of-line), so wall-clock jitter cannot
+    /// perturb it.
+    #[test]
+    fn open_loop_mock_serving_matches_simulator_arrival_schedule() {
+        use crate::workload::{generate_open, LengthDist};
+        let n = 9usize;
+        // 200 req/s: the whole schedule spans a few tens of wall-clock ms
+        let reqs = generate_open(LengthDist::Fixed { prompt: 8, decode: 3 }, n, 11, 200.0);
+        assert!(reqs.windows(2).all(|w| w[0].arrival_t < w[1].arrival_t));
+
+        // virtual-time replay: the same WaitQueue::open the simulator
+        // drives, its clock jumped to each arrival instant
+        let mut q = WaitQueue::open();
+        q.submit(&reqs);
+        let mut expect = Vec::new();
+        while let Some(t) = q.next_arrival() {
+            q.release(t, 0);
+            while q.n_queued() > 0 {
+                expect.push(q.remove(0).0.id);
+            }
+        }
+        assert_eq!(expect.len(), n);
+
+        // live replay: the wall clock crosses the same stamps
+        let mut eng = RealEngine::new(MockModel::new()).unwrap();
+        for r in &reqs {
+            eng.submit_open(*r);
+        }
+        eng.run_to_completion().unwrap();
+        assert_eq!(eng.metrics.e2e.len(), n);
+        assert_eq!(eng.metrics.queue_wait.len(), n);
+        assert_eq!(eng.metrics.output_tokens, (n * 3) as u64);
+        assert_eq!(
+            eng.admission_order(),
+            &expect[..],
+            "live open-loop admission diverged from the virtual-time schedule"
+        );
         let pool = eng.sched.pool();
         pool.check_invariants().unwrap();
         assert_eq!(pool.pages_free(), pool.pages_total());

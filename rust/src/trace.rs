@@ -131,9 +131,35 @@ pub enum TraceEvent {
         kv_tokens: usize,
         bytes: u64,
     },
+    /// overload control dropped the request from the wait queue (it was
+    /// never admitted at drop time, so it holds no pages and emits no
+    /// latency samples); `class` is its deadline class
+    Shed { id: u64, t: f64, class: u8 },
     /// the request completed; `e2e`/`ttft` reproduce the scheduler's own
-    /// sample expressions bit-for-bit (the audit depends on this)
-    Retire { id: u64, t: f64, replica: usize, e2e: f64, ttft: f64 },
+    /// sample expressions bit-for-bit (the audit depends on this).
+    /// `verdict` carries the goodput annotation — present exactly when
+    /// the tracer is SLO-armed and the request carried a deadline, so
+    /// slo-off traces stay byte-identical to the seed's
+    Retire {
+        id: u64,
+        t: f64,
+        replica: usize,
+        e2e: f64,
+        ttft: f64,
+        verdict: Option<DeadlineVerdict>,
+    },
+}
+
+/// Goodput annotation on a [`TraceEvent::Retire`]: the deadline class
+/// and whether the TTFT / worst-inter-token-gap targets were met. The
+/// flags reproduce the scheduler's own accounting expressions on the
+/// same values, so [`TraceAudit::check`]'s counter reconciliation is
+/// exact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeadlineVerdict {
+    pub class: u8,
+    pub met_ttft: bool,
+    pub met_itl: bool,
 }
 
 impl TraceEvent {
@@ -201,6 +227,14 @@ pub struct TraceAudit {
     pub preemptions: u64,
     pub accepted_tokens: u64,
     pub verify_steps: u64,
+    pub shed_requests: u64,
+    pub met_ttft: u64,
+    pub met_itl: u64,
+    pub met_deadline: u64,
+    /// per deadline class: `(requests meeting both targets, requests
+    /// retired)` — the per-class goodput split the CLI reports; the
+    /// class totals sum to the global counters by construction
+    pub per_class: std::collections::BTreeMap<u8, (u64, u64)>,
 }
 
 impl TraceAudit {
@@ -228,6 +262,10 @@ impl TraceAudit {
             ("preemptions", self.preemptions, m.preemptions),
             ("accepted_tokens", self.accepted_tokens, m.accepted_tokens),
             ("verify_steps", self.verify_steps, m.verify_steps),
+            ("shed_requests", self.shed_requests, m.shed_requests),
+            ("met_ttft", self.met_ttft, m.met_ttft),
+            ("met_itl", self.met_itl, m.met_itl),
+            ("met_deadline", self.met_deadline, m.met_deadline),
         ] {
             if mine != theirs {
                 errs.push(format!("{name}: trace {mine} vs metrics {theirs}"));
@@ -253,11 +291,23 @@ pub struct Tracer {
     /// ids whose `Arrival`/`Queued` pair was already emitted, so a
     /// preempted-and-readmitted request doesn't arrive twice
     seen: std::collections::HashSet<u64>,
+    /// mirrors the scheduler's SLO-accounting armed state: retire
+    /// events only carry a [`DeadlineVerdict`] when set, so slo-off
+    /// traces stay byte-identical to the seed's (and the audit's met
+    /// counters reconcile with the metrics' zeros)
+    slo: bool,
 }
 
 impl Tracer {
     pub fn new(replica_labels: Vec<String>) -> Self {
         Tracer { replicas: replica_labels, ..Tracer::default() }
+    }
+
+    /// Arm goodput annotations (the cluster sets this iff
+    /// `ServingConfig::slo` is armed).
+    pub fn with_slo(mut self) -> Self {
+        self.slo = true;
+        self
     }
 
     pub fn events(&self) -> &[TraceEvent] {
@@ -340,6 +390,17 @@ impl Tracer {
         self.events.push(TraceEvent::Preempt { id, t, replica });
     }
 
+    /// record an overload-control drop; a request shed before its first
+    /// admission still gets its `Arrival`/`Queued` pair here, so flows
+    /// and the queue-depth series stay balanced
+    pub fn shed(&mut self, id: u64, arrival_t: f64, queued_t: f64, now: f64, class: u8) {
+        if self.seen.insert(id) {
+            self.events.push(TraceEvent::Arrival { id, t: arrival_t });
+            self.events.push(TraceEvent::Queued { id, t: queued_t });
+        }
+        self.events.push(TraceEvent::Shed { id, t: now, class });
+    }
+
     pub fn export(&mut self, id: u64, t: f64, src: usize, kv_tokens: usize) {
         self.events.push(TraceEvent::Export { id, t, src, kv_tokens });
     }
@@ -377,12 +438,26 @@ impl Tracer {
     /// audit's multiset comparison is bit-for-bit
     pub fn retire_finished(&mut self, replica: usize, now: f64, fin: &FinishedSeq) {
         let s = &fin.state;
+        let ttft = s.first_token_t.unwrap_or(now) - s.start_t;
+        // the verdict reproduces `Scheduler::retire`'s accounting
+        // comparisons on the same f64 values, so counter reconciliation
+        // in the audit is exact
+        let verdict = if self.slo {
+            s.req.deadline.map(|d| DeadlineVerdict {
+                class: d.class,
+                met_ttft: ttft <= d.ttft,
+                met_itl: s.worst_itl <= d.itl,
+            })
+        } else {
+            None
+        };
         self.events.push(TraceEvent::Retire {
             id: s.req.id as u64,
             t: now,
             replica,
             e2e: now - s.start_t,
-            ttft: s.first_token_t.unwrap_or(now) - s.start_t,
+            ttft,
+            verdict,
         });
     }
 
@@ -403,9 +478,19 @@ impl Tracer {
                     a.migrations += 1;
                     a.migrated_bytes += bytes;
                 }
-                TraceEvent::Retire { e2e, ttft, .. } => {
+                TraceEvent::Shed { .. } => a.shed_requests += 1,
+                TraceEvent::Retire { e2e, ttft, verdict, .. } => {
                     a.e2e.record(*e2e);
                     a.ttft.record(*ttft);
+                    if let Some(v) = verdict {
+                        a.met_ttft += v.met_ttft as u64;
+                        a.met_itl += v.met_itl as u64;
+                        let both = (v.met_ttft && v.met_itl) as u64;
+                        a.met_deadline += both;
+                        let e = a.per_class.entry(v.class).or_insert((0, 0));
+                        e.0 += both;
+                        e.1 += 1;
+                    }
                 }
                 _ => {}
             }
@@ -476,7 +561,7 @@ impl Tracer {
 
     /// wait-queue depth as a step series `(t, depth)`: +1 on first
     /// queueing and on every preemption (the sequence re-enters the
-    /// queue), −1 on every admission
+    /// queue), −1 on every admission or overload-control shed
     pub fn queue_depth(&self) -> Vec<(f64, i64)> {
         let mut deltas: Vec<(f64, i64)> = Vec::new();
         for ev in &self.events {
@@ -484,7 +569,9 @@ impl Tracer {
                 TraceEvent::Queued { t, .. } | TraceEvent::Preempt { t, .. } => {
                     deltas.push((*t, 1));
                 }
-                TraceEvent::Admit { t, .. } => deltas.push((*t, -1)),
+                TraceEvent::Admit { t, .. } | TraceEvent::Shed { t, .. } => {
+                    deltas.push((*t, -1));
+                }
                 _ => {}
             }
         }
@@ -661,6 +748,9 @@ impl Tracer {
                 TraceEvent::Preempt { id, t, replica } => {
                     evs.push(instant_ev(replica, t * US, &format!("preempt req {id}")));
                 }
+                TraceEvent::Shed { id, t, class } => {
+                    evs.push(instant_ev(0, t * US, &format!("shed req {id} (class {class})")));
+                }
                 TraceEvent::Export { id, t, src, .. } => {
                     evs.push(instant_ev(src, t * US, &format!("export req {id}")));
                 }
@@ -799,11 +889,13 @@ mod tests {
                     priority: 0,
                     family: 0,
                     shared_len: 0,
+                    deadline: None,
                 },
                 phase: crate::sched::Phase::Decode { produced: 2 },
                 start_t: 0.0,
                 first_token_t: Some(2.0),
                 last_token_t: 5.0,
+                worst_itl: 0.0,
             },
             pages: Vec::new(),
         };
@@ -908,6 +1000,74 @@ mod tests {
         }
         assert_eq!(depth, 0);
         assert!(!in_str);
+    }
+
+    #[test]
+    fn audit_reconciles_shed_and_deadline_verdicts() {
+        use crate::workload::Request;
+        let mut tr = Tracer::new(vec!["unified".into()]).with_slo();
+        // req 1: class 0, ttft met (1.5 <= 2.0), itl missed (0.3 > 0.1)
+        let fin = FinishedSeq {
+            state: crate::sched::SeqState {
+                req: Request::new(1, 64, 4).with_deadline(0, 2.0, 0.1),
+                phase: crate::sched::Phase::Decode { produced: 4 },
+                start_t: 0.0,
+                first_token_t: Some(1.5),
+                last_token_t: 4.0,
+                worst_itl: 0.3,
+            },
+            pages: Vec::new(),
+        };
+        tr.retire_finished(0, 4.0, &fin);
+        // req 2: class 1, both targets met
+        let fin2 = FinishedSeq {
+            state: crate::sched::SeqState {
+                req: Request::new(2, 64, 4).with_deadline(1, 2.0, 0.5),
+                phase: crate::sched::Phase::Decode { produced: 4 },
+                start_t: 0.0,
+                first_token_t: Some(1.0),
+                last_token_t: 3.0,
+                worst_itl: 0.2,
+            },
+            pages: Vec::new(),
+        };
+        tr.retire_finished(0, 3.0, &fin2);
+        // req 9 never admitted: shed emits its arrival/queued pair too
+        tr.shed(9, 0.5, 0.5, 6.0, 0);
+        let a = tr.audit();
+        assert_eq!(a.shed_requests, 1);
+        assert_eq!((a.met_ttft, a.met_itl, a.met_deadline), (2, 1, 1));
+        assert_eq!(a.per_class.get(&0), Some(&(0, 1)));
+        assert_eq!(a.per_class.get(&1), Some(&(1, 1)));
+        let mut m = ServiceMetrics::default();
+        m.e2e.record(4.0);
+        m.e2e.record(3.0);
+        m.ttft.record(1.5);
+        m.ttft.record(1.0);
+        m.met_ttft = 2;
+        m.met_itl = 1;
+        m.met_deadline = 1;
+        m.shed_requests = 1;
+        a.check(&m).unwrap();
+        m.shed_requests = 0;
+        assert!(a.check(&m).unwrap_err().contains("shed_requests"));
+        m.shed_requests = 1;
+        m.met_deadline = 2;
+        assert!(a.check(&m).unwrap_err().contains("met_deadline"));
+        // the queue-depth series balances sheds like admissions
+        let series = tr.queue_depth();
+        assert!(series.iter().all(|&(_, d)| d >= 0));
+        assert_eq!(series.last().unwrap().1, 0, "the shed drains the queue");
+        // an un-armed tracer never annotates, even with deadlines stamped
+        let mut plain = Tracer::new(vec!["unified".into()]);
+        plain.retire_finished(0, 4.0, &fin);
+        match plain.events()[0] {
+            TraceEvent::Retire { verdict, .. } => assert_eq!(verdict, None),
+            ref ev => panic!("unexpected event {ev:?}"),
+        }
+        // the chrome exporter names the shed instant
+        let json = tr.to_chrome_json("slo");
+        assert!(json.contains("shed req 9 (class 0)"));
     }
 
     #[test]

@@ -70,6 +70,27 @@ pub struct Request {
     pub family: u64,
     /// tokens of the prompt drawn from the family stream (see `family`)
     pub shared_len: usize,
+    /// SLO deadline class ([`Deadline`]): TTFT and ITL targets the
+    /// goodput scheduler and the shed predicate read. `None` (the
+    /// default everywhere a legacy generator builds requests) keeps
+    /// every existing workload bit-identical — a stamped deadline is
+    /// itself inert until `ServingConfig::slo` arms the machinery.
+    pub deadline: Option<Deadline>,
+}
+
+/// TTFT/ITL service-level targets stamped on a request, plus the index
+/// of the deadline class it was drawn from (for per-class goodput
+/// reporting). A request *meets its deadline* when its first token
+/// arrived within `ttft` seconds of send AND no inter-token gap
+/// exceeded `itl` seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Deadline {
+    /// time-to-first-token budget, seconds from client send
+    pub ttft: f64,
+    /// per-token inter-token-latency budget, seconds
+    pub itl: f64,
+    /// index into the workload's deadline-class mix
+    pub class: u8,
 }
 
 /// Domain-separation salts so the family stream and a request's own
@@ -79,6 +100,10 @@ const SUFFIX_SALT: u64 = 0x3C3C_C3C3_9696_6969;
 /// Salt for the speculative-acceptance stream (`spec_accepted`), so it
 /// can never collide with the prompt-token or arrival streams.
 const SPEC_SALT: u64 = 0x6969_9696_C3C3_3C3C;
+/// Salt for the deadline-class assignment stream
+/// (`stamp_deadline_classes`), independent of the length and arrival
+/// streams so stamping deadlines never perturbs the workload itself.
+const DEADLINE_SALT: u64 = 0x0F0F_F0F0_5A5A_A5A5;
 
 /// Tokens emitted by one draft+verify step: the sequence has already
 /// emitted `produced` tokens, the verifier scores `verify_width` query
@@ -127,11 +152,18 @@ impl Request {
             priority: 0,
             family: id as u64,
             shared_len: 0,
+            deadline: None,
         }
     }
 
     pub fn with_priority(mut self, priority: u8) -> Self {
         self.priority = priority;
+        self
+    }
+
+    /// Stamp a deadline class (TTFT/ITL targets) on the request.
+    pub fn with_deadline(mut self, class: u8, ttft: f64, itl: f64) -> Self {
+        self.deadline = Some(Deadline { ttft: ttft.max(0.0), itl: itl.max(0.0), class });
         self
     }
 
@@ -224,6 +256,61 @@ pub fn stamp_poisson_arrivals(reqs: &mut [Request], seed: u64, rate_qps: f64) {
 pub fn generate_open(dist: LengthDist, n: usize, seed: u64, rate_qps: f64) -> Vec<Request> {
     let mut reqs = generate(dist, n, seed);
     stamp_poisson_arrivals(&mut reqs, seed, rate_qps);
+    reqs
+}
+
+/// One deadline class in a workload mix: the TTFT/ITL targets plus the
+/// relative weight with which requests draw this class. Weights need
+/// not sum to 1 (they are normalized); a single-class mix stamps every
+/// request identically.
+#[derive(Debug, Clone, Copy)]
+pub struct DeadlineClass {
+    pub ttft: f64,
+    pub itl: f64,
+    pub weight: f64,
+}
+
+/// Stamp a per-class deadline mix onto `reqs`. Class assignment draws
+/// from an independently-salted stream keyed by `seed`
+/// (`DEADLINE_SALT`), so lengths and arrival times stay identical to
+/// the un-stamped workload of the same seed — arming deadlines never
+/// perturbs the workload, only annotates it. The stamped
+/// [`Deadline::class`] is the index into `classes`. A preempted request
+/// keeps its stamp (the `Request` travels through the wait queue by
+/// value), so re-admission is judged against the original budget.
+pub fn stamp_deadline_classes(reqs: &mut [Request], classes: &[DeadlineClass], seed: u64) {
+    if classes.is_empty() {
+        return;
+    }
+    let total: f64 = classes.iter().map(|c| c.weight.max(0.0)).sum();
+    let mut rng = Rng::new(seed ^ DEADLINE_SALT);
+    for r in reqs {
+        let mut x = rng.f64() * total;
+        let mut k = classes.len() - 1;
+        for (i, c) in classes.iter().enumerate() {
+            let w = c.weight.max(0.0);
+            if x < w {
+                k = i;
+                break;
+            }
+            x -= w;
+        }
+        *r = r.with_deadline(k as u8, classes[k].ttft, classes[k].itl);
+    }
+}
+
+/// Open-loop workload with a deadline-class mix stamped: lengths and
+/// the Poisson schedule are bit-identical to [`generate_open`] of the
+/// same seed and rate.
+pub fn generate_open_slo(
+    dist: LengthDist,
+    n: usize,
+    seed: u64,
+    rate_qps: f64,
+    classes: &[DeadlineClass],
+) -> Vec<Request> {
+    let mut reqs = generate_open(dist, n, seed, rate_qps);
+    stamp_deadline_classes(&mut reqs, classes, seed);
     reqs
 }
 
@@ -413,6 +500,50 @@ mod tests {
             let expect = (1.0 - p.powi(q as i32)) / (1.0 - p);
             assert!((mean - expect).abs() < 0.05, "q={q} p={p}: {mean} vs {expect}");
         }
+    }
+
+    #[test]
+    fn deadline_stamp_is_inert_on_lengths_and_arrivals() {
+        let d = LengthDist::RandomRatio { max_prompt: 8192, max_decode: 512, ratio: 0.25 };
+        let classes = [
+            DeadlineClass { ttft: 0.5, itl: 0.05, weight: 3.0 },
+            DeadlineClass { ttft: 5.0, itl: 0.5, weight: 1.0 },
+        ];
+        let plain = generate_open(d, 300, 11, 4.0);
+        let slo = generate_open_slo(d, 300, 11, 4.0, &classes);
+        assert_eq!(slo, generate_open_slo(d, 300, 11, 4.0, &classes), "deterministic");
+        let mut seen = [0usize; 2];
+        for (p, s) in plain.iter().zip(&slo) {
+            // the only difference is the stamp itself
+            assert_eq!(p.prompt_len, s.prompt_len);
+            assert_eq!(p.decode_len, s.decode_len);
+            assert_eq!(p.arrival_t, s.arrival_t);
+            assert!(p.deadline.is_none());
+            let dl = s.deadline.expect("every request stamped");
+            assert!(dl.class < 2);
+            seen[dl.class as usize] += 1;
+            let c = classes[dl.class as usize];
+            assert_eq!((dl.ttft, dl.itl), (c.ttft, c.itl));
+        }
+        assert!(seen[0] > seen[1] && seen[1] > 0, "3:1 mix should show: {seen:?}");
+        // stripping the stamps recovers the plain workload exactly
+        let mut stripped = slo;
+        for r in &mut stripped {
+            r.deadline = None;
+        }
+        assert_eq!(stripped, plain);
+        // empty mix is a no-op
+        let mut untouched = generate_open(d, 10, 11, 4.0);
+        stamp_deadline_classes(&mut untouched, &[], 11);
+        assert!(untouched.iter().all(|r| r.deadline.is_none()));
+    }
+
+    #[test]
+    fn with_deadline_floors_negative_targets() {
+        let r = Request::new(1, 8, 4).with_deadline(3, -1.0, -0.5);
+        let d = r.deadline.unwrap();
+        assert_eq!((d.ttft, d.itl, d.class), (0.0, 0.0, 3));
+        assert!(Request::new(1, 8, 4).deadline.is_none());
     }
 
     #[test]

@@ -1105,13 +1105,20 @@ fn prop_trace_audit_matches_service_metrics() {
     // sequences re-prefill and re-emit, so the trace must count emissions
     // per step, not per retirement. Speculative decoding is coin-flipped
     // in: verify bursts emit 1..=q tokens per step and the audit's
-    // accepted_tokens/verify_steps counters must reconcile too.
-    use gla_serve::config::SimLoop;
+    // accepted_tokens/verify_steps counters must reconcile too. The SLO
+    // stack is coin-flipped in the same way: with deadline stamps +
+    // shedding (and sometimes EDF ordering) armed, the audit must
+    // reconcile the shed count and the per-class deadline verdicts
+    // against the goodput counters exactly, and shed requests must
+    // balance the retirement ledger.
+    use gla_serve::config::{SimLoop, SloConfig};
     use gla_serve::engine::SimEngine;
     use gla_serve::parallel::FabricSpec;
+    use gla_serve::workload::{stamp_deadline_classes, DeadlineClass};
     let mut rng = Rng::new(0xA0D17);
     let mut preempting = 0u64;
     let mut migrating = 0u64;
+    let mut shedding = 0u64;
     for case in 0..10 {
         let m = DSV2;
         let variant = m.variant(["gla2", "gqa4"][rng.range(0, 1)]);
@@ -1128,7 +1135,7 @@ fn prop_trace_audit_matches_service_metrics() {
         };
         let sim_loop = [SimLoop::Calendar, SimLoop::MinScan][rng.range(0, 1)];
         let n = rng.range(6, 16);
-        let (reqs, max_prompt, max_decode) = if prefix {
+        let (mut reqs, max_prompt, max_decode) = if prefix {
             let pspec = SharedPrefixSpec {
                 n_families: rng.range(1, 3),
                 prefix_len: page_size * rng.range(1, 6),
@@ -1159,6 +1166,28 @@ fn prop_trace_audit_matches_service_metrics() {
         if rng.range(0, 1) == 1 {
             serving = serving.with_spec(rng.range(2, 4), [0.3f64, 0.6, 0.9][rng.range(0, 2)], 0.1);
         }
+        let slo = rng.range(0, 1) == 1;
+        if slo {
+            stamp_deadline_classes(
+                &mut reqs,
+                &[
+                    DeadlineClass {
+                        ttft: 0.25 + rng.f64(),
+                        itl: 0.02 + 0.2 * rng.f64(),
+                        weight: 1.0,
+                    },
+                    DeadlineClass { ttft: 20.0, itl: 5.0, weight: 1.0 },
+                ],
+                case as u64 + 211,
+            );
+            serving = serving.with_slo(SloConfig {
+                shed_slack: [0.5f64, 1.0][rng.range(0, 1)],
+                ..SloConfig::default()
+            });
+            if rng.range(0, 1) == 1 {
+                serving = serving.with_policy(PolicyKind::Goodput);
+            }
+        }
         let mut c = Cluster::new(
             m,
             variant,
@@ -1175,7 +1204,23 @@ fn prop_trace_audit_matches_service_metrics() {
         audit
             .check(&c.metrics)
             .unwrap_or_else(|e| panic!("case {case}: trace audit diverged: {e}"));
-        assert_eq!(audit.e2e.len(), n, "case {case}: audit lost retirements");
+        if slo {
+            // shed requests never retire: the two ledgers must tile the
+            // submission count exactly
+            assert_eq!(
+                audit.e2e.len() as u64 + c.metrics.shed_requests,
+                n as u64,
+                "case {case}: completed + shed != submitted"
+            );
+            let class_met: u64 = audit.per_class.values().map(|&(met, _)| met).sum();
+            assert_eq!(
+                class_met, c.metrics.met_deadline,
+                "case {case}: per-class verdicts disagree with the counter"
+            );
+        } else {
+            assert_eq!(audit.e2e.len(), n, "case {case}: audit lost retirements");
+            assert_eq!(c.metrics.shed_requests, 0, "case {case}: shed with SLO off");
+        }
         // the decomposition must tile each request's E2E exactly
         for (id, d) in tracer.decompose() {
             let residual = d.queue_s + d.prefill_s + d.stall_s + d.decode_s - d.e2e_s;
@@ -1186,8 +1231,12 @@ fn prop_trace_audit_matches_service_metrics() {
         }
         preempting += u64::from(c.metrics.preemptions > 0);
         migrating += u64::from(c.metrics.migrations > 0);
+        shedding += u64::from(c.metrics.shed_requests > 0);
     }
-    println!("trace-audit: {preempting}/10 preempting runs, {migrating}/10 migrating runs");
+    println!(
+        "trace-audit: {preempting}/10 preempting runs, {migrating}/10 migrating runs, \
+         {shedding}/10 shedding runs"
+    );
     // the lockstep (hybrid-barrier) discipline audits too: all-unified
     // DP>1 closed-loop through the engine wrapper, with verify bursts on
     let m = DSV2;
@@ -1479,4 +1528,263 @@ fn prop_spec_conserves_tokens_and_pages() {
              {analytic:.3} (q={q} p={p})"
         );
     }
+}
+
+#[test]
+fn prop_slo_off_is_bit_identical() {
+    // The SLO inertness contract (DESIGN.md §Goodput scheduling):
+    // deadline stamps under `slo: None` are a dead knob, and a fully
+    // armed SLO config (EDF policy, shedding, per-class fused budgets)
+    // over an UNSTAMPED workload never engages — both must be
+    // byte-identical to the plain FCFS run (full `ServiceMetrics`
+    // equality, `Summary` sample multisets included, and the same
+    // number of event-loop clock stops) across random
+    // stream/fusion/prefix/spec/fabric/layout configurations, both
+    // drive modes, and both async loops.
+    use gla_serve::config::{SimLoop, SloConfig};
+    use gla_serve::parallel::FabricSpec;
+    use gla_serve::workload::{stamp_deadline_classes, DeadlineClass};
+    let mut rng = Rng::new(0x510FF);
+    for case in 0..6 {
+        let m = DSV2;
+        let variant = m.variant(["gla2", "gqa4"][rng.range(0, 1)]);
+        let page_size = [16usize, 64][rng.range(0, 1)];
+        let chunk = [256usize, 512, 1024][rng.range(0, 2)];
+        let stream = rng.range(0, 1) == 1;
+        let fusion = rng.range(0, 1) == 1;
+        let prefix = rng.range(0, 1) == 1;
+        let fabric = [
+            FabricSpec::shared(),
+            FabricSpec::per_pair(),
+            FabricSpec::per_pair_capped(1),
+        ][rng.range(0, 2)];
+        let spec = if rng.range(0, 1) == 0 {
+            ClusterSpec::unified(rng.range(2, 3))
+        } else {
+            ClusterSpec::disagg(rng.range(1, 2), rng.range(1, 2))
+        };
+        let router = RouterKind::all()[rng.range(0, RouterKind::all().len() - 1)];
+        let n = rng.range(6, 16);
+        let (reqs, max_prompt, max_decode) = if prefix {
+            let pspec = SharedPrefixSpec {
+                n_families: rng.range(1, 3),
+                prefix_len: page_size * rng.range(1, 6),
+                max_suffix: rng.range(1, 512),
+                decode: rng.range(2, 48),
+            };
+            let mut reqs = generate_shared_prefix(pspec, n, case as u64 + 801);
+            stamp_poisson_arrivals(&mut reqs, case as u64 + 801, 2.0);
+            (reqs, pspec.prefix_len + pspec.max_suffix, pspec.decode)
+        } else {
+            let dist =
+                LengthDist::RandomRatio { max_prompt: 4096, max_decode: 128, ratio: 0.1 };
+            (generate_open(dist, n, case as u64 + 801, 2.0), 4096, 128)
+        };
+        let drive = if rng.range(0, 1) == 0 {
+            DriveMode::Closed { concurrency: rng.range(2, 8) }
+        } else {
+            DriveMode::Open
+        };
+        let spec_on = rng.range(0, 1) == 1;
+        let spec_q = rng.range(2, 4);
+        // the stamps that must stay dead under `slo: None` — budgets
+        // tight enough that, were the policy live, it would shed
+        let mut stamped = reqs.clone();
+        stamp_deadline_classes(
+            &mut stamped,
+            &[
+                DeadlineClass { ttft: 0.05 + rng.f64(), itl: 0.01, weight: 1.0 },
+                DeadlineClass { ttft: 10.0, itl: 1.0, weight: 1.0 },
+            ],
+            case as u64 + 811,
+        );
+        // the armed config that must stay idle over unstamped requests
+        let slo = SloConfig {
+            shed: true,
+            shed_slack: 0.25 * rng.range(0, 8) as f64,
+            itl_prefill_budget: [0usize, 64, 512][rng.range(0, 2)],
+            prefill_cap: [0usize, 256][rng.range(0, 1)],
+        };
+        let footprint_pages = (max_prompt + max_decode).div_ceil(page_size);
+        let n_pages = footprint_pages * rng.range(1, 3);
+        let kv_per_token = variant.kv_bytes_per_token_per_device(2, m.dtype_bytes) as u64
+            * m.n_layers as u64;
+        let run = |sim_loop: SimLoop,
+                   reqs: &[Request],
+                   policy: PolicyKind,
+                   slo: Option<SloConfig>| {
+            let mut serving = ServingConfig::with_parallelism(2, 1)
+                .with_sim_loop(sim_loop)
+                .with_policy(policy);
+            serving.page_size = page_size;
+            serving.prefill_chunk = chunk;
+            serving.stream_migration = stream;
+            serving.prefix_cache = prefix;
+            serving.fusion = fusion;
+            serving.kv_hbm_budget = kv_per_token * (page_size * n_pages) as u64;
+            if spec_on {
+                serving = serving.with_spec(spec_q, 0.6, 0.1);
+            }
+            if let Some(s) = slo {
+                serving = serving.with_slo(s);
+            }
+            let mut c = Cluster::new(
+                m,
+                variant,
+                serving,
+                DeviceModel::h100_serving(),
+                &spec.clone().with_fabric(fabric),
+                router,
+                drive,
+            );
+            c.submit(reqs);
+            c.run();
+            let stats = c.sim_stats();
+            (c.metrics, stats)
+        };
+        for sim_loop in [SimLoop::Calendar, SimLoop::MinScan] {
+            let (base_m, base_s) = run(sim_loop, &reqs, PolicyKind::Fcfs, None);
+            let (dead_m, dead_s) = run(sim_loop, &stamped, PolicyKind::Fcfs, None);
+            assert_eq!(
+                dead_m, base_m,
+                "case {case} ({sim_loop:?}): deadline stamps drifted the run with \
+                 slo=None (stream={stream} fusion={fusion} prefix={prefix})"
+            );
+            assert_eq!(
+                dead_s.events, base_s.events,
+                "case {case} ({sim_loop:?}): stamps changed the clock stops"
+            );
+            assert_eq!(dead_m.met_deadline, 0, "case {case}: counters ran while off");
+            assert_eq!(dead_m.shed_requests, 0, "case {case}: shed while off");
+            let (armed_m, armed_s) = run(sim_loop, &reqs, PolicyKind::Goodput, Some(slo));
+            assert_eq!(
+                armed_m, base_m,
+                "case {case} ({sim_loop:?}): armed SLO over an unstamped workload \
+                 drifted from FCFS (stream={stream} fusion={fusion} prefix={prefix})"
+            );
+            assert_eq!(
+                armed_s.events, base_s.events,
+                "case {case} ({sim_loop:?}): arming SLO changed the clock stops"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_shed_conserves_requests_and_pages() {
+    // The overload-control conservation contract (DESIGN.md §Goodput
+    // scheduling): on overloaded random grids with tight deadline
+    // budgets, every submitted request either retires or sheds, exactly
+    // once (`completed + shed == submitted`); shed requests leak
+    // nothing (they were never admitted, so the pools drain back to
+    // full and no import reservation survives); shed decisions are a
+    // pure function of the seed and identical across the calendar and
+    // min-scan loops, with preemption and speculative decoding live in
+    // the mix.
+    use gla_serve::config::{SimLoop, SloConfig};
+    use gla_serve::workload::{stamp_deadline_classes, DeadlineClass};
+    let mut rng = Rng::new(0x51ED5);
+    let mut shedding = 0u64;
+    let mut completing = 0u64;
+    for case in 0..12 {
+        let m = DSV2;
+        let variant = m.variant(["gla2", "gqa4"][rng.range(0, 1)]);
+        let page_size = [16usize, 64][rng.range(0, 1)];
+        let fusion = rng.range(0, 1) == 1;
+        let spec = if rng.range(0, 1) == 0 {
+            ClusterSpec::unified(rng.range(1, 2))
+        } else {
+            ClusterSpec::disagg(1, rng.range(1, 2))
+        };
+        let router = RouterKind::all()[rng.range(0, RouterKind::all().len() - 1)];
+        let policy = [PolicyKind::Fcfs, PolicyKind::Goodput][rng.range(0, 1)];
+        let spec_on = rng.range(0, 1) == 1;
+        let spec_q = rng.range(2, 4);
+        let n = rng.range(8, 20);
+        let rate = [10.0f64, 40.0, 160.0][rng.range(0, 2)];
+        let dist = LengthDist::RandomRatio { max_prompt: 4096, max_decode: 128, ratio: 0.1 };
+        let mut reqs = generate_open(dist, n, case as u64 + 701, rate);
+        // tight-to-hopeless TTFT budgets guarantee the shed sweep runs;
+        // the second class keeps a survivable population in the mix
+        let ttft = [1e-6f64, 0.25, 1.0][rng.range(0, 2)];
+        let itl = [0.01f64, 0.5][rng.range(0, 1)];
+        stamp_deadline_classes(
+            &mut reqs,
+            &[
+                DeadlineClass { ttft, itl, weight: 1.0 },
+                DeadlineClass { ttft: 400.0 * ttft, itl: 10.0 * itl, weight: 1.0 },
+            ],
+            case as u64 + 701,
+        );
+        let slo = SloConfig {
+            shed: true,
+            shed_slack: [0.5f64, 1.0, 2.0][rng.range(0, 2)],
+            itl_prefill_budget: [0usize, 256][rng.range(0, 1)],
+            prefill_cap: [0usize, 512][rng.range(0, 1)],
+        };
+        // a pool of 1-2 max footprints keeps admission scarce, so the
+        // backlog (and with it shedding and preemption interplay) is
+        // guaranteed under the burst arrival rates
+        let footprint_pages = (4096usize + 128).div_ceil(page_size);
+        let n_pages = footprint_pages * rng.range(1, 2);
+        let kv_per_token = variant.kv_bytes_per_token_per_device(2, m.dtype_bytes) as u64
+            * m.n_layers as u64;
+        let run = |sim_loop: SimLoop| {
+            let mut serving = ServingConfig::with_parallelism(2, 1)
+                .with_sim_loop(sim_loop)
+                .with_policy(policy)
+                .with_slo(slo);
+            serving.page_size = page_size;
+            serving.prefill_chunk = 512;
+            serving.fusion = fusion;
+            serving.kv_hbm_budget = kv_per_token * (page_size * n_pages) as u64;
+            if spec_on {
+                serving = serving.with_spec(spec_q, 0.6, 0.1);
+            }
+            let mut c = Cluster::new(
+                m,
+                variant,
+                serving,
+                DeviceModel::h100_serving(),
+                &spec,
+                router,
+                DriveMode::Open,
+            );
+            c.submit(&reqs);
+            c.run();
+            for r in c.replicas() {
+                r.sched
+                    .pool()
+                    .check_invariants()
+                    .unwrap_or_else(|e| panic!("case {case}: {e}"));
+                assert_eq!(
+                    r.sched.pool().pages_free(),
+                    r.sched.pool().pages_total(),
+                    "case {case}: a shed or retired request leaked pages"
+                );
+                assert_eq!(
+                    r.sched.reserved_imports(),
+                    0,
+                    "case {case}: a shed request leaked an import reservation"
+                );
+            }
+            (c.metrics.clone(), c.sim_stats().events)
+        };
+        let (cal, cal_ev) = run(SimLoop::Calendar);
+        let (min, min_ev) = run(SimLoop::MinScan);
+        assert_eq!(cal, min, "case {case}: shed decisions diverged across loops");
+        assert_eq!(cal_ev, min_ev, "case {case}: loops visited different stops");
+        assert_eq!(
+            cal.e2e.len() as u64 + cal.shed_requests,
+            n as u64,
+            "case {case}: completed + shed != submitted"
+        );
+        let (again, _) = run(SimLoop::Calendar);
+        assert_eq!(cal, again, "case {case}: shed decisions are not deterministic");
+        shedding += u64::from(cal.shed_requests > 0);
+        completing += u64::from(!cal.e2e.is_empty());
+    }
+    assert!(shedding > 0, "no case ever shed — the overload grid is too gentle");
+    assert!(completing > 0, "no case ever completed a request");
+    println!("shed-conservation: {shedding}/12 shedding runs, {completing}/12 completing");
 }
