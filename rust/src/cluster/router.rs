@@ -104,23 +104,26 @@ impl Router {
     }
 
     /// Replica for the next new request, among those whose role admits
-    /// new work. Non-mutating so a failed (pool-full, head-of-line)
-    /// admission retries the same replica; call
-    /// [`Router::note_admitted`] after a successful admission. `req` is
-    /// the request being placed — only `PrefixAffinity` looks at it.
+    /// new work *and* that are healthy (not crashed by fault injection,
+    /// not draining before a planned restart — without faults armed every
+    /// replica is healthy and this is the pure role filter). Non-mutating
+    /// so a failed (pool-full, head-of-line) admission retries the same
+    /// replica; call [`Router::note_admitted`] after a successful
+    /// admission. `req` is the request being placed — only
+    /// `PrefixAffinity` looks at it.
     pub fn route_new(&self, replicas: &[ClusterReplica], req: &Request) -> Option<usize> {
         let eligible = || {
             replicas
                 .iter()
                 .enumerate()
-                .filter(|(_, r)| r.role.admits_new())
+                .filter(|(_, r)| r.role.admits_new() && r.healthy())
         };
         match self.kind {
             RouterKind::RoundRobin => {
                 let n = replicas.len();
                 (0..n)
                     .map(|k| (self.rr_next + k) % n)
-                    .find(|&i| replicas[i].role.admits_new())
+                    .find(|&i| replicas[i].role.admits_new() && replicas[i].healthy())
             }
             RouterKind::LeastLoaded => eligible()
                 .min_by_key(|(i, r)| (r.sched.n_live(), *i))
@@ -136,7 +139,7 @@ impl Router {
                 // don't even materialize the prompt
                 if !replicas
                     .iter()
-                    .any(|r| r.role.admits_new() && r.sched.prefix_cache_enabled())
+                    .any(|r| r.role.admits_new() && r.healthy() && r.sched.prefix_cache_enabled())
                 {
                     return eligible()
                         .min_by_key(|(i, r)| (r.sched.n_live(), *i))
@@ -242,6 +245,32 @@ mod tests {
             Router::new(RouterKind::LeastLoaded).route_new(&only_decode, &probe(9)),
             None
         );
+    }
+
+    #[test]
+    fn health_filter_skips_down_and_draining_replicas() {
+        let mut reps = vec![
+            with_live(Role::Prefill, 0),
+            with_live(Role::Prefill, 2),
+            with_live(Role::Prefill, 3),
+        ];
+        // the least-loaded pick crashed; the next-best is draining
+        reps[0].down = true;
+        reps[1].draining = true;
+        for kind in RouterKind::all() {
+            assert_eq!(
+                Router::new(kind).route_new(&reps, &probe(9)),
+                Some(2),
+                "{}: routed to an unhealthy replica",
+                kind.name()
+            );
+        }
+        // everyone unhealthy -> unroutable, the caller re-queues
+        reps[2].down = true;
+        assert_eq!(Router::new(RouterKind::LeastLoaded).route_new(&reps, &probe(9)), None);
+        // recovery restores eligibility
+        reps[0].down = false;
+        assert_eq!(Router::new(RouterKind::LeastLoaded).route_new(&reps, &probe(9)), Some(0));
     }
 
     #[test]

@@ -60,12 +60,59 @@ pub struct Migration {
     /// carry their reservation holder; `None` = importer's choice, the
     /// epilogue path over a shared fabric)
     pub dst: Option<usize>,
+    /// source replica the cache exported from — the wire source a fault
+    /// retry re-sends from (the source retains its serialized copy until
+    /// the import acknowledges)
+    pub src: usize,
+    /// fault-retry count: 0 for a first send, incremented per
+    /// [`LinkFabric::resend_tail`] — the exponent of the backoff policy
+    pub attempts: u32,
+    /// largest per-rank shard of the tail (the transfer-time argument of
+    /// the original send, retained so a retry prices re-transfer
+    /// identically)
+    pub per_link_bytes: f64,
 }
 
 impl Migration {
     /// Id of the request whose cache this is (the tracer's flow key).
     pub fn req_id(&self) -> u64 {
         self.state.req.id as u64
+    }
+}
+
+/// Capped-exponential-backoff policy for fault-retrying migrations whose
+/// pinned destination died before import: the backoff before retry
+/// `attempt` (1-based) is `min(base * factor^(attempt-1), cap)` seconds,
+/// and after `max_attempts` retries the saga gives up — the request
+/// re-queues to the shared wait queue for a fresh prefill on a survivor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// backoff before the first retry, seconds
+    pub base: f64,
+    /// multiplier per subsequent retry
+    pub factor: f64,
+    /// ceiling on any single backoff, seconds
+    pub cap: f64,
+    /// retries before giving up and re-queueing the request
+    pub max_attempts: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { base: 0.05, factor: 2.0, cap: 1.0, max_attempts: 5 }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry number `attempt` (1-based: the first retry
+    /// is attempt 1). `None` means the policy is exhausted — give up and
+    /// re-queue the request instead of retrying.
+    pub fn delay(&self, attempt: u32) -> Option<f64> {
+        if attempt == 0 || attempt > self.max_attempts {
+            return None;
+        }
+        let d = self.base * self.factor.powi(attempt as i32 - 1);
+        Some(if d > self.cap { self.cap } else { d })
     }
 }
 
@@ -102,6 +149,16 @@ struct TransferLink {
     arrived: VecDeque<Migration>,
     /// total seconds this link spent mid-transfer (per-pair busy metric)
     busy_time: f64,
+    /// fault injection: partitioned until this time — traffic sent while
+    /// down queues behind the outage (landing times stay final at send,
+    /// so calendar events never go stale); self-expires, recovery events
+    /// need not touch it
+    blocked_until: f64,
+    /// fault injection: browned out until this time
+    slow_until: f64,
+    /// bandwidth degradation factor inside the brownout window (0 < f <=
+    /// 1; a transfer *starting* in the window takes `dur / f` seconds)
+    slow_factor: f64,
 }
 
 impl TransferLink {
@@ -188,6 +245,11 @@ impl LinkFabric {
         let key = self.key(src, dst);
         let link = self.links.entry(key).or_default();
         let mut start = if link.busy_until > now { link.busy_until } else { now };
+        if link.blocked_until > start {
+            // partitioned: the shipment queues behind the outage
+            start = link.blocked_until;
+        }
+        let (slow_until, slow_factor) = (link.slow_until, link.slow_factor);
         let mut channel = None;
         if !self.channels.is_empty() {
             // earliest-free channel, ties to the lowest index (determinism)
@@ -202,7 +264,11 @@ impl LinkFabric {
             }
             channel = Some(ci);
         }
-        let dur = self.coll.p2p_time(per_link_bytes);
+        let mut dur = self.coll.p2p_time(per_link_bytes);
+        if start < slow_until && slow_factor > 0.0 && slow_factor < 1.0 {
+            // brownout: the degraded link stretches the whole transfer
+            dur /= slow_factor;
+        }
         let ready = start + dur;
         let link = self.links.get_mut(&key).expect("entry created above");
         link.busy_until = ready;
@@ -267,8 +333,66 @@ impl LinkFabric {
                 export_t: now,
                 ready_t,
                 dst: pin_dst,
+                src,
+                attempts: 0,
+                per_link_bytes,
             })));
         ready_t
+    }
+
+    /// Fault-retry an orphaned migration: the tail landed (or was in
+    /// flight) pinned to a destination that died, so the cache re-crosses
+    /// the fabric from its original source — which retains its serialized
+    /// copy until the import acknowledges — to `new_dst`, starting no
+    /// earlier than `not_before` (the caller's backoff deadline).
+    /// `attempts` increments (the backoff exponent), the pin moves to the
+    /// new destination, and `export_t` is preserved so migration wait
+    /// spans the whole retry saga. Returns the new landing time.
+    pub fn resend_tail(&mut self, mut m: Migration, new_dst: usize, not_before: f64) -> f64 {
+        let ready_t = self.occupy(m.src, new_dst, m.per_link_bytes, not_before);
+        let key = self.key(m.src, new_dst);
+        m.attempts += 1;
+        m.dst = Some(new_dst);
+        m.ready_t = ready_t;
+        self.links
+            .get_mut(&key)
+            .expect("occupied above")
+            .in_flight
+            .push_back(Shipment::Tail(Box::new(m)));
+        ready_t
+    }
+
+    /// Fault injection: partition the `(src, dst)` link until `until`.
+    /// Traffic sent while down queues behind the outage — landing times
+    /// stay final at send, so calendar events never go stale. Overlapping
+    /// partitions extend (never shrink) the outage; it self-expires, so
+    /// the paired recovery event needs no fabric call. On a shared
+    /// fabric the pair collapses to the one pipe, partitioning everything
+    /// — consistent with every other shared-fabric collapse.
+    pub fn block_link(&mut self, src: usize, dst: usize, until: f64) {
+        let link = self.links.entry(self.key(src, dst)).or_default();
+        if until > link.blocked_until {
+            link.blocked_until = until;
+        }
+    }
+
+    /// Is the `(src, dst)` link currently partitioned? The health-aware
+    /// router's link probe.
+    pub fn link_blocked(&self, src: usize, dst: usize, now: f64) -> bool {
+        self.links
+            .get(&self.key(src, dst))
+            .is_some_and(|l| l.blocked_until > now)
+    }
+
+    /// Fault injection: brown out the `(src, dst)` link until `until` —
+    /// transfers *starting* inside the window run at `factor` of nominal
+    /// bandwidth (their duration divides by `factor`). Overlapping
+    /// brownouts: last writer wins (the schedule is deterministic, so
+    /// this is too).
+    pub fn slow_link(&mut self, src: usize, dst: usize, factor: f64, until: f64) {
+        let link = self.links.entry(self.key(src, dst)).or_default();
+        link.slow_factor = factor.clamp(0.01, 1.0);
+        link.slow_until = until;
     }
 
     /// Move every shipment whose last byte has landed (`ready_t <= now`):
@@ -554,5 +678,85 @@ mod tests {
         f.deliver(3.5); // tail: 2.25 + 1.25
         assert_eq!(f.arrived().len(), 1);
         assert_eq!(f.arrived()[0].ready_t, 3.5);
+    }
+
+    #[test]
+    fn retry_policy_spaces_caps_and_gives_up() {
+        let p = RetryPolicy { base: 0.05, factor: 2.0, cap: 0.3, max_attempts: 5 };
+        // exponential spacing: base * factor^(attempt-1)
+        assert_eq!(p.delay(1), Some(0.05));
+        assert_eq!(p.delay(2), Some(0.1));
+        assert_eq!(p.delay(3), Some(0.2));
+        // the cap clamps the exponential
+        assert_eq!(p.delay(4), Some(0.3));
+        assert_eq!(p.delay(5), Some(0.3));
+        // exhausted -> give up (re-queue the request)
+        assert_eq!(p.delay(6), None);
+        assert_eq!(p.delay(0), None, "attempts are 1-based");
+        assert_eq!(RetryPolicy { max_attempts: 0, ..p }.delay(1), None);
+        let d = RetryPolicy::default();
+        assert_eq!(d.delay(1), Some(d.base));
+        assert_eq!(d.delay(d.max_attempts + 1), None);
+    }
+
+    #[test]
+    fn blocked_link_queues_traffic_behind_the_outage() {
+        let mut f = fabric(FabricSpec::shared());
+        f.block_link(0, 1, 4.0);
+        assert!(f.link_blocked(0, 1, 1.0));
+        assert!(!f.link_blocked(0, 1, 4.0), "the partition self-expires");
+        // a send during the partition starts at recovery, not at `now`
+        whole(&mut f, 0, 1, 1, 500_000_000, 5e8, 1.0);
+        assert_eq!(f.next_ready(), Some(4.75)); // 4.0 + 0.25 + 0.5
+        // an overlapping *shorter* partition must not shrink the outage
+        f.block_link(0, 1, 3.0);
+        whole(&mut f, 0, 1, 2, 500_000_000, 5e8, 1.0);
+        assert_eq!(f.next_ready(), Some(4.75)); // second FIFOs: -> 5.5
+        f.deliver(5.5);
+        assert_eq!(f.arrived().len(), 2);
+    }
+
+    #[test]
+    fn brownout_stretches_transfers_starting_inside_the_window() {
+        let mut f = fabric(FabricSpec::per_pair());
+        // quarter bandwidth until t=10: the 0.75 s transfer takes 3.0 s
+        f.slow_link(0, 1, 0.25, 10.0);
+        whole(&mut f, 0, 1, 1, 500_000_000, 5e8, 1.0);
+        assert_eq!(f.next_ready(), Some(4.0)); // 1.0 + 0.75 / 0.25
+        // queued behind it, still inside the window: another 3.0 s
+        whole(&mut f, 0, 1, 2, 500_000_000, 5e8, 1.0);
+        f.deliver(7.0);
+        assert_eq!(f.arrived().len(), 2);
+        // a send starting after the window runs at nominal bandwidth
+        whole(&mut f, 0, 1, 3, 500_000_000, 5e8, 12.0);
+        assert_eq!(f.next_ready(), Some(12.75));
+        // other pairs are unaffected
+        whole(&mut f, 2, 3, 4, 500_000_000, 5e8, 1.0);
+        f.deliver(1.75);
+        assert_eq!(f.arrived().iter().filter(|m| m.state.req.id == 4).count(), 1);
+    }
+
+    #[test]
+    fn resend_tail_reprices_the_retry_and_preserves_the_saga() {
+        let mut f = fabric(FabricSpec::per_pair());
+        f.send_tail(0, 1, Some(1), seq(5), 64, 500_000_000, 500_000_000, 5e8, 1.0);
+        f.deliver(1.75);
+        let m = f.remove_arrived(0).expect("tail landed");
+        assert_eq!(m.src, 0);
+        assert_eq!(m.attempts, 0);
+        assert_eq!(m.per_link_bytes, 5e8);
+        assert_eq!(m.export_t, 1.0);
+        // destination died: re-send from the original source to replica
+        // 2, starting no earlier than the backoff deadline
+        let ready = f.resend_tail(m, 2, 3.0);
+        assert_eq!(ready, 3.75, "the retry re-prices the same shard");
+        assert_eq!(f.n_in_system(), 1, "the saga never leaves the system");
+        f.deliver(3.75);
+        let m = f.remove_arrived(0).expect("retry landed");
+        assert_eq!(m.attempts, 1);
+        assert_eq!(m.dst, Some(2), "the pin moves to the new destination");
+        assert_eq!(m.export_t, 1.0, "migration wait spans the whole saga");
+        assert_eq!(m.state.req.id, 5);
+        assert!(f.is_empty());
     }
 }

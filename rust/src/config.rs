@@ -100,6 +100,60 @@ impl Default for SloConfig {
     }
 }
 
+/// Deterministic fault-injection plan (robustness testing). Armed via
+/// [`ServingConfig::faults`] (default `None`): a seed-keyed schedule of
+/// typed fault events — replica crashes/restarts, link partitions, link
+/// brownouts — is generated up front (`workload::fault_schedule`, salted
+/// so fault randomness never perturbs the workload streams) and injected
+/// as first-class clock stops in both async event loops. `None` and an
+/// armed plan whose schedule is empty (`max_faults == 0` or `rate ==
+/// 0.0`) are both bit-identical to the plain run — the property suite
+/// pins that inertness like every other off-by-default mechanism here.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// schedule RNG seed (independent of the workload seed; the
+    /// generator additionally salts it so identical numeric seeds still
+    /// draw disjoint streams)
+    pub seed: u64,
+    /// mean fault injections per simulated second (exponential
+    /// inter-fault gaps). 0.0 generates an empty schedule.
+    pub rate: f64,
+    /// mean outage duration in simulated seconds; each event draws
+    /// 0.5x..1.5x of this deterministically
+    pub downtime: f64,
+    /// total fault injections generated (each with a paired recovery)
+    pub max_faults: usize,
+    /// inject replica crashes/restarts
+    pub replica_faults: bool,
+    /// inject link partitions (and brownouts when `brownout < 1.0`)
+    pub link_faults: bool,
+    /// bandwidth factor a browned-out link runs at, in (0, 1]; 1.0
+    /// disables brownout events entirely (partitions only)
+    pub brownout: f64,
+    /// drain-before-restart: a scheduled replica outage stops routing
+    /// new work to the replica but lets it finish (and export) its live
+    /// sequences — nothing is lost, the window only costs availability.
+    /// Off (the default) models a hard crash: the page pool and every
+    /// in-flight sequence on the replica are gone and affected requests
+    /// re-queue and re-prefill on the survivors.
+    pub drain: bool,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 1,
+            rate: 0.05,
+            downtime: 2.0,
+            max_faults: 32,
+            replica_faults: true,
+            link_faults: true,
+            brownout: 1.0,
+            drain: false,
+        }
+    }
+}
+
 /// Transformer shapes relevant to the performance models.
 #[derive(Debug, Clone, Copy)]
 pub struct ModelConfig {
@@ -279,6 +333,12 @@ pub struct ServingConfig {
     /// deadline stamps is equally bit-identical to the plain run.
     /// Pair with `PolicyKind::Goodput` for EDF admission ordering.
     pub slo: Option<SloConfig>,
+    /// deterministic fault injection and self-healing recovery (see
+    /// [`FaultPlan`]). `None` (the default) compiles every fault code
+    /// path out of the hot loops behind `is_some` guards, so an unarmed
+    /// run is bit-identical to pre-fault builds; an armed plan with an
+    /// empty schedule is equally inert.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for ServingConfig {
@@ -303,6 +363,7 @@ impl Default for ServingConfig {
             trace: false,
             spec: None,
             slo: None,
+            faults: None,
         }
     }
 }
@@ -400,6 +461,20 @@ impl ServingConfig {
     /// bench runs exactly that).
     pub fn with_slo(mut self, slo: SloConfig) -> Self {
         self.slo = Some(SloConfig { shed_slack: slo.shed_slack.max(0.0), ..slo });
+        self
+    }
+
+    /// Arm deterministic fault injection. The builder sanitizes
+    /// degenerate knobs: negative rates/downtimes floor at 0 (an empty
+    /// or zero-length schedule) and the brownout factor clamps into
+    /// (0, 1] so a browned-out link always makes progress.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(FaultPlan {
+            rate: plan.rate.max(0.0),
+            downtime: plan.downtime.max(0.0),
+            brownout: plan.brownout.clamp(0.01, 1.0),
+            ..plan
+        });
         self
     }
 
@@ -574,6 +649,23 @@ mod tests {
             .slo
             .unwrap();
         assert_eq!(sane.shed_slack, 0.0);
+        assert!(c.faults.is_none(), "fault injection must default off");
+        let armed = c.clone().with_faults(FaultPlan::default()).faults.unwrap();
+        assert_eq!(armed, FaultPlan::default());
+        // the builder sanitizes degenerate fault knobs
+        let sane = c
+            .clone()
+            .with_faults(FaultPlan {
+                rate: -1.0,
+                downtime: -3.0,
+                brownout: 0.0,
+                ..FaultPlan::default()
+            })
+            .faults
+            .unwrap();
+        assert_eq!(sane.rate, 0.0);
+        assert_eq!(sane.downtime, 0.0);
+        assert_eq!(sane.brownout, 0.01);
         let fused = c.with_fusion().with_step_budget(4096);
         assert!(fused.fusion);
         assert_eq!(fused.max_step_tokens, 4096);

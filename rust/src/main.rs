@@ -51,6 +51,20 @@
 //!                                shed == submitted), the trace-vs-
 //!                                metrics audit, and bit-exact
 //!                                determinism — exits 1 on any violation
+//!   faults [variant] [frate] [n] [mode]
+//!                                fault injection + self-healing recovery
+//!                                on a 1P+3D disaggregated cluster:
+//!                                seeded crash/partition/brownout schedule
+//!                                at `frate` injections/s (`mode` = `crash`
+//!                                default, or `drain` for graceful drain-
+//!                                before-restart); prints availability and
+//!                                recovery counters and is gated on the
+//!                                conservation law (every request completes,
+//!                                no leaked pages or reservations), fault-
+//!                                off inertness, the trace-vs-metrics
+//!                                audit, calendar == min-scan loop
+//!                                equivalence, and bit-exact determinism —
+//!                                exits 1 on any violation
 //!   trace  [rate] [n] [dir]      traced GQA-4 vs GLA-2 run on a 1P+2D
 //!                                disaggregated cluster: writes Chrome-
 //!                                trace `.trace.json` files (Perfetto-
@@ -66,7 +80,7 @@
 //! Run `make artifacts` first for `serve`/`train`.
 
 use gla_serve::cluster::{Cluster, RouterKind};
-use gla_serve::config::{ClusterSpec, ServingConfig, SloConfig, DSV2};
+use gla_serve::config::{ClusterSpec, FaultPlan, ServingConfig, SimLoop, SloConfig, DSV2};
 use gla_serve::engine::{run_benchmark_with_stats, SimEngine};
 use gla_serve::hardware::DeviceModel;
 use gla_serve::metrics::SimStats;
@@ -637,6 +651,142 @@ fn main() {
                 "  conservation OK — shed ledger, trace audit, determinism"
             );
         }
+        "faults" => {
+            let variant = args.get(2).cloned().unwrap_or_else(|| "gla2".into());
+            let frate: f64 = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(0.5);
+            if frate <= 0.0 || !frate.is_finite() {
+                eprintln!("fault rate must be a positive injections/s value, got {frate}");
+                std::process::exit(2);
+            }
+            let n: usize = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(96);
+            let drain = match args.get(5).map(String::as_str) {
+                None | Some("crash") => false,
+                Some("drain") => true,
+                Some(s) => {
+                    eprintln!("unknown fault mode `{s}` (try: crash drain)");
+                    std::process::exit(2);
+                }
+            };
+            let m = DSV2;
+            let spec = ClusterSpec::disagg(1, 3);
+            let reqs = generate(LengthDist::Fixed { prompt: 8192, decode: 256 }, n, 42);
+            let run = |faults: Option<FaultPlan>, sim_loop: SimLoop| {
+                let mut serving = ServingConfig::with_parallelism(2, 1)
+                    .with_stream_migration()
+                    .with_sim_loop(sim_loop)
+                    .with_trace();
+                if let Some(p) = faults {
+                    serving = serving.with_faults(p);
+                }
+                let mut cluster = Cluster::new(
+                    m,
+                    m.variant(&variant),
+                    serving,
+                    DeviceModel::h100_serving(),
+                    &spec,
+                    RouterKind::RoleAware,
+                    DriveMode::Closed { concurrency: 16 },
+                );
+                cluster.submit(&reqs);
+                cluster.run();
+                // gate: conservation — a drained run leaks no pages and
+                // holds no dangling import reservations, faults or not
+                for (ri, r) in cluster.replicas().iter().enumerate() {
+                    if let Err(e) = r.sched.pool().check_invariants() {
+                        eprintln!("CONSERVATION FAILED: replica {ri} pool: {e}");
+                        std::process::exit(1);
+                    }
+                    if r.sched.pool().pages_free() != r.sched.pool().pages_total() {
+                        eprintln!("CONSERVATION FAILED: replica {ri} leaked pages");
+                        std::process::exit(1);
+                    }
+                    if r.sched.reserved_imports() != 0 {
+                        eprintln!("CONSERVATION FAILED: replica {ri} dangling reservation");
+                        std::process::exit(1);
+                    }
+                }
+                let stats = cluster.sim_stats();
+                let tracer = cluster.take_trace().expect("with_trace arms the tracer");
+                (cluster.metrics, tracer, stats)
+            };
+            let plan = FaultPlan { rate: frate, drain, ..FaultPlan::default() };
+            let (base, _, base_stats) = run(None, SimLoop::Calendar);
+            let (fault, fault_tr, fault_stats) = run(Some(plan), SimLoop::Calendar);
+            // gate 1: every submitted request completes exactly once
+            // under any fault schedule (nothing sheds here: slo is off)
+            for (label, met) in [("fault off", &base), ("fault on", &fault)] {
+                if met.e2e.len() != n {
+                    eprintln!(
+                        "CONSERVATION FAILED ({label}): {} of {n} requests completed",
+                        met.e2e.len()
+                    );
+                    std::process::exit(1);
+                }
+            }
+            // gate 2: arming an *empty* schedule is inert — identical to
+            // fault off except for the availability denominator
+            let empty = FaultPlan { rate: frate, max_faults: 0, ..FaultPlan::default() };
+            let (mut inert, _, _) = run(Some(empty), SimLoop::Calendar);
+            inert.replica_seconds = 0.0;
+            if inert != base {
+                eprintln!("INERTNESS FAILED: empty fault schedule changed the run");
+                std::process::exit(1);
+            }
+            // gate 3: the trace reconciles every fault counter exactly
+            if let Err(e) = fault_tr.audit().check(&fault) {
+                eprintln!("TRACE AUDIT FAILED: {e}");
+                std::process::exit(1);
+            }
+            // gate 4: the min-scan validator sees the same run
+            let (scan, _, scan_stats) = run(Some(plan), SimLoop::MinScan);
+            if scan != fault || scan_stats.events != fault_stats.events {
+                eprintln!("LOOP EQUIVALENCE FAILED: calendar and min-scan diverged");
+                std::process::exit(1);
+            }
+            // gate 5: the whole failure story is a pure function of seed
+            let (again, _, _) = run(Some(plan), SimLoop::Calendar);
+            if again != fault {
+                eprintln!("DETERMINISM FAILED: repeated faulted run diverged");
+                std::process::exit(1);
+            }
+            let mode = if drain { "drain" } else { "crash" };
+            println!(
+                "{variant} TP2 1P+3D, 8K/256 closed loop (conc 16), n {n}, \
+                 {frate:.2} faults/s ({mode} mode):"
+            );
+            let (mut b, mut f) = (base, fault);
+            println!(
+                "  fault off: e2e p50 {:.1}s ttft p50 {:.2}s {:.0} tok/s",
+                b.e2e.median(),
+                b.ttft.median(),
+                b.throughput(),
+            );
+            print_sim_stats(&base_stats);
+            println!(
+                "  fault on : e2e p50 {:.1}s ttft p50 {:.2}s {:.0} tok/s | \
+                 availability {:.4}",
+                f.e2e.median(),
+                f.ttft.median(),
+                f.throughput(),
+                f.availability(),
+            );
+            println!(
+                "    {} faults | {} requeued | {} migration retries | \
+                 {} prefill tokens wasted | {:.2} GB re-migrated | \
+                 downtime {:.1}s",
+                f.faults_injected,
+                f.requests_requeued,
+                f.migration_retries,
+                f.wasted_prefill_tokens,
+                f.remigrated_bytes as f64 / 1e9,
+                f.replica_downtime,
+            );
+            print_sim_stats(&fault_stats);
+            println!(
+                "  recovery OK — conservation, inertness, trace audit, \
+                 loop equivalence, determinism"
+            );
+        }
         "trace" => {
             let rate: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(2.0);
             if rate <= 0.0 || !rate.is_finite() {
@@ -749,7 +899,7 @@ fn main() {
         other => {
             eprintln!(
                 "unknown command `{other}` (try: info serve train sim qps disagg prefix \
-                 fusion spec goodput trace)"
+                 fusion spec goodput faults trace)"
             );
             std::process::exit(2);
         }

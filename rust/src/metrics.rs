@@ -212,6 +212,35 @@ pub struct ServiceMetrics {
     /// reservations and contribute no latency samples. Conservation is
     /// `completed + shed == submitted` (the property suite pins it).
     pub shed_requests: u64,
+    /// fault injection (all stay 0 unless `ServingConfig::faults` arms a
+    /// non-empty schedule — plain runs never touch them, which keeps
+    /// fault-off runs bit-identical under the derived `PartialEq`):
+    /// fault injections applied (replica crashes/drains, link
+    /// partitions, brownouts; recoveries are not counted)
+    pub faults_injected: u64,
+    /// requests pushed back to the wait queue by a replica crash or an
+    /// abandoned migration — each re-prefills from scratch on a survivor
+    pub requests_requeued: u64,
+    /// migration re-sends after the destination died: each retry
+    /// re-routes to a healthy importer and backs off exponentially
+    pub migration_retries: u64,
+    /// prompt tokens whose prefill compute was lost to a crash (work a
+    /// requeued request must redo; prefix caching can win some back)
+    pub wasted_prefill_tokens: u64,
+    /// KV bytes that crossed (or will cross) the wire more than once
+    /// for the same cache because a fault orphaned the first copy —
+    /// retried tails plus streamed chunks whose reserved destination
+    /// died. The fault-tolerance bench's headline: GLA-2's smaller
+    /// cache re-migrates proportionally fewer bytes on the same
+    /// fault schedule.
+    pub remigrated_bytes: u64,
+    /// total replica-seconds spent in scheduled outage windows (crash
+    /// or drain), truncated to the run's span
+    pub replica_downtime: f64,
+    /// replica-seconds of the run (`n_replicas x duration`) — the
+    /// availability denominator, stamped by the cluster's end-of-run
+    /// rollup only when fault injection is armed (0 otherwise)
+    pub replica_seconds: f64,
 }
 
 impl ServiceMetrics {
@@ -266,6 +295,18 @@ impl ServiceMetrics {
             0.0
         } else {
             self.migration_hidden_bytes as f64 / self.migrated_bytes as f64
+        }
+    }
+
+    /// Fraction of replica-time the cluster was healthy: `1 -
+    /// downtime / replica_seconds`. 1.0 when fault injection never ran
+    /// (no denominator) — an unarmed run is fully available by
+    /// definition.
+    pub fn availability(&self) -> f64 {
+        if self.replica_seconds <= 0.0 {
+            1.0
+        } else {
+            (1.0 - self.replica_downtime / self.replica_seconds).max(0.0)
         }
     }
 
@@ -382,6 +423,29 @@ mod tests {
         assert_eq!(m.goodput(), 3.0);
         // the counters participate in the bit-identity contract
         assert_ne!(m, ServiceMetrics { duration: 2.0, ..Default::default() });
+    }
+
+    #[test]
+    fn availability_guards_zero_replica_seconds() {
+        let m = ServiceMetrics::default();
+        assert_eq!(m.availability(), 1.0, "unarmed runs are fully available");
+        let m = ServiceMetrics {
+            replica_downtime: 3.0,
+            replica_seconds: 12.0,
+            faults_injected: 2,
+            ..Default::default()
+        };
+        assert_eq!(m.availability(), 0.75);
+        // pathological over-counting clamps at zero, never negative
+        let m = ServiceMetrics {
+            replica_downtime: 20.0,
+            replica_seconds: 12.0,
+            ..Default::default()
+        };
+        assert_eq!(m.availability(), 0.0);
+        // the fault counters participate in the bit-identity contract
+        let m = ServiceMetrics { requests_requeued: 1, ..Default::default() };
+        assert_ne!(m, ServiceMetrics::default());
     }
 
     #[test]

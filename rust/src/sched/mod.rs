@@ -734,6 +734,53 @@ impl Scheduler {
         }
     }
 
+    /// Hard-crash this replica (fault injection): every live sequence is
+    /// lost with the page pool's contents. Pages release (refcounted,
+    /// like preemption), radix entries evict, and import reservations
+    /// clear — the crashed pool ends exactly as empty as a fresh one, so
+    /// the conservation invariants hold through any fault schedule.
+    /// Returns the wiped requests with their original send times (the
+    /// caller re-queues them at the front, preemption-style) plus the
+    /// prompt tokens of prefill compute the crash threw away (prefilled
+    /// prompt so far, or the whole prompt once decoding — that work must
+    /// redo on a survivor). Latency metrics record nothing here: the
+    /// requests are not finished, they are starting over.
+    pub fn crash_wipe(&mut self) -> (Vec<(Request, f64)>, u64) {
+        let mut requeued = Vec::with_capacity(self.seqs.len());
+        let mut wasted: u64 = 0;
+        while let Some(s) = self.seqs.pop() {
+            let seq_id = s.req.id as u64;
+            self.pool.preempt(seq_id);
+            if let Some(radix) = &mut self.radix {
+                radix.remove_seq(seq_id);
+            }
+            wasted += match s.phase {
+                Phase::Prefill { done } => done as u64,
+                Phase::Decode { .. } | Phase::Migrating { .. } => s.req.prompt_len as u64,
+            };
+            requeued.push((s.req, s.start_t));
+        }
+        // pop order is newest-first; requeue in admission order so the
+        // front-of-queue order after the crash mirrors pre-crash FCFS
+        requeued.reverse();
+        self.reserved.clear();
+        self.seq_epoch += 1;
+        (requeued, wasted)
+    }
+
+    /// Drop the import reservation held for `seq_id` (fault injection:
+    /// the reserving stream's source crashed, or the migration was
+    /// abandoned). Returns whether a reservation was actually held.
+    pub fn cancel_reservation(&mut self, seq_id: SeqId) -> bool {
+        let before = self.reserved.len();
+        self.reserved.retain(|(id, _)| *id != seq_id);
+        let cancelled = self.reserved.len() != before;
+        if cancelled {
+            self.seq_epoch += 1;
+        }
+        cancelled
+    }
+
     /// Disaggregated handoff, export side: remove the sequence at `idx`
     /// (which must have finished prefill, i.e. be in `Phase::Decode` with
     /// its epilogue token already emitted and counted) and release its
@@ -984,6 +1031,51 @@ mod tests {
         assert!(s.is_idle());
         assert_eq!(s.pool().pages_free(), s.pool().pages_total());
         s.pool().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn crash_wipe_empties_the_pool_and_returns_requeueable_requests() {
+        let mut m = ServiceMetrics::default();
+        let mut s = sched(8, 4, 8192);
+        s.admit(Request::new(1, 8, 4), 0.0, 0.0, &mut m);
+        s.admit(Request::new(2, 8, 4), 0.5, 1.0, &mut m);
+        let _ = s.complete_prefill(0, 8, 1.0, &mut m); // id 1 decoding
+        assert!(s.complete_prefill(1, 4, 1.5, &mut m).is_none()); // id 2 half-prefilled
+        s.reserve_import(&Request::new(9, 4, 2));
+        assert_eq!(s.reserved_imports(), 1);
+        let epoch = s.epoch();
+        let (requeued, wasted) = s.crash_wipe();
+        // admission order preserved, send times intact
+        assert_eq!(
+            requeued.iter().map(|(r, t)| (r.id, *t)).collect::<Vec<_>>(),
+            vec![(1, 0.0), (2, 0.5)]
+        );
+        // id 1 lost its whole 8-token prompt, id 2 the 4 tokens done
+        assert_eq!(wasted, 12);
+        assert_eq!(s.n_live(), 0);
+        assert_eq!(s.reserved_imports(), 0, "crash clears reservations");
+        assert_eq!(s.pool().pages_free(), s.pool().pages_total());
+        s.pool().check_invariants().unwrap();
+        assert_ne!(s.epoch(), epoch, "memoized probes must see the wipe");
+        // crash records no latency or preemption samples: nothing finished
+        assert_eq!(m.e2e.len(), 0);
+        assert_eq!(m.preemptions, 0);
+        // an empty replica wipes to nothing
+        assert_eq!(s.crash_wipe(), (Vec::new(), 0));
+    }
+
+    #[test]
+    fn cancel_reservation_frees_the_promise() {
+        let mut s = sched(4, 4, 8192);
+        let req = Request::new(3, 8, 4);
+        assert!(s.can_reserve_import(&req));
+        s.reserve_import(&req);
+        assert!(s.has_reservation(3));
+        assert!(!s.can_reserve_import(&req), "pool fully promised");
+        assert!(s.cancel_reservation(3));
+        assert!(!s.has_reservation(3));
+        assert!(s.can_reserve_import(&req), "cancel must free the promise");
+        assert!(!s.cancel_reservation(3), "double-cancel is a no-op");
     }
 
     #[test]

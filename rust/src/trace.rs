@@ -148,6 +148,23 @@ pub enum TraceEvent {
         ttft: f64,
         verdict: Option<DeadlineVerdict>,
     },
+    /// a fault *injection* fired (replica crash or drain start, link
+    /// partition, brownout start); `label` is a short human-readable
+    /// description like `"crash r1"` or `"link-down 0->2"`. One event
+    /// per injection — the audit reconciles the count against
+    /// `ServiceMetrics::faults_injected` exactly
+    Fault { t: f64, label: String },
+    /// the matching recovery (replica back up, link restored). Not
+    /// required to pair one-to-one with [`TraceEvent::Fault`]: a run
+    /// that drains before the schedule does skips trailing recoveries
+    Recover { t: f64, label: String },
+    /// a fault sent the request back to the front of the shared wait
+    /// queue (its pages and prefill progress are gone); `replica` is
+    /// where it was lost
+    Requeue { id: u64, t: f64, replica: usize },
+    /// a landed migration pinned to a crashed replica re-sent from
+    /// `src` toward the healthy `dst` after backoff
+    RetryMigration { id: u64, t: f64, src: usize, dst: usize, ready_t: f64 },
 }
 
 /// Goodput annotation on a [`TraceEvent::Retire`]: the deadline class
@@ -171,8 +188,9 @@ impl TraceEvent {
             | TraceEvent::PoolSample { replica, .. }
             | TraceEvent::Preempt { replica, .. }
             | TraceEvent::Import { replica, .. }
-            | TraceEvent::Retire { replica, .. } => Some(*replica),
-            TraceEvent::Export { src, .. } => Some(*src),
+            | TraceEvent::Retire { replica, .. }
+            | TraceEvent::Requeue { replica, .. } => Some(*replica),
+            TraceEvent::Export { src, .. } | TraceEvent::RetryMigration { src, .. } => Some(*src),
             _ => None,
         }
     }
@@ -231,6 +249,9 @@ pub struct TraceAudit {
     pub met_ttft: u64,
     pub met_itl: u64,
     pub met_deadline: u64,
+    pub faults_injected: u64,
+    pub requests_requeued: u64,
+    pub migration_retries: u64,
     /// per deadline class: `(requests meeting both targets, requests
     /// retired)` — the per-class goodput split the CLI reports; the
     /// class totals sum to the global counters by construction
@@ -266,6 +287,9 @@ impl TraceAudit {
             ("met_ttft", self.met_ttft, m.met_ttft),
             ("met_itl", self.met_itl, m.met_itl),
             ("met_deadline", self.met_deadline, m.met_deadline),
+            ("faults_injected", self.faults_injected, m.faults_injected),
+            ("requests_requeued", self.requests_requeued, m.requests_requeued),
+            ("migration_retries", self.migration_retries, m.migration_retries),
         ] {
             if mine != theirs {
                 errs.push(format!("{name}: trace {mine} vs metrics {theirs}"));
@@ -433,6 +457,27 @@ impl Tracer {
         self.events.push(TraceEvent::Import { id, t, replica, export_t, kv_tokens, bytes });
     }
 
+    /// record a fault injection firing (crash, drain start, partition,
+    /// brownout) — one event per injection, audited exactly
+    pub fn fault(&mut self, t: f64, label: &str) {
+        self.events.push(TraceEvent::Fault { t, label: label.to_string() });
+    }
+
+    /// record the matching recovery (replica up, link restored)
+    pub fn recover(&mut self, t: f64, label: &str) {
+        self.events.push(TraceEvent::Recover { t, label: label.to_string() });
+    }
+
+    /// record a fault bouncing the request back to the wait-queue front
+    pub fn requeue(&mut self, id: u64, t: f64, replica: usize) {
+        self.events.push(TraceEvent::Requeue { id, t, replica });
+    }
+
+    /// record a landed tail re-sent toward a healthy destination
+    pub fn retry_migration(&mut self, id: u64, t: f64, src: usize, dst: usize, ready_t: f64) {
+        self.events.push(TraceEvent::RetryMigration { id, t, src, dst, ready_t });
+    }
+
     /// record a retirement from the scheduler's returned [`FinishedSeq`];
     /// the sample expressions mirror `Scheduler::retire` exactly so the
     /// audit's multiset comparison is bit-for-bit
@@ -479,6 +524,9 @@ impl Tracer {
                     a.migrated_bytes += bytes;
                 }
                 TraceEvent::Shed { .. } => a.shed_requests += 1,
+                TraceEvent::Fault { .. } => a.faults_injected += 1,
+                TraceEvent::Requeue { .. } => a.requests_requeued += 1,
+                TraceEvent::RetryMigration { .. } => a.migration_retries += 1,
                 TraceEvent::Retire { e2e, ttft, verdict, .. } => {
                     a.e2e.record(*e2e);
                     a.ttft.record(*ttft);
@@ -560,13 +608,16 @@ impl Tracer {
     }
 
     /// wait-queue depth as a step series `(t, depth)`: +1 on first
-    /// queueing and on every preemption (the sequence re-enters the
-    /// queue), −1 on every admission or overload-control shed
+    /// queueing and on every preemption or fault re-queue (the sequence
+    /// re-enters the queue), −1 on every admission or overload-control
+    /// shed
     pub fn queue_depth(&self) -> Vec<(f64, i64)> {
         let mut deltas: Vec<(f64, i64)> = Vec::new();
         for ev in &self.events {
             match ev {
-                TraceEvent::Queued { t, .. } | TraceEvent::Preempt { t, .. } => {
+                TraceEvent::Queued { t, .. }
+                | TraceEvent::Preempt { t, .. }
+                | TraceEvent::Requeue { t, .. } => {
                     deltas.push((*t, 1));
                 }
                 TraceEvent::Admit { t, .. } | TraceEvent::Shed { t, .. } => {
@@ -771,6 +822,18 @@ impl Tracer {
                          \"cat\":\"req\",\"id\":{id},\"name\":{name}}}",
                         t * US,
                     ));
+                }
+                TraceEvent::Fault { t, ref label } => {
+                    evs.push(instant_ev(0, t * US, &format!("fault: {label}")));
+                }
+                TraceEvent::Recover { t, ref label } => {
+                    evs.push(instant_ev(0, t * US, &format!("recover: {label}")));
+                }
+                TraceEvent::Requeue { id, t, replica } => {
+                    evs.push(instant_ev(replica, t * US, &format!("requeue req {id}")));
+                }
+                TraceEvent::RetryMigration { id, t, src, dst, .. } => {
+                    evs.push(instant_ev(src, t * US, &format!("retry req {id} -> r{dst}")));
                 }
                 TraceEvent::PoolSample { replica, t, pages_used, .. } => {
                     evs.push(format!(

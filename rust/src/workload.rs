@@ -104,6 +104,10 @@ const SPEC_SALT: u64 = 0x6969_9696_C3C3_3C3C;
 /// (`stamp_deadline_classes`), independent of the length and arrival
 /// streams so stamping deadlines never perturbs the workload itself.
 const DEADLINE_SALT: u64 = 0x0F0F_F0F0_5A5A_A5A5;
+/// Salt for the fault-injection schedule stream (`fault_schedule`), so
+/// arming faults with the same numeric seed as the workload still draws
+/// a disjoint stream and can never perturb lengths or arrivals.
+const FAULT_SALT: u64 = 0xC3C3_3C3C_6969_9696;
 
 /// Tokens emitted by one draft+verify step: the sequence has already
 /// emitted `produced` tokens, the verifier scores `verify_width` query
@@ -312,6 +316,91 @@ pub fn generate_open_slo(
     let mut reqs = generate_open(dist, n, seed, rate_qps);
     stamp_deadline_classes(&mut reqs, classes, seed);
     reqs
+}
+
+/// One typed fault in a [`fault_schedule`]. Outage windows carry their
+/// own end time (`until`) so the injection site can price delays
+/// without scanning the schedule for the paired recovery event — the
+/// link fabric relies on this to keep shipment landing times final at
+/// send time even across partitions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// replica outage begins: a hard crash (page pool and in-flight
+    /// sequences lost) or, under `FaultPlan::drain`, a drain window
+    /// (no new work routed, live sequences finish)
+    ReplicaDown { replica: usize },
+    /// replica outage ends — the replica rejoins with an empty pool
+    ReplicaUp { replica: usize },
+    /// link partition: traffic on the `(src, dst)` link queues and
+    /// makes no progress until `until`
+    LinkDown { src: usize, dst: usize, until: f64 },
+    /// partition heals
+    LinkUp { src: usize, dst: usize },
+    /// link brownout: the `(src, dst)` link runs at `factor` of its
+    /// modeled bandwidth until `until`
+    BrownoutStart { src: usize, dst: usize, factor: f64, until: f64 },
+    /// brownout ends
+    BrownoutEnd { src: usize, dst: usize },
+}
+
+/// One scheduled fault event at simulated time `t`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub t: f64,
+    pub kind: FaultKind,
+}
+
+/// Deterministic fault schedule from an armed [`FaultPlan`]: exactly
+/// `max_faults` injections with exponential inter-fault gaps at `rate`
+/// per second, each paired with its recovery event `0.5x..1.5x
+/// downtime` later, sorted by time (stable — an injection precedes its
+/// own zero-length recovery). The stream is keyed by `seed ^
+/// FAULT_SALT`, fully independent of every workload stream. Link events
+/// need at least two replicas; a plan whose enabled fault types cannot
+/// apply returns an empty schedule.
+pub fn fault_schedule(plan: &crate::config::FaultPlan, n_replicas: usize) -> Vec<FaultEvent> {
+    let can_link = plan.link_faults && n_replicas > 1;
+    if plan.rate <= 0.0 || plan.max_faults == 0 || (!plan.replica_faults && !can_link) {
+        return Vec::new();
+    }
+    let mut rng = Rng::new(plan.seed ^ FAULT_SALT);
+    let mut t = 0.0;
+    let mut events = Vec::with_capacity(plan.max_faults * 2);
+    for _ in 0..plan.max_faults {
+        t += rng.exp(plan.rate);
+        let dur = plan.downtime * (0.5 + rng.f64());
+        let link = can_link && (!plan.replica_faults || rng.f64() < 0.5);
+        if link {
+            let src = rng.range(0, n_replicas - 1);
+            let mut dst = rng.range(0, n_replicas.saturating_sub(2));
+            if dst >= src {
+                dst += 1;
+            }
+            if plan.brownout < 1.0 && rng.f64() < 0.5 {
+                let factor = plan.brownout;
+                events.push(FaultEvent {
+                    t,
+                    kind: FaultKind::BrownoutStart { src, dst, factor, until: t + dur },
+                });
+                events.push(FaultEvent { t: t + dur, kind: FaultKind::BrownoutEnd { src, dst } });
+            } else {
+                events.push(FaultEvent {
+                    t,
+                    kind: FaultKind::LinkDown { src, dst, until: t + dur },
+                });
+                events.push(FaultEvent { t: t + dur, kind: FaultKind::LinkUp { src, dst } });
+            }
+        } else {
+            let replica = rng.range(0, n_replicas - 1);
+            events.push(FaultEvent { t, kind: FaultKind::ReplicaDown { replica } });
+            events.push(FaultEvent { t: t + dur, kind: FaultKind::ReplicaUp { replica } });
+        }
+    }
+    // stable by-time sort: recoveries of long outages interleave with
+    // later injections; ties keep generation order, so an injection
+    // always precedes its own recovery even at zero downtime
+    events.sort_by(|a, b| a.t.partial_cmp(&b.t).expect("finite fault times"));
+    events
 }
 
 /// Shared-prefix (RadixAttention-style) workload shape: `n_families`
@@ -544,6 +633,76 @@ mod tests {
         let d = r.deadline.unwrap();
         assert_eq!((d.ttft, d.itl, d.class), (0.0, 0.0, 3));
         assert!(Request::new(1, 8, 4).deadline.is_none());
+    }
+
+    #[test]
+    fn fault_schedule_is_deterministic_paired_and_salted() {
+        use crate::config::FaultPlan;
+        let plan = FaultPlan { rate: 0.5, max_faults: 16, ..FaultPlan::default() };
+        let a = fault_schedule(&plan, 4);
+        assert_eq!(a, fault_schedule(&plan, 4), "same plan must reproduce");
+        assert_eq!(a.len(), 32, "every injection pairs with a recovery");
+        // sorted by time, finite, strictly positive
+        let mut prev = 0.0;
+        for e in &a {
+            assert!(e.t.is_finite() && e.t > 0.0);
+            assert!(e.t >= prev, "schedule must be time-sorted");
+            prev = e.t;
+        }
+        // every down/up pairs per target; link targets are never self-loops
+        let mut down = std::collections::HashMap::new();
+        for e in &a {
+            match e.kind {
+                FaultKind::ReplicaDown { replica } => {
+                    assert!(replica < 4);
+                    *down.entry(("r", replica, 0)).or_insert(0i64) += 1;
+                }
+                FaultKind::ReplicaUp { replica } => {
+                    *down.entry(("r", replica, 0)).or_insert(0) -= 1;
+                }
+                FaultKind::LinkDown { src, dst, until } => {
+                    assert!(src < 4 && dst < 4 && src != dst && until > e.t);
+                    *down.entry(("l", src, dst)).or_insert(0) += 1;
+                }
+                FaultKind::LinkUp { src, dst } => {
+                    *down.entry(("l", src, dst)).or_insert(0) -= 1;
+                }
+                FaultKind::BrownoutStart { src, dst, factor, until } => {
+                    assert!(src != dst && factor > 0.0 && factor < 1.0 && until > e.t);
+                    *down.entry(("b", src, dst)).or_insert(0) += 1;
+                }
+                FaultKind::BrownoutEnd { src, dst } => {
+                    *down.entry(("b", src, dst)).or_insert(0) -= 1;
+                }
+            }
+        }
+        assert!(down.values().all(|&v| v == 0), "unpaired outage: {down:?}");
+        // brownout factor 1.0 (the default) generates no brownout events
+        assert!(!a
+            .iter()
+            .any(|e| matches!(e.kind, FaultKind::BrownoutStart { .. })));
+        let browned = FaultPlan { brownout: 0.25, ..plan };
+        assert!(fault_schedule(&browned, 4)
+            .iter()
+            .any(|e| matches!(e.kind, FaultKind::BrownoutStart { factor, .. } if factor == 0.25)));
+        // degenerate plans generate empty schedules
+        assert!(fault_schedule(&FaultPlan { rate: 0.0, ..plan }, 4).is_empty());
+        assert!(fault_schedule(&FaultPlan { max_faults: 0, ..plan }, 4).is_empty());
+        let neither =
+            FaultPlan { replica_faults: false, link_faults: false, ..plan };
+        assert!(fault_schedule(&neither, 4).is_empty());
+        // single-replica clusters can only draw replica faults
+        let solo = fault_schedule(&plan, 1);
+        assert!(solo.iter().all(|e| matches!(
+            e.kind,
+            FaultKind::ReplicaDown { replica: 0 } | FaultKind::ReplicaUp { replica: 0 }
+        )));
+        // the fault stream is salted away from the workload streams:
+        // changing the fault seed never changes the workload of the
+        // same numeric seed (trivially true — different functions), and
+        // two fault seeds draw different schedules
+        let other = fault_schedule(&FaultPlan { seed: 2, ..plan }, 4);
+        assert_ne!(a, other);
     }
 
     #[test]

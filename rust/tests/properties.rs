@@ -1110,8 +1110,12 @@ fn prop_trace_audit_matches_service_metrics() {
     // shedding (and sometimes EDF ordering) armed, the audit must
     // reconcile the shed count and the per-class deadline verdicts
     // against the goodput counters exactly, and shed requests must
-    // balance the retirement ledger.
-    use gla_serve::config::{SimLoop, SloConfig};
+    // balance the retirement ledger. Fault injection joins the coin
+    // flips too: with replica crashes, drains, partitions and brownouts
+    // in the mix the audit must still reconcile exactly — including the
+    // Fault/Requeue/RetryMigration event counts against the
+    // faults_injected/requests_requeued/migration_retries counters.
+    use gla_serve::config::{FaultPlan, SimLoop, SloConfig};
     use gla_serve::engine::SimEngine;
     use gla_serve::parallel::FabricSpec;
     use gla_serve::workload::{stamp_deadline_classes, DeadlineClass};
@@ -1119,6 +1123,7 @@ fn prop_trace_audit_matches_service_metrics() {
     let mut preempting = 0u64;
     let mut migrating = 0u64;
     let mut shedding = 0u64;
+    let mut faulting = 0u64;
     for case in 0..10 {
         let m = DSV2;
         let variant = m.variant(["gla2", "gqa4"][rng.range(0, 1)]);
@@ -1165,6 +1170,16 @@ fn prop_trace_audit_matches_service_metrics() {
         serving.kv_hbm_budget = kv_per_token * (page_size * n_pages) as u64;
         if rng.range(0, 1) == 1 {
             serving = serving.with_spec(rng.range(2, 4), [0.3f64, 0.6, 0.9][rng.range(0, 2)], 0.1);
+        }
+        if rng.range(0, 1) == 1 {
+            serving = serving.with_faults(FaultPlan {
+                seed: case as u64 + 31,
+                rate: [4.0f64, 16.0][rng.range(0, 1)],
+                downtime: 0.5,
+                drain: rng.range(0, 3) == 0,
+                brownout: [1.0f64, 0.25][rng.range(0, 1)],
+                ..FaultPlan::default()
+            });
         }
         let slo = rng.range(0, 1) == 1;
         if slo {
@@ -1232,10 +1247,11 @@ fn prop_trace_audit_matches_service_metrics() {
         preempting += u64::from(c.metrics.preemptions > 0);
         migrating += u64::from(c.metrics.migrations > 0);
         shedding += u64::from(c.metrics.shed_requests > 0);
+        faulting += u64::from(c.metrics.faults_injected > 0);
     }
     println!(
         "trace-audit: {preempting}/10 preempting runs, {migrating}/10 migrating runs, \
-         {shedding}/10 shedding runs"
+         {shedding}/10 shedding runs, {faulting}/10 faulting runs"
     );
     // the lockstep (hybrid-barrier) discipline audits too: all-unified
     // DP>1 closed-loop through the engine wrapper, with verify bursts on
@@ -1787,4 +1803,239 @@ fn prop_shed_conserves_requests_and_pages() {
     assert!(shedding > 0, "no case ever shed — the overload grid is too gentle");
     assert!(completing > 0, "no case ever completed a request");
     println!("shed-conservation: {shedding}/12 shedding runs, {completing}/12 completing");
+}
+
+#[test]
+fn prop_fault_off_is_bit_identical() {
+    // The fault-injection inertness contract (DESIGN.md §Fault
+    // injection & recovery): `faults: None` and an armed plan whose
+    // generated schedule is empty — zero rate, zero fault budget, or
+    // every fault type disabled — are the same serving system on
+    // everything but the availability denominator (`replica_seconds`,
+    // which an armed run always accrues so `availability()` stays
+    // well-defined), with the same number of event-loop clock stops,
+    // across random stream/fusion/spec configurations and BOTH async
+    // loops.
+    use gla_serve::config::{FaultPlan, SimLoop};
+    let mut rng = Rng::new(0xFA017);
+    for case in 0..6 {
+        let m = DSV2;
+        let variant = m.variant(["gla2", "gqa4"][rng.range(0, 1)]);
+        let page_size = [16usize, 64][rng.range(0, 1)];
+        let stream = rng.range(0, 1) == 1;
+        let fusion = rng.range(0, 1) == 1;
+        let spec_on = rng.range(0, 1) == 1;
+        let cluster_spec = if rng.range(0, 1) == 0 {
+            ClusterSpec::unified(rng.range(2, 3))
+        } else {
+            ClusterSpec::disagg(1, rng.range(1, 2))
+        };
+        let router = RouterKind::all()[rng.range(0, RouterKind::all().len() - 1)];
+        let n = rng.range(6, 16);
+        let dist = LengthDist::RandomRatio { max_prompt: 4096, max_decode: 128, ratio: 0.1 };
+        let reqs = generate_open(dist, n, case as u64 + 801, 2.0);
+        let footprint_pages = (4096usize + 128).div_ceil(page_size);
+        let n_pages = footprint_pages * rng.range(1, 3);
+        let kv_per_token = variant.kv_bytes_per_token_per_device(2, m.dtype_bytes) as u64
+            * m.n_layers as u64;
+        let run = |sim_loop: SimLoop, faults: Option<FaultPlan>| {
+            let mut serving = ServingConfig::with_parallelism(2, 1).with_sim_loop(sim_loop);
+            serving.page_size = page_size;
+            serving.prefill_chunk = 512;
+            serving.stream_migration = stream;
+            serving.fusion = fusion;
+            serving.kv_hbm_budget = kv_per_token * (page_size * n_pages) as u64;
+            if spec_on {
+                serving = serving.with_spec(3, 0.6, 0.1);
+            }
+            if let Some(p) = faults {
+                serving = serving.with_faults(p);
+            }
+            let mut c = Cluster::new(
+                m,
+                variant,
+                serving,
+                DeviceModel::h100_serving(),
+                &cluster_spec,
+                router,
+                DriveMode::Open,
+            );
+            c.submit(&reqs);
+            c.run();
+            (c.metrics.clone(), c.sim_stats().events)
+        };
+        for sim_loop in [SimLoop::Calendar, SimLoop::MinScan] {
+            let (off_m, off_e) = run(sim_loop, None);
+            assert_eq!(off_m.faults_injected, 0, "case {case}: unarmed run injected faults");
+            assert_eq!(off_m.replica_seconds, 0.0, "case {case}: unarmed run accrued uptime");
+            for (label, plan) in [
+                ("zero rate", FaultPlan { rate: 0.0, ..FaultPlan::default() }),
+                ("zero budget", FaultPlan { rate: 8.0, max_faults: 0, ..FaultPlan::default() }),
+                (
+                    "no fault types",
+                    FaultPlan {
+                        rate: 8.0,
+                        replica_faults: false,
+                        link_faults: false,
+                        ..FaultPlan::default()
+                    },
+                ),
+            ] {
+                let (mut on_m, on_e) = run(sim_loop, Some(plan));
+                assert!(
+                    on_m.replica_seconds > 0.0,
+                    "case {case} ({sim_loop:?}): armed run never accrued the \
+                     availability denominator"
+                );
+                assert_eq!(
+                    on_m.availability(),
+                    1.0,
+                    "case {case} ({sim_loop:?}): a faultless run must be fully available"
+                );
+                on_m.replica_seconds = 0.0;
+                assert_eq!(
+                    on_m, off_m,
+                    "case {case} ({sim_loop:?}): {label} drifted from faults=None \
+                     (stream={stream} fusion={fusion} spec={spec_on})"
+                );
+                assert_eq!(
+                    on_e, off_e,
+                    "case {case} ({sim_loop:?}): {label} changed the clock stops"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_faults_conserve_requests_and_pages() {
+    // The fault-recovery conservation contract (DESIGN.md §Fault
+    // injection & recovery): under ANY seeded fault schedule — replica
+    // crashes, drain windows, link partitions, brownouts — every
+    // submitted request either retires or sheds exactly once
+    // (`completed + shed == submitted`), a drained cluster leaks no
+    // pages and holds no import reservation on any replica, the whole
+    // failure-and-recovery story is a pure function of the seed, and
+    // the calendar and min-scan loops agree on both metrics and clock
+    // stops — with streamed migration, fusion, speculative decoding and
+    // the SLO stack coin-flipped into the mix.
+    use gla_serve::config::{FaultPlan, SimLoop, SloConfig};
+    use gla_serve::workload::{stamp_deadline_classes, DeadlineClass};
+    let mut rng = Rng::new(0xFA427);
+    let mut crashing = 0u64;
+    let mut requeueing = 0u64;
+    for case in 0..10 {
+        let m = DSV2;
+        let variant = m.variant(["gla2", "gqa4"][rng.range(0, 1)]);
+        let page_size = [16usize, 64][rng.range(0, 1)];
+        let stream = rng.range(0, 1) == 1;
+        let fusion = rng.range(0, 1) == 1;
+        let spec_on = rng.range(0, 1) == 1;
+        let slo = rng.range(0, 1) == 1;
+        let cluster_spec = if rng.range(0, 1) == 0 {
+            ClusterSpec::unified(rng.range(2, 3))
+        } else {
+            ClusterSpec::disagg(1, rng.range(2, 3))
+        };
+        let router = RouterKind::all()[rng.range(0, RouterKind::all().len() - 1)];
+        let n = rng.range(8, 20);
+        let dist = LengthDist::RandomRatio { max_prompt: 4096, max_decode: 128, ratio: 0.1 };
+        let mut reqs = generate_open(dist, n, case as u64 + 901, 4.0);
+        if slo {
+            stamp_deadline_classes(
+                &mut reqs,
+                &[
+                    DeadlineClass {
+                        ttft: 0.25 + rng.f64(),
+                        itl: 0.02 + 0.2 * rng.f64(),
+                        weight: 1.0,
+                    },
+                    DeadlineClass { ttft: 30.0, itl: 5.0, weight: 1.0 },
+                ],
+                case as u64 + 911,
+            );
+        }
+        let plan = FaultPlan {
+            seed: case as u64 + 41,
+            rate: [2.0f64, 8.0, 32.0][rng.range(0, 2)],
+            downtime: [0.2f64, 1.0][rng.range(0, 1)],
+            drain: rng.range(0, 3) == 0,
+            link_faults: rng.range(0, 1) == 1,
+            brownout: [1.0f64, 0.25][rng.range(0, 1)],
+            ..FaultPlan::default()
+        };
+        let footprint_pages = (4096usize + 128).div_ceil(page_size);
+        let n_pages = footprint_pages * rng.range(2, 3);
+        let kv_per_token = variant.kv_bytes_per_token_per_device(2, m.dtype_bytes) as u64
+            * m.n_layers as u64;
+        let run = |sim_loop: SimLoop| {
+            let mut serving = ServingConfig::with_parallelism(2, 1)
+                .with_sim_loop(sim_loop)
+                .with_faults(plan);
+            serving.page_size = page_size;
+            serving.prefill_chunk = 512;
+            serving.stream_migration = stream;
+            serving.fusion = fusion;
+            serving.kv_hbm_budget = kv_per_token * (page_size * n_pages) as u64;
+            if spec_on {
+                serving = serving.with_spec(3, 0.6, 0.1);
+            }
+            if slo {
+                serving = serving
+                    .with_slo(SloConfig { shed_slack: 1.0, ..SloConfig::default() })
+                    .with_policy(PolicyKind::Goodput);
+            }
+            let mut c = Cluster::new(
+                m,
+                variant,
+                serving,
+                DeviceModel::h100_serving(),
+                &cluster_spec,
+                router,
+                DriveMode::Open,
+            );
+            c.submit(&reqs);
+            c.run();
+            for r in c.replicas() {
+                r.sched
+                    .pool()
+                    .check_invariants()
+                    .unwrap_or_else(|e| panic!("case {case}: {e}"));
+                assert_eq!(
+                    r.sched.pool().pages_free(),
+                    r.sched.pool().pages_total(),
+                    "case {case}: a crashed or retired request leaked pages"
+                );
+                assert_eq!(
+                    r.sched.reserved_imports(),
+                    0,
+                    "case {case}: a fault leaked an import reservation"
+                );
+                // a replica MAY end the run down: once the workload
+                // drains, trailing recovery events are never applied
+                // (finish_metrics truncates the open outage window)
+            }
+            (c.metrics.clone(), c.sim_stats().events)
+        };
+        let (cal, cal_ev) = run(SimLoop::Calendar);
+        let (min, min_ev) = run(SimLoop::MinScan);
+        assert_eq!(cal, min, "case {case}: recovery stories diverged across loops");
+        assert_eq!(cal_ev, min_ev, "case {case}: loops visited different stops");
+        assert_eq!(
+            cal.e2e.len() as u64 + cal.shed_requests,
+            n as u64,
+            "case {case}: completed + shed != submitted under faults"
+        );
+        if !slo {
+            assert_eq!(cal.shed_requests, 0, "case {case}: shed with SLO off");
+        }
+        let (again, _) = run(SimLoop::Calendar);
+        assert_eq!(cal, again, "case {case}: the failure story is not deterministic");
+        crashing += u64::from(cal.faults_injected > 0);
+        requeueing += u64::from(cal.requests_requeued > 0);
+    }
+    assert!(crashing > 0, "no case ever injected a fault — the plan grid is too gentle");
+    println!(
+        "fault-conservation: {crashing}/10 faulting runs, {requeueing}/10 requeueing runs"
+    );
 }
